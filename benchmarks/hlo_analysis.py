@@ -1,0 +1,286 @@
+"""Loop-aware roofline accounting from optimized (per-device) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a scanned
+96-layer model with 8 microbatches undercounts flops/bytes by ~768x.  This
+module walks the HLO module text instead:
+
+* computations are parsed into instruction lists with a name->shape symbol
+  table (operands are printed without inline types in optimized dumps);
+* ``while`` ops get a trip count extracted from their condition's
+  compare-with-constant, and their body is walked with a multiplied weight
+  (nested loops multiply);
+* ``dot`` ops contribute 2 * prod(result) * prod(contracted lhs dims) flops
+  (including dots inside fusions);
+* memory traffic is operand + result bytes of *top-level* (post-fusion)
+  instructions — fusion internals are free, fusion boundaries are HBM
+  reads/writes;
+* collective ops contribute ICI bytes (all-gather / all-to-all / permute:
+  result bytes; reduce-scatter: operand bytes; all-reduce: 2x operand).
+
+All numbers are per-device (the module is the SPMD-partitioned program).
+An estimate — but loop-consistent across cells, which is what the roofline
+comparison needs.  Validated against hand-counted scans in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*(.*)$")
+_PARAM = re.compile(r"%?([\w.\-_]+):\s*([\w\[\],(){}\s/]+?)(?:,|$)")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    return sum(
+        _elems(m.group(2)) * _DTYPE_BYTES.get(m.group(1), 0)
+        for m in _SHAPE.finditer(type_str)
+    )
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_type: str
+    operands: list
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    symbols: dict  # name -> result type string
+
+
+def _split_op(rhs: str):
+    """rhs: 'f32[2,3]{1,0} dot(%a, %b), attrs' -> (result_type, op, args)."""
+    m = re.match(r"((?:\([^)]*\)|[\w\[\],{}]+)+)\s+([\w\-]+)", rhs)
+    if not m:
+        return rhs, "", ""
+    result_type, op = m.groups()
+    rest = rhs[m.end():]
+    args = ""
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = rest[1:i]
+                    break
+    return result_type, op, args
+
+
+def parse_module(text: str) -> tuple[dict, str | None]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{"):
+                m = _COMP_HEADER.match(stripped)
+                if m:
+                    cur = Computation(m.group(1), [], {})
+                    if stripped.startswith("ENTRY"):
+                        entry = m.group(1)
+                    # parameters from the header
+                    hdr = stripped[: stripped.rfind("->")]
+                    for pm in re.finditer(r"%?([\w.\-_]+):\s*((?:\([^)]*\)|[\w\[\],{}]+))", hdr):
+                        cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        result_type, op, args = _split_op(rhs)
+        operands = re.findall(r"%([\w.\-_]+)", args)
+        ins = Instr(name, op, result_type, operands, stripped)
+        cur.instrs.append(ins)
+        cur.symbols[name] = result_type
+    return comps, entry
+
+
+def _attr_comp(line: str, key: str) -> str | None:
+    m = re.search(rf"{key}=%?([\w.\-_]+)", line)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: Computation) -> int:
+    consts: dict[str, int] = {}
+    for ins in cond.instrs:
+        m = re.search(r"constant\((\d+)\)", ins.line)
+        if m:
+            consts[ins.name] = int(m.group(1))
+
+    def compare_bound(comp: Computation) -> int | None:
+        for ins in comp.instrs:
+            if ins.op == "compare":
+                dm = re.search(r"direction=(\w+)", ins.line)
+                direction = dm.group(1) if dm else "LT"
+                for o in ins.operands:
+                    if o in consts:
+                        return consts[o] + (1 if direction == "LE" else 0)
+        return None
+
+    b = compare_bound(cond)
+    if b is not None:
+        return b
+    # compare may live in a fused computation called from the condition
+    return max(consts.values(), default=1)
+
+
+def _dot_flops(ins: Instr, symbols: dict) -> float:
+    res = _SHAPE.search(ins.result_type)
+    if not res:
+        return 0.0
+    res_elems = _elems(res.group(2))
+    lhs_type = symbols.get(ins.operands[0], "") if ins.operands else ""
+    lm = _SHAPE.search(lhs_type)
+    if not lm:
+        return 0.0
+    lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contract = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * res_elems * contract
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0.0, "bytes": 0.0}
+                                 for k in _COLLECTIVES}
+    )
+    loops: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "per_collective": self.per_collective,
+            "loops": self.loops,
+        }
+
+
+def _collective_kind(op: str) -> str | None:
+    for k in _COLLECTIVES:
+        if op == k or op == k + "-start":
+            return k
+    return None
+
+
+def analyze_text(text: str) -> HloStats:
+    comps, entry = parse_module(text)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    stats = HloStats()
+    stack: set[str] = set()
+
+    def op_bytes(ins: Instr, symbols: dict) -> tuple[int, int]:
+        res_b = _type_bytes(ins.result_type)
+        opnd_b = sum(_type_bytes(symbols.get(o, "")) for o in ins.operands)
+        return res_b, opnd_b
+
+    def walk(comp_name: str, weight: float) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in stack:
+            return
+        stack.add(comp_name)
+        sym = comp.symbols
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                cond = _attr_comp(ins.line, "condition")
+                body = _attr_comp(ins.line, "body")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                stats.loops.append((body, trips))
+                if body:
+                    walk(body, weight * trips)
+                continue
+            if op == "call":
+                tgt = _attr_comp(ins.line, "to")
+                if tgt:
+                    walk(tgt, weight)
+                continue
+            if op == "conditional":
+                for tgt in re.findall(r"computations?=\{?%([\w.\-_]+)",
+                                      ins.line):
+                    walk(tgt, weight)
+                continue
+            if op in _FREE_OPS or not op:
+                continue
+            res_b, opnd_b = op_bytes(ins, sym)
+            kind = _collective_kind(op)
+            if kind:
+                if kind == "all-reduce":
+                    b = 2 * opnd_b
+                elif kind == "reduce-scatter":
+                    b = opnd_b
+                else:
+                    b = res_b
+                stats.per_collective[kind]["count"] += weight
+                stats.per_collective[kind]["bytes"] += weight * b
+                stats.collective_bytes += weight * b
+            if op == "dot":
+                stats.flops += weight * _dot_flops(ins, sym)
+            elif op == "fusion":
+                tgt = _attr_comp(ins.line, "calls")
+                if tgt and tgt in comps:
+                    fc = comps[tgt]
+                    for sub in fc.instrs:
+                        if sub.op == "dot":
+                            stats.flops += weight * _dot_flops(
+                                sub, fc.symbols
+                            )
+            stats.hbm_bytes += weight * (res_b + opnd_b)
+        stack.discard(comp_name)
+
+    walk(entry, 1.0)
+    return stats

@@ -1,0 +1,113 @@
+"""Render the roofline table from dry-run JSON (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline import analyze, model_flops_for
+from repro.configs import get_config
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def hbm_per_device(mem: dict) -> int:
+    return (
+        mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]
+        - mem["alias_bytes"]
+    )
+
+
+def rows_from(results: list[dict]) -> list[dict]:
+    rows = []
+    for r in results:
+        if r["status"] != "ok":
+            rows.append(r)
+            continue
+        chips = math.prod(r["mesh"].values())
+        cfg = get_config(r["arch"])
+        mf = model_flops_for(cfg, r["kind"], r["batch"], r["seq"])
+        roof = analyze(
+            flops_per_device=r["flops_per_device"],
+            bytes_per_device=r["bytes_per_device"],
+            collective_bytes=r.get(
+                "collective_bytes_per_device",
+                r["collectives"]["total_bytes"],
+            ),
+            chips=chips,
+            model_flops=mf,
+        )
+        hbm = hbm_per_device(r["memory"])
+        step_lb = max(roof.compute_s, roof.memory_s, roof.collective_s)
+        # ideal step time: flop roofline for train/prefill; for decode the
+        # binding physics is re-reading params+cache once per step (the
+        # compiled argument bytes per device are exactly that working set)
+        if r["kind"] == "decode":
+            ideal = r["memory"]["argument_bytes"] / 819e9
+        else:
+            ideal = mf / (chips * 197e12)
+        rows.append({
+            **r,
+            "roofline": roof.as_dict(),
+            "hbm_gib": hbm / 2**30,
+            "fits_16g": hbm <= HBM_PER_CHIP,
+            "step_lower_bound_s": step_lb,
+            "ideal_s": ideal,
+            "roofline_fraction": ideal / step_lb if step_lb else 0.0,
+        })
+    return rows
+
+
+def render(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s |"
+        " dominant | useful_ratio | roofline_frac | HBM GiB/chip | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped |"
+                f" — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | | |")
+            continue
+        ro = r["roofline"]
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {ro['compute_s']:.3e} | {ro['memory_s']:.3e} "
+            f"| {ro['collective_s']:.3e} | {ro['dominant']} "
+            f"| {ro['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['hbm_gib']:.1f} | {'Y' if r['fits_16g'] else 'N'} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_singlepod.json"
+    results = json.load(open(path))
+    rows = rows_from(results)
+    print(render(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collb = max(ok, key=lambda r: r["roofline"]["collective_s"]
+                    / max(r["step_lower_bound_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']}"
+              f" ({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound: {collb['arch']} x {collb['shape']}")
+        print(f"cells not fitting 16GiB: "
+              f"{sum(not r['fits_16g'] for r in ok)}/{len(ok)}")
+
+
+if __name__ == "__main__":
+    main()

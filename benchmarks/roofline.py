@@ -1,0 +1,192 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh) cell (TPU v5e constants):
+
+    compute_s    = flops_per_device / PEAK_FLOPS
+    memory_s     = hbm_bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+
+``cost_analysis()`` of the compiled (SPMD-partitioned, per-device) module
+supplies flops and bytes.  Collective bytes are NOT in cost_analysis — we
+parse the optimized HLO (``compiled.as_text()``, per-device shapes) and sum
+result sizes of every collective op:
+
+    all-gather          -> result bytes           (data received per device)
+    reduce-scatter      -> operand bytes          (data sent per device)
+    all-reduce          -> 2 x operand bytes      (ring RS + AG equivalent)
+    all-to-all          -> result bytes
+    collective-permute  -> result bytes
+
+The dominant term approximates the step's lower-bound time under perfect
+overlap; the ratio of the model-FLOPs term to compute_s x chips catches
+remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (conservative single-link figure)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _result_shapes(line: str) -> list[str]:
+    """Shapes on the LHS of `%op = <shape> opname(...)` (maybe a tuple)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return []
+    rhs = lhs[1].lstrip()
+    # tuple result: (f32[..], f32[..]) opname
+    if rhs.startswith("("):
+        inner = rhs[1 : rhs.index(")")]
+        return re.findall(r"\w+\[[\d,]*\]", inner)
+    m = re.match(r"\w+\[[\d,]*\]", rhs)
+    return [m.group(0)] if m else []
+
+
+def _operand_shapes(line: str) -> list[str]:
+    """Shapes inside opname(...) operand list."""
+    m = re.search(r"\b(?:%s)[\w.-]*\(" % "|".join(_COLLECTIVES), line)
+    if not m:
+        return []
+    rest = line[m.end():]
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                rest = rest[:i]
+                break
+    return re.findall(r"\w+\[[\d,]*\]", rest)
+
+
+def collective_report(hlo_text: str) -> dict:
+    """Per-op-kind byte totals from optimized (per-device) HLO text."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        body = stripped.split(" = ", 1)[-1]
+        kind = None
+        for k in _COLLECTIVES:
+            # op name appears as `all-gather(`, `all-gather-start(` etc
+            if re.search(rf"\b{k}(-start)?\(", body):
+                kind = k
+                break
+        if kind is None:
+            continue
+        res = sum(_shape_bytes(s) for s in _result_shapes(stripped))
+        opnd = sum(_shape_bytes(s) for s in _operand_shapes(stripped))
+        if kind == "all-reduce":
+            b = 2 * opnd
+        elif kind == "reduce-scatter":
+            b = opnd
+        else:
+            b = res
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (flops_per_device * chips)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes: float,
+    chips: int,
+    model_flops: float,
+) -> Roofline:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    total = flops_per_device * chips
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=model_flops / total if total else 0.0,
+    )
+
+
+def model_flops_for(cfg, kind: str, batch: int, seq: int) -> float:
+    """Useful flops: 6·N·D (train) / 2·N·D (forward) with N = active
+    params, PLUS the causal attention term (4·B·T²·H·hd·L/2 fwd) for archs
+    with attention — at 32k prefill the attention term dominates and 6·N·D
+    alone would misread redundancy."""
+    n = cfg.active_param_count()
+    tokens = batch * seq
+    # attention einsum flops (fwd): 2 einsums x 2·B·H·T·S·hd, causal half
+    attn_layers = 0
+    if cfg.rwkv is None and cfg.ssm is None:
+        attn_layers = cfg.num_layers + cfg.encoder_layers
+        if cfg.encoder_layers:
+            attn_layers += cfg.num_layers  # decoder cross-attention
+    elif cfg.family == "hybrid" and cfg.shared_attn_every:
+        attn_layers = cfg.num_layers // cfg.shared_attn_every
+    hd = cfg.resolved_head_dim
+    attn_fwd = attn_layers * 4.0 * batch * seq * seq * cfg.num_heads * hd * 0.5
+    if kind == "train":
+        return 6.0 * n * tokens + 3.0 * attn_fwd
+    if kind == "prefill":
+        return 2.0 * n * tokens + attn_fwd
+    # decode: one new token attends to the whole cache
+    attn_dec = attn_layers * 4.0 * batch * seq * cfg.num_heads * hd
+    return 2.0 * n * batch + attn_dec

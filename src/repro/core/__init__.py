@@ -1,0 +1,34 @@
+"""The paper's primary contribution: MergeMarathon partial sorting.
+
+* :mod:`repro.core.switchsim` — faithful PISA/RMT switch simulator (Alg. 2+3).
+* :mod:`repro.core.marathon` — vectorized equivalent (blockwise-sort theorem).
+* :mod:`repro.core.partition` — SetRanges + balanced quantile ranges.
+* :mod:`repro.core.runs` — run detection/statistics (Def. 3.1.1, §6.3).
+* :mod:`repro.core.mergesort` — the server: k-way natural merge sort.
+* :mod:`repro.core.distributed` — the switch fabric at pod scale (shard_map).
+"""
+
+from .marathon import blockwise_sort, marathon_flat, marathon_streams
+from .mergesort import merge_sort, merge_sort_reference, merge_two, server_sort
+from .partition import quantile_ranges, segment_of, set_ranges
+from .runs import RunStats, merge_passes, run_lengths, run_starts
+from .switchsim import Segment, Switch
+
+__all__ = [
+    "blockwise_sort",
+    "marathon_flat",
+    "marathon_streams",
+    "merge_sort",
+    "merge_sort_reference",
+    "merge_two",
+    "server_sort",
+    "quantile_ranges",
+    "segment_of",
+    "set_ranges",
+    "RunStats",
+    "merge_passes",
+    "run_lengths",
+    "run_starts",
+    "Segment",
+    "Switch",
+]

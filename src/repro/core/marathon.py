@@ -1,0 +1,128 @@
+"""Vectorized MergeMarathon — the production realisation of Alg. 3.
+
+Equivalence theorem (proved by induction on arrivals, checked exhaustively by
+``tests/test_switchsim.py`` property tests):
+
+    The stream a full segment of length ``L`` emits under Alg. 3 is exactly
+    ``sorted(c_0) ++ sorted(c_1) ++ ...`` where ``c_j`` is the j-th
+    consecutive block of ``L`` arrivals to that segment (the final,
+    possibly-short block is emitted by the two flush passes).
+
+Sketch: once the pipeline is full every arrival (a) evicts the head of the
+*older* run and (b) joins the *younger* run, so after the older run's ``L``
+elements have been evicted, the younger run contains precisely the next ``L``
+arrivals, sorted — and becomes the next older run.  The first older run is
+the first ``L`` arrivals, sorted by pipeline insertion.  Flush pass 1 emits
+what is left of the older run, pass 2 the younger — preserving the block
+order.
+
+Consequences used throughout the framework:
+
+* The vectorized oracle is ``np.sort`` over reshaped blocks — O(N log L)
+  with perfect SIMD, no per-element control flow.
+* The Pallas VMEM-tile bitonic sorter (kernels/bitonic.py) computes the
+  *exact* MergeMarathon stream when the tile equals the segment length: the
+  paper's y compare-swap pipeline stages become the network's log²(L)
+  vectorized compare-exchange stages.
+* Emitted runs have length ≥ L (each block is ascending), matching the
+  paper's "number of stages linearly impacts r̃_init".
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .partition import segment_of, set_ranges
+
+
+def blockwise_sort(values: np.ndarray, block: int) -> np.ndarray:
+    """Sort each consecutive ``block``-sized chunk of ``values``.
+
+    This IS the per-segment MergeMarathon emission (see module docstring).
+    """
+    values = np.asarray(values)
+    n = values.size
+    if n == 0 or block <= 1:
+        return values.copy()
+    nfull = (n // block) * block
+    head = np.sort(values[:nfull].reshape(-1, block), axis=1).reshape(-1)
+    tail = np.sort(values[nfull:])
+    return np.concatenate([head, tail])
+
+
+def marathon_streams(
+    values: np.ndarray,
+    num_segments: int,
+    segment_length: int,
+    max_value: int,
+    ranges: np.ndarray | None = None,
+) -> tuple[list[np.ndarray], np.ndarray]:
+    """Run MergeMarathon over a stream; return per-segment emitted streams.
+
+    Returns ``(streams, ranges)`` where ``streams[s]`` is segment ``s``'s
+    emitted stream in emission order.  The computation server consumes these
+    directly (it sorts each segment separately — only per-segment order
+    matters; the cross-segment interleave is arrival-driven and immaterial).
+    """
+    values = np.asarray(values, dtype=np.int64)
+    if ranges is None:
+        ranges = set_ranges(max_value, num_segments)
+    seg = segment_of(values, ranges)
+    streams = []
+    for s in range(num_segments):
+        sub = values[seg == s]
+        streams.append(blockwise_sort(sub, segment_length))
+    return streams, ranges
+
+
+def marathon_flat(
+    values: np.ndarray,
+    num_segments: int,
+    segment_length: int,
+    max_value: int,
+    ranges: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Emission-ordered (value, segment_id) stream, matching the faithful
+    simulator's wire order exactly.
+
+    The t-th arrival to segment ``s`` (t ≥ L) triggers emission of element
+    ``t - L`` of ``s``'s blockwise-sorted stream; the flush appends the rest
+    segment-by-segment.  We reconstruct that interleave vectorially.
+    """
+    values = np.asarray(values, dtype=np.int64)
+    if ranges is None:
+        ranges = set_ranges(max_value, num_segments)
+    seg = segment_of(values, ranges)
+    L = segment_length
+
+    streams = []
+    for s in range(num_segments):
+        streams.append(blockwise_sort(values[seg == s], L))
+
+    # Vectorized rank-within-segment for every arrival.
+    order = np.argsort(seg, kind="stable")
+    ranks = np.empty(len(values), dtype=np.int64)
+    boundaries = np.searchsorted(seg[order], np.arange(num_segments))
+    pos_in_seg = np.arange(len(values)) - np.repeat(
+        boundaries, np.diff(np.concatenate([boundaries, [len(values)]]))
+    )
+    ranks[order] = pos_in_seg
+    # Arrival t (per-segment rank r >= L) emits element r - L of the
+    # segment's blockwise-sorted stream.
+    emit_mask = ranks >= L
+    emit_sids = seg[emit_mask]
+    emit_idx = ranks[emit_mask] - L
+    out_v = np.empty(emit_sids.size, dtype=np.int64)
+    for s in range(num_segments):
+        m = emit_sids == s
+        out_v[m] = streams[s][emit_idx[m]]
+    flush_v = []
+    flush_s = []
+    for s in range(num_segments):
+        n_emitted = max(int((seg == s).sum()) - L, 0)
+        tail = streams[s][n_emitted:]
+        flush_v.append(tail)
+        flush_s.append(np.full(tail.size, s, dtype=np.int64))
+    all_v = np.concatenate([out_v] + flush_v)
+    all_s = np.concatenate([emit_sids] + flush_s)
+    return all_v, all_s

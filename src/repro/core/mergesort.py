@@ -1,0 +1,131 @@
+"""The computation server: k-way *natural* merge sort (paper Alg. 1, §4.3.2).
+
+Natural = the initial runs are the maximal ascending sub-sequences already
+present in the input, which is where MergeMarathon's pre-processing pays:
+longer initial runs ⇒ fewer merge passes (``log_k(N / r̃_init)``).
+
+Two implementations:
+
+* ``merge_sort`` — production path: vectorized two-way merges arranged as a
+  tournament inside each k-set.  A pass over the data is O(N) vectorized
+  work per tree level; the pass structure (and therefore the *relative*
+  benefit of longer runs, the paper's metric) matches the paper's k-way
+  merge.
+* ``merge_sort_reference`` — pure-python k-way merge with an explicit k-ary
+  min selection, literally Alg. 1 / Fig. 6, for tests on small inputs.
+
+``server_sort`` is the full paper server: sort each switch segment's
+sub-stream independently, then concatenate by segment id (ranges are
+non-overlapping and ordered, so concatenation is the final answer).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .runs import run_starts
+
+
+def merge_two(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Vectorized stable merge of two sorted arrays (Fig. 6's inner loop)."""
+    n, m = a.size, b.size
+    if n == 0:
+        return b.copy()
+    if m == 0:
+        return a.copy()
+    out = np.empty(n + m, dtype=np.result_type(a, b))
+    # Output position of each b element: elements of a strictly <= go first.
+    ib = np.searchsorted(a, b, side="right") + np.arange(m)
+    mask = np.ones(n + m, dtype=bool)
+    mask[ib] = False
+    out[ib] = b
+    out[mask] = a
+    return out
+
+
+def _merge_set(arr: np.ndarray, starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Merge the runs arr[starts[i]:ends[i]] (each sorted) into one run."""
+    runs = [arr[s:e] for s, e in zip(starts, ends)]
+    while len(runs) > 1:
+        nxt = []
+        for i in range(0, len(runs) - 1, 2):
+            nxt.append(merge_two(runs[i], runs[i + 1]))
+        if len(runs) % 2:
+            nxt.append(runs[-1])
+        runs = nxt
+    return runs[0]
+
+
+def merge_sort(a: np.ndarray, k: int = 10) -> tuple[np.ndarray, int]:
+    """Natural k-way merge sort.  Returns (sorted array, number of passes)."""
+    a = np.ascontiguousarray(a)
+    if a.size <= 1:
+        return a.copy(), 0
+    starts = run_starts(a)
+    passes = 0
+    cur = a
+    while starts.size > 1:
+        ends = np.concatenate([starts[1:], [cur.size]])
+        new_parts = []
+        new_starts = [0]
+        # Stage 1 of Alg. 1: group runs into sets of k; Stage 2: merge each.
+        for g in range(0, starts.size, k):
+            merged = _merge_set(cur, starts[g : g + k], ends[g : g + k])
+            new_parts.append(merged)
+            new_starts.append(new_starts[-1] + merged.size)
+        cur = np.concatenate(new_parts)
+        starts = np.asarray(new_starts[:-1], dtype=np.int64)
+        passes += 1
+    return cur, passes
+
+
+def merge_sort_reference(a: np.ndarray, k: int = 10) -> np.ndarray:
+    """Pure-python Alg. 1 with explicit k-ary min selection (Fig. 6)."""
+    runs: list[list[int]] = []
+    cur: list[int] = []
+    prev = None
+    for v in a:
+        if prev is not None and v < prev:
+            runs.append(cur)
+            cur = []
+        cur.append(int(v))
+        prev = v
+    if cur:
+        runs.append(cur)
+    while len(runs) > 1:
+        nxt = []
+        for g in range(0, len(runs), k):
+            group = [list(r) for r in runs[g : g + k]]
+            merged: list[int] = []
+            idx = [0] * len(group)
+            while True:
+                # "the minimum among the first element of each Run"
+                best, bv = -1, None
+                for j, r in enumerate(group):
+                    if idx[j] < len(r) and (bv is None or r[idx[j]] < bv):
+                        best, bv = j, r[idx[j]]
+                if best < 0:
+                    break
+                merged.append(bv)
+                idx[best] += 1
+            nxt.append(merged)
+        runs = nxt
+    return np.asarray(runs[0] if runs else [], dtype=np.int64)
+
+
+def server_sort(
+    streams: list[np.ndarray], k: int = 10
+) -> tuple[np.ndarray, list[int]]:
+    """§4.3.2: sort each segment separately, concatenate by segment id.
+
+    Returns (fully sorted output, per-segment pass counts).
+    """
+    outs = []
+    passes = []
+    for sub in streams:
+        s, p = merge_sort(sub, k=k)
+        outs.append(s)
+        passes.append(p)
+    if not outs:
+        return np.zeros(0, dtype=np.int64), []
+    return np.concatenate(outs), passes

@@ -1,0 +1,77 @@
+"""Range partitioning (Alg. 2 ``SetRanges``) + beyond-paper balanced ranges.
+
+The paper splits the key domain into ``S`` contiguous ranges of (nearly)
+equal *width*: ``q = max_value // S``, remainder ``r`` spread over the first
+``r`` segments.  Equal-width ranges are what a switch can evaluate with plain
+comparisons; they are also badly *load*-unbalanced on skewed traces (the
+paper's network trace has 1,475 unique values concentrated in a narrow band).
+We therefore also provide quantile (sampled-splitter) ranges, used by the
+distributed sorter — the control plane computes them and dictates them to the
+data plane, exactly the split the paper proposes for the division op.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def set_ranges(max_value: int, num_segments: int) -> np.ndarray:
+    """Paper Alg. 2: equal-width half-open ranges covering [0, max_value].
+
+    Returns ``(num_segments, 2)`` int64 array of ``[lo, hi)`` pairs with
+    ``hi[-1] == max_value + 1``.  First ``r`` segments have width ``q+1``,
+    the rest width ``q`` (``q, r = divmod(max_value + 1, num_segments)``).
+    """
+    if num_segments <= 0:
+        raise ValueError("num_segments must be positive")
+    domain = max_value + 1  # values are integers in [0, max_value]
+    q, r = divmod(domain, num_segments)
+    if q == 0:
+        raise ValueError(
+            f"more segments ({num_segments}) than domain values ({domain})"
+        )
+    widths = np.full(num_segments, q, dtype=np.int64)
+    widths[:r] += 1
+    hi = np.cumsum(widths)
+    lo = hi - widths
+    return np.stack([lo, hi], axis=1)
+
+
+def segment_of(values: np.ndarray, ranges: np.ndarray) -> np.ndarray:
+    """Vectorized SwitchInsert routing: which segment owns each value.
+
+    On the switch this is the parse-stage comparison cascade; here a
+    ``searchsorted`` over the range boundaries.
+    """
+    bounds = ranges[:, 1]  # exclusive upper bounds, ascending
+    seg = np.searchsorted(bounds, values, side="right")
+    if np.any((values < ranges[0, 0]) | (seg >= len(ranges))):
+        raise ValueError("value outside the switch domain")
+    return seg.astype(np.int64)
+
+
+def quantile_ranges(
+    sample: np.ndarray, num_segments: int, max_value: int
+) -> np.ndarray:
+    """Balanced (equal-load) ranges from a sample — beyond-paper.
+
+    Splitters are the sample quantiles; degenerate duplicate splitters (heavy
+    skew) are de-duplicated by widening to the next representable key, so the
+    ranges remain strictly increasing and cover [0, max_value].
+    """
+    qs = np.quantile(np.asarray(sample), np.linspace(0, 1, num_segments + 1)[1:-1])
+    splits = np.unique(np.floor(qs).astype(np.int64))
+    # Strictly increasing interior splitters within (0, max_value+1).
+    splits = splits[(splits > 0) & (splits <= max_value)]
+    # Pad back to num_segments-1 splitters by spreading the leftover width.
+    if len(splits) < num_segments - 1:
+        missing = num_segments - 1 - len(splits)
+        candidates = np.setdiff1d(
+            np.linspace(1, max_value, num_segments + missing, dtype=np.int64),
+            splits,
+        )
+        splits = np.sort(np.concatenate([splits, candidates[:missing]]))
+        splits = np.unique(splits)[: num_segments - 1]
+    lo = np.concatenate([[0], splits])
+    hi = np.concatenate([splits, [max_value + 1]])
+    return np.stack([lo, hi], axis=1).astype(np.int64)

@@ -1,0 +1,66 @@
+"""Run detection and statistics (paper Def. 3.1.1 and §6.3).
+
+A *Run* is a maximal ascending (non-decreasing) sub-sequence.  The paper
+validates its analysis by collecting run counts and lengths of the switch
+output; we expose the same statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def run_starts(a: np.ndarray) -> np.ndarray:
+    """Indices where a new run starts (always includes 0 for non-empty a)."""
+    a = np.asarray(a)
+    if a.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    breaks = np.nonzero(a[1:] < a[:-1])[0] + 1
+    return np.concatenate([[0], breaks]).astype(np.int64)
+
+
+def run_lengths(a: np.ndarray) -> np.ndarray:
+    starts = run_starts(a)
+    if starts.size == 0:
+        return starts
+    return np.diff(np.concatenate([starts, [len(a)]]))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunStats:
+    n: int
+    num_runs: int
+    mean_len: float
+    median_len: float
+    min_len: int
+    max_len: int
+
+    @classmethod
+    def of(cls, a: np.ndarray) -> "RunStats":
+        lens = run_lengths(a)
+        if lens.size == 0:
+            return cls(0, 0, 0.0, 0.0, 0, 0)
+        return cls(
+            n=int(np.asarray(a).size),
+            num_runs=int(lens.size),
+            mean_len=float(lens.mean()),
+            median_len=float(np.median(lens)),
+            min_len=int(lens.min()),
+            max_len=int(lens.max()),
+        )
+
+
+def merge_passes(num_runs: int, k: int) -> int:
+    """Number of k-way merge iterations to reduce ``num_runs`` runs to one.
+
+    The paper's ``log_k(ell)`` (§3.2); exact ceil-log for the discrete case.
+    """
+    if num_runs <= 1:
+        return 0
+    passes = 0
+    while num_runs > 1:
+        num_runs = -(-num_runs // k)
+        passes += 1
+    return passes

@@ -1,0 +1,168 @@
+"""Faithful PISA/RMT programmable-switch simulator running MergeMarathon.
+
+This is the *reference* implementation of the paper's Algorithms 2 and 3
+("MergeMarathon"), kept deliberately element-at-a-time so that every case of
+``SegmentInsertValue`` (empty / partially filled / full with older+younger
+runs) is exercised exactly as written.  The vectorized production paths
+(:mod:`repro.core.marathon`, the Pallas blockwise sorter) are validated
+against this simulator by property tests.
+
+Deviations from the paper's pseudocode, all documented:
+
+* Alg. 2 ``SetRanges`` as printed assigns closed intervals whose endpoints
+  overlap (segment ``i`` ends where ``i+1`` starts).  We use half-open
+  intervals covering ``[0, max_value]`` inclusive — see
+  :mod:`repro.core.partition`.
+* Alg. 3 lines 25-26 / 38-39 write the shift loop as ascending
+  ``stages[j] = stages[j-1]`` which, executed literally, smears one value;
+  the intent (Figs. 9-10: "all the values after the swapping index move one
+  stage forward") is a right-shift of the block, which is what we do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from .partition import set_ranges, segment_of
+
+# Sentinel marking an unpopulated pipeline stage (the paper: "initial values
+# that are outside the domain's boundaries").
+EMPTY = -1
+
+
+@dataclasses.dataclass
+class Segment:
+    """One pipeline segment: ``segment_length`` match-action stages.
+
+    ``stages[partition_index:]`` (wrapping conceptually, see below) is the
+    *older* run, ``stages[:partition_index]`` the *younger* run.  Each stage
+    owns exactly one value — the RMT one-stage-one-memory rule.
+    """
+
+    range_lo: int  # inclusive
+    range_hi: int  # exclusive
+    length: int
+    stages: np.ndarray = dataclasses.field(init=False)
+    last: int = dataclasses.field(default=-1, init=False)  # last populated idx
+    partition_index: int = dataclasses.field(default=0, init=False)
+    full: bool = dataclasses.field(default=False, init=False)
+
+    def __post_init__(self) -> None:
+        self.stages = np.full(self.length, EMPTY, dtype=np.int64)
+
+    # -- Alg. 3, SegmentInsertValue ------------------------------------
+    def insert(self, v: int) -> int | None:
+        """Insert ``v``; return the evicted value if the segment was full."""
+        if not self.full:
+            self._insert_not_full(v)
+            return None
+        return self._insert_full(v)
+
+    def _insert_not_full(self, v: int) -> None:
+        # Case 1 (empty) and Case 2 (partially filled): keep stages sorted
+        # ascending by bubbling the packet through the pipeline.
+        if self.last < 0:
+            self.stages[0] = v
+        elif v >= self.stages[self.last]:
+            self.stages[self.last + 1] = v
+        else:
+            # first stage whose value exceeds v; right-shift [i..last]
+            i = int(np.searchsorted(self.stages[: self.last + 1], v, "right"))
+            self.stages[i + 1 : self.last + 2] = self.stages[i : self.last + 1]
+            self.stages[i] = v
+        self.last += 1
+        if self.last == self.length - 1:
+            self.full = True
+
+    def _insert_full(self, v: int) -> int:
+        # Case 3: evict the head of the older run, insert v into the younger.
+        pi = self.partition_index
+        evicted = int(self.stages[pi])
+        if pi == 0:
+            # Younger run is empty; v starts it at stage 0.
+            self.stages[0] = v
+        else:
+            x = self.stages[pi - 1]  # max of the younger run
+            if v >= x:
+                self.stages[pi] = v
+            else:
+                i = int(np.searchsorted(self.stages[:pi], v, "right"))
+                self.stages[i + 1 : pi + 1] = self.stages[i:pi]
+                self.stages[i] = v
+        self.partition_index = (pi + 1) % self.length
+        return evicted
+
+    # -- Alg. 3, SwitchFlush (two recirculation passes) -----------------
+    def flush(self) -> list[int]:
+        out: list[int] = []
+        if not self.full:
+            # Single (young) run occupying stages[0..last].
+            out.extend(int(x) for x in self.stages[: self.last + 1])
+        else:
+            pi = self.partition_index
+            # Pass 1: the older run, stages[pi..end].
+            out.extend(int(x) for x in self.stages[pi:])
+            # Pass 2: the younger run, stages[0..pi-1].
+            out.extend(int(x) for x in self.stages[:pi])
+        self.stages[:] = EMPTY
+        self.last = -1
+        self.partition_index = 0
+        self.full = False
+        return out
+
+
+@dataclasses.dataclass
+class Switch:
+    """Alg. 2: the switch — ``number_of_segments`` parallel pipelines."""
+
+    number_of_segments: int
+    segment_length: int
+    max_value: int
+
+    def __post_init__(self) -> None:
+        # SetRanges runs on the control plane (the paper: division is not
+        # available in the data plane; ranges are dictated by the server).
+        self.ranges = set_ranges(self.max_value, self.number_of_segments)
+        self.segments = [
+            Segment(int(lo), int(hi), self.segment_length)
+            for lo, hi in self.ranges
+        ]
+
+    def insert(self, v: int) -> tuple[int, int] | None:
+        """SwitchInsert: route ``v`` to its segment; maybe emit a value.
+
+        Returns ``(segment_id, emitted_value)`` or ``None``.
+        """
+        s = int(segment_of(np.asarray([v]), self.ranges)[0])
+        evicted = self.segments[s].insert(v)
+        if evicted is None:
+            return None
+        return (s, evicted)
+
+    def flush(self) -> Iterator[tuple[int, int]]:
+        for sid, seg in enumerate(self.segments):
+            for v in seg.flush():
+                yield (sid, v)
+
+    # -- Alg. 3, ApplySwitch --------------------------------------------
+    def apply(self, stream: Iterable[int]) -> tuple[np.ndarray, np.ndarray]:
+        """Run the full stream through the switch.
+
+        Returns ``(values, segment_ids)`` in emission order — the stream the
+        computation server receives (each value tagged with its segment, the
+        paper's "port number").
+        """
+        vals: list[int] = []
+        sids: list[int] = []
+        for v in stream:
+            out = self.insert(int(v))
+            if out is not None:
+                sids.append(out[0])
+                vals.append(out[1])
+        for sid, v in self.flush():
+            sids.append(sid)
+            vals.append(v)
+        return np.asarray(vals, dtype=np.int64), np.asarray(sids, dtype=np.int64)

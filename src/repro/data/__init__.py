@@ -1,0 +1,9 @@
+from .traces import TRACES, memory_trace, network_trace, random_trace, trace_max_value
+
+__all__ = [
+    "TRACES",
+    "memory_trace",
+    "network_trace",
+    "random_trace",
+    "trace_max_value",
+]

@@ -1,0 +1,55 @@
+"""Synthetic batches + abstract input specs per architecture family.
+
+``input_specs`` is the dry-run contract: ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation).
+``make_batch`` materializes the same shapes with a PRNG for smoke tests and
+the example drivers.  [vlm]/[audio] archs get precomputed embeddings (the
+modality frontend is a stub per the assignment).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Shapes/dtypes of one training batch."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.is_encdec:
+        return {
+            "enc_embeds": ((batch, seq, cfg.d_model), dt),
+            "tokens": ((batch, seq), jnp.int32),
+            "labels": ((batch, seq), jnp.int32),
+        }
+    if cfg.input_kind == "embeds":
+        return {
+            "embeds": ((batch, seq, cfg.d_model), dt),
+            "labels": ((batch, seq), jnp.int32),
+        }
+    return {
+        "tokens": ((batch, seq), jnp.int32),
+        "labels": ((batch, seq), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    return {
+        k: jax.ShapeDtypeStruct(shape, dt)
+        for k, (shape, dt) in batch_shapes(cfg, batch, seq).items()
+    }
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key) -> dict:
+    ks = jax.random.split(key, 3)
+    out = {}
+    for name, (shape, dt) in batch_shapes(cfg, batch, seq).items():
+        if dt == jnp.int32:
+            k = ks[1] if name == "labels" else ks[0]
+            out[name] = jax.random.randint(k, shape, 0, cfg.vocab_size, dt)
+        else:
+            out[name] = (jax.random.normal(ks[2], shape) * 0.02).astype(dt)
+    return out

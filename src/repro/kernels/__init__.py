@@ -1,0 +1,15 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+* bitonic.py — tile sorting / merging networks (the MergeMarathon segment)
+* flash_attention.py — causal GQA flash attention forward (prefill path)
+* decode_attention.py — one-token attention over a blocked KV cache (the
+  memory-bound serving hot spot; LSE merge across cache segments)
+* ops.py — jit'd public wrappers
+* ref.py — pure-jnp oracles
+"""
+
+from . import bitonic, ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+
+__all__ = ["bitonic", "ops", "ref", "flash_attention", "decode_attention"]

@@ -1,0 +1,217 @@
+"""Bitonic sorting network as a Pallas TPU kernel — the MergeMarathon segment.
+
+The paper's segment is a pipeline of ``y`` match-action stages doing one
+compare-swap each, with strictly stage-local memory (RMT).  The TPU-native
+equivalent (DESIGN.md §2) is a **bitonic network** over a VMEM-resident tile:
+a fixed, data-independent sequence of ``log²(B)`` compare-exchange stages,
+each stage a full-width vectorized min/max — i.e. the same hardware idea
+(systolic compare-exchange with local memory) at VREG width instead of
+packet width.  With tile == segment_length this computes *exactly* the
+MergeMarathon emitted stream (see repro.core.marathon).
+
+All compare-exchanges are expressed as reshapes + where/min/max — no gathers
+— so the kernel lowers to pure VPU ops.  Tiles are (rows, B) with B a power
+of two; the MXU is not involved (sorting is a VPU workload).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stages(n: int):
+    """The bitonic network schedule: (k, j) compare-exchange stages."""
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            yield k, j
+            j //= 2
+        k *= 2
+
+
+def compare_exchange(x: jax.Array, k: int, j: int) -> jax.Array:
+    """One network stage over the last axis (length n, power of two).
+
+    Elements i and i^j are compared; direction ascends iff (i & k) == 0.
+    Implemented gather-free: within each 2j-block the first j lanes are the
+    ``i`` side and the last j the ``i^j`` side; the direction bit is constant
+    per block because 2j divides k.
+    """
+    *lead, n = x.shape
+    nb = n // (2 * j)
+    a = x.reshape(*lead, nb, 2, j)
+    asc = (jnp.arange(nb) * 2 * j) & k == 0  # (nb,)
+    asc = asc[:, None]
+    lo, hi = a[..., 0, :], a[..., 1, :]
+    mn = jnp.minimum(lo, hi)
+    mx = jnp.maximum(lo, hi)
+    out = jnp.stack(
+        [jnp.where(asc, mn, mx), jnp.where(asc, mx, mn)], axis=-2
+    )
+    return out.reshape(*lead, n)
+
+
+def compare_exchange_kv(
+    keys: jax.Array, vals: jax.Array, k: int, j: int
+) -> tuple[jax.Array, jax.Array]:
+    """Key-value variant: values follow their key's swap decision."""
+    *lead, n = keys.shape
+    nb = n // (2 * j)
+    ka = keys.reshape(*lead, nb, 2, j)
+    va = vals.reshape(*lead, nb, 2, j)
+    asc = ((jnp.arange(nb) * 2 * j) & k == 0)[:, None]
+    k0, k1 = ka[..., 0, :], ka[..., 1, :]
+    v0, v1 = va[..., 0, :], va[..., 1, :]
+    swap = jnp.where(asc, k0 > k1, k0 < k1)
+    ko = jnp.stack(
+        [jnp.where(swap, k1, k0), jnp.where(swap, k0, k1)], axis=-2
+    ).reshape(*lead, n)
+    vo = jnp.stack(
+        [jnp.where(swap, v1, v0), jnp.where(swap, v0, v1)], axis=-2
+    ).reshape(*lead, n)
+    return ko, vo
+
+
+def bitonic_sort_array(x: jax.Array) -> jax.Array:
+    """Full network over the last axis (pure jnp; reused inside the kernel)."""
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"bitonic length must be a power of two, got {n}")
+    for k, j in _stages(n):
+        x = compare_exchange(x, k, j)
+    return x
+
+
+def bitonic_argsort_array(
+    keys: jax.Array, vals: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    n = keys.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"bitonic length must be a power of two, got {n}")
+    for k, j in _stages(n):
+        keys, vals = compare_exchange_kv(keys, vals, k, j)
+    return keys, vals
+
+
+def bitonic_merge_array(x: jax.Array) -> jax.Array:
+    """Merge network only (last k-stage): input rows must be bitonic —
+    e.g. ``concat(sorted_a, reversed(sorted_b))``.  log(n) stages instead of
+    log²(n): this is the server's two-run merge hot-loop on TPU."""
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"bitonic length must be a power of two, got {n}")
+    j = n // 2
+    while j >= 1:
+        x = compare_exchange(x, n, j)  # k = n -> ascending everywhere
+        j //= 2
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def _sort_kernel(x_ref, o_ref):
+    o_ref[...] = bitonic_sort_array(x_ref[...])
+
+
+def _sort_kv_kernel(k_ref, v_ref, ko_ref, vo_ref):
+    ko, vo = bitonic_argsort_array(k_ref[...], v_ref[...])
+    ko_ref[...] = ko
+    vo_ref[...] = vo
+
+
+def _merge_kernel(a_ref, b_ref, o_ref):
+    # concat(a, reverse(b)) is bitonic; the merge network sorts it.
+    # (flip on the loaded value, not the Ref: Refs reject negative strides,
+    # and lax.rev lowers cleanly on TPU.)
+    x = jnp.concatenate([a_ref[...], jnp.flip(b_ref[...], axis=-1)], axis=-1)
+    o_ref[...] = bitonic_merge_array(x)
+
+
+def sort_tiles(
+    x: jax.Array,
+    *,
+    rows_per_tile: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sort each row of ``x`` (rows, B) with the bitonic kernel.
+
+    BlockSpec tiles (rows_per_tile, B) into VMEM; B power of two.  VMEM
+    working set = rows_per_tile * B * itemsize (plus the network's
+    temporaries) — callers pick rows_per_tile so this stays ≪ 16 MB.
+    """
+    rows, n = x.shape
+    if rows % rows_per_tile:
+        raise ValueError(f"rows {rows} % rows_per_tile {rows_per_tile} != 0")
+    grid = (rows // rows_per_tile,)
+    spec = pl.BlockSpec((rows_per_tile, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sort_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(x)
+
+
+def sort_tiles_kv(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    rows_per_tile: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Key-value tile sort (the MoE dispatch primitive: keys=expert ids,
+    vals=token indices)."""
+    rows, n = keys.shape
+    if keys.shape != vals.shape:
+        raise ValueError("keys/vals shape mismatch")
+    if rows % rows_per_tile:
+        raise ValueError(f"rows {rows} % rows_per_tile {rows_per_tile} != 0")
+    grid = (rows // rows_per_tile,)
+    spec = pl.BlockSpec((rows_per_tile, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sort_kv_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(keys.shape, keys.dtype),
+            jax.ShapeDtypeStruct(vals.shape, vals.dtype),
+        ),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=(spec, spec),
+        interpret=interpret,
+    )(keys, vals)
+
+
+def merge_tiles(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    rows_per_tile: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Merge row-wise sorted ``a`` and ``b`` (rows, B) -> (rows, 2B)."""
+    rows, n = a.shape
+    if a.shape != b.shape:
+        raise ValueError("a/b shape mismatch")
+    if rows % rows_per_tile:
+        raise ValueError(f"rows {rows} % rows_per_tile {rows_per_tile} != 0")
+    grid = (rows // rows_per_tile,)
+    in_spec = pl.BlockSpec((rows_per_tile, n), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((rows_per_tile, 2 * n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _merge_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, 2 * n), a.dtype),
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=out_spec,
+        interpret=interpret,
+    )(a, b)

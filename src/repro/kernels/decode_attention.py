@@ -1,0 +1,134 @@
+"""Decode attention (one new token vs a long KV cache) as a Pallas kernel.
+
+Decode is memory-bound: each step streams the whole cache through the chip
+(roofline table: every decode cell is memory-dominated).  This kernel
+splits the cache sequence into VMEM blocks — the paper's range partition
+applied to the cache — and merges partial softmax accumulators across
+blocks in scratch (LSE merge), exactly the segment/merge structure of
+``models.attention.decode_attention`` but at kernel granularity:
+
+    grid = (B * KV, S // block_s)  — sequence blocks sequential
+    q tile    (1, G, hd)       one kv-head group's queries
+    k/v tiles (1, block_s, hd) cache chunk
+    scratch   acc (G, hd) f32, m/l (G, 128) f32
+
+VMEM per step with block_s=1024, hd=128, G<=16: ~1.3 MB.  Lengths mask via
+a scalar-prefetch-style (1,)-blocked input.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, block_s):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+    G, hd = q_ref.shape[1], q_ref.shape[2]
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (G, hd)
+    k = k_ref[0].astype(jnp.float32)  # (block_s, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, block_s)
+    # visibility: cache positions < length
+    cols = si * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (G, block_s), 1
+    )
+    s = jnp.where(cols < len_ref[0], s, NEG)
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype
+        )
+
+
+def decode_attention(
+    q: jax.Array,
+    kcache: jax.Array,
+    vcache: jax.Array,
+    lengths: jax.Array,
+    *,
+    block_s: int = 1024,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, H, hd); caches: (B, S, KV, hd); lengths: (B,) visible counts.
+
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    S, KV = kcache.shape[1], kcache.shape[2]
+    G = H // KV
+    bs = min(block_s, S)
+    if S % bs:
+        raise ValueError(f"S={S} % block_s={bs}")
+    scale = scale if scale is not None else hd**-0.5
+
+    qr = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    kr = kcache.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vr = vcache.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    lr = jnp.repeat(lengths.astype(jnp.int32), KV)  # (B*KV,)
+
+    grid = (B * KV, S // bs)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_s=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bk, si: (bk,)),
+            pl.BlockSpec((1, G, hd), lambda bk, si: (bk, 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda bk, si: (bk, si, 0)),
+            pl.BlockSpec((1, bs, hd), lambda bk, si: (bk, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bk, si: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lr, qr, kr, vr)
+    return out.reshape(B, KV, G, hd).reshape(B, H, hd)
+
+
+def decode_attention_ref(q, kcache, vcache, lengths, scale=None):
+    """Pure-jnp oracle."""
+    B, H, hd = q.shape
+    S, KV = kcache.shape[1], kcache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd**-0.5
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, kcache.astype(jnp.float32))
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vcache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

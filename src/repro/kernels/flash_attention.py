@@ -1,0 +1,135 @@
+"""FlashAttention forward (causal, GQA) as a Pallas TPU kernel.
+
+Online-softmax attention with VMEM-resident accumulators, the prefill-path
+hot spot.  Grid = (batch*q_heads, q_blocks, kv_blocks) with the kv dimension
+sequential (accumulation in scratch across grid steps — the Pallas analogue
+of the paper's "recirculation": state persists while blocks stream through).
+
+GQA without materializing repeated K/V: the K/V BlockSpec ``index_map``
+routes each q-head grid row to its kv-head row, so the HBM->VMEM DMA reads
+each K/V tile once per group — no jnp.repeat in HBM.
+
+VMEM working set per grid step:
+  q tile  (bq, d)   + k tile (bk, d) + v tile (bk, d)
+  + acc (bq, d) f32 + m,l (bq, 128) f32  + s/p temporaries (bq, bk) f32
+With bq=bk=512, d=128: ~2.6 MB ≪ 16 MB VMEM; MXU dims (bq×d @ d×bk) are
+128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite mask value: keeps exp() exactly 0, never NaN
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, causal
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nkv = pl.num_programs(2)
+    bq = q_ref.shape[1]
+    bk = k_ref.shape[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal skip: the whole kv block is above the diagonal -> no compute.
+    # (On real TPU the grid itself is also shrunk by the caller's nkv map;
+    # the guard keeps the kernel correct for the rectangular grid.)
+    live = (qi * bq + bq - 1 >= ki * bk) if causal else True
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[:, :1]  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # masked entries underflow to exactly 0
+        alpha = jnp.exp(m_prev - m_new)  # first block: exp(-inf-ish) == 0
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, T, H, d); k, v: (B, S, KVH, d); returns (B, T, H, d)."""
+    B, T, H, d = q.shape
+    _, S, KVH, _ = k.shape
+    if H % KVH:
+        raise ValueError(f"q heads {H} not a multiple of kv heads {KVH}")
+    group = H // KVH
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    if T % bq or S % bk:
+        raise ValueError(f"T={T} % bq={bq} or S={S} % bk={bk} != 0")
+
+    # (B, T, H, d) -> (B*H, T, d); kv -> (B*KVH, S, d)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KVH, S, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KVH, S, d)
+
+    def kv_row(bh):
+        return (bh // H) * KVH + (bh % H) // group
+
+    grid = (B * H, T // bq, S // bk)
+    kernel = functools.partial(_fa_kernel, scale=scale, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (kv_row(bh), ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (kv_row(bh), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, T, d).transpose(0, 2, 1, 3)

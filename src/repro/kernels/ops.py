@@ -1,0 +1,123 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container validates kernels in
+interpret mode on CPU); on a TPU backend the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitonic
+from .flash_attention import flash_attention as _flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_default(interpret: bool | None) -> bool:
+    return (not _on_tpu()) if interpret is None else interpret
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def blockwise_sort(
+    x: jax.Array, block: int, interpret: bool | None = None
+) -> jax.Array:
+    """MergeMarathon segment emission on TPU: sort consecutive ``block``
+    chunks of a 1-D stream with the bitonic kernel.
+
+    ``block`` must be a power of two and divide ``x.size`` (the ops-level
+    contract; ragged tails are padded by the caller with the dtype max).
+    """
+    (n,) = x.shape
+    if block & (block - 1) or n % block:
+        raise ValueError(f"n={n} block={block}: need pow2 block dividing n")
+    rows = n // block
+    rpt = _row_tile(rows)
+    out = bitonic.sort_tiles(
+        x.reshape(rows, block),
+        rows_per_tile=rpt,
+        interpret=_interpret_default(interpret),
+    )
+    return out.reshape(n)
+
+
+def _row_tile(rows: int, target: int = 8) -> int:
+    """Largest divisor of ``rows`` that is <= target (grid tiling)."""
+    for t in range(min(target, rows), 0, -1):
+        if rows % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_rows(x: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Sort each row of (rows, B); B power of two."""
+    return bitonic.sort_tiles(
+        x,
+        rows_per_tile=_row_tile(x.shape[0]),
+        interpret=_interpret_default(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_rows_kv(
+    keys: jax.Array, vals: jax.Array, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise key-value sort (MoE dispatch: key=expert id, val=token idx)."""
+    return bitonic.sort_tiles_kv(
+        keys,
+        vals,
+        rows_per_tile=_row_tile(keys.shape[0]),
+        interpret=_interpret_default(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_rows(
+    a: jax.Array, b: jax.Array, interpret: bool | None = None
+) -> jax.Array:
+    """Row-wise merge of two sorted (rows, B) arrays -> (rows, 2B)."""
+    return bitonic.merge_tiles(
+        a,
+        b,
+        rows_per_tile=_row_tile(a.shape[0]),
+        interpret=_interpret_default(interpret),
+    )
+
+
+def flash_attention(
+    q, k, v, *, causal=True, scale=None, block_q=512, block_k=512,
+    interpret: bool | None = None,
+):
+    return _flash_attention(
+        q, k, v,
+        causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=_interpret_default(interpret),
+    )
+
+
+def argsort_padded(
+    keys: jax.Array, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """1-D argsort via the kv kernel, padding to the next power of two with
+    the dtype max (padding sorts to the tail and is sliced off)."""
+    (n,) = keys.shape
+    m = _next_pow2(max(n, 2))
+    pad = m - n
+    kp = jnp.concatenate(
+        [keys, jnp.full((pad,), jnp.iinfo(keys.dtype).max, keys.dtype)]
+    )
+    vp = jnp.arange(m, dtype=jnp.int32)
+    ks, vs = sort_rows_kv(kp[None, :], vp[None, :], interpret=interpret)
+    return ks[0, :n], vs[0, :n]

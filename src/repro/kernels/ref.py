@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref`` side of allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_ref(x: jax.Array) -> jax.Array:
+    """Row-wise sort oracle for kernels/bitonic.sort_tiles."""
+    return jnp.sort(x, axis=-1)
+
+
+def sort_kv_ref(keys: jax.Array, vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Key-value sort oracle.  NOTE: the bitonic network is not stable, so we
+    compare (key, value-as-tiebreak) ordering only when keys are unique;
+    tests with duplicate keys compare keys exactly and values as multisets
+    per key group."""
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return (
+        jnp.take_along_axis(keys, order, axis=-1),
+        jnp.take_along_axis(vals, order, axis=-1),
+    )
+
+
+def merge_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Row-wise merge oracle: sort the concatenation (inputs are sorted)."""
+    return jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+
+
+def mha_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Attention oracle: q (B, T, H, d), k/v (B, S, KVH, d), GQA by head
+    grouping; fp32 softmax."""
+    B, T, H, d = q.shape
+    _, S, KVH, _ = k.shape
+    group = H // KVH
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, T, KVH, group, d)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((T, S), dtype=bool), k=S - T)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, vf)
+    return out.reshape(B, T, H, d).astype(q.dtype)

@@ -1,0 +1,307 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the jitted step is lowered with ShapeDtypeStruct inputs (no allocation),
+compiled for the 256-chip single-pod mesh and the 512-chip two-pod mesh, and
+its memory_analysis / cost_analysis / per-collective byte counts are dumped
+as JSON for EXPERIMENTS.md and the roofline analyzer.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        [--multi-pod] [--out dryrun_results.json]
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import models
+from ..configs import get_config, list_archs
+from ..data.synthetic import batch_shapes, input_specs
+from ..distributed.sharding import ShardCtx
+from ..train.optimizer import AdamWConfig, init_opt_state, opt_state_specs
+from ..train.train_step import build_train_step
+from .mesh import make_production_mesh
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32_768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32_768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524_288, batch=1, kind="decode"),
+}
+
+# long_500k needs O(1)-state decode: run only for ssm/hybrid archs
+# (DESIGN.md §7); pure full-attention archs record an explicit skip.
+LONG_OK = {"zamba2-1.2b", "rwkv6-1.6b"}
+
+# ≥100B params: bf16 optimizer moments (DESIGN.md §5)
+BF16_MOMENT_ARCHS = {"command-r-plus-104b", "nemotron-4-340b"}
+
+
+def build_ctx(mesh, batch: int, seq: int, kind: str) -> ShardCtx:
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    # ZeRO state shards across ALL dp ranks: pod x data on the 512-chip mesh
+    fsdp = ("pod", "data") if "pod" in mesh.shape else "data"
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+    if batch % dp_size or batch < dp_size:
+        dp = ()  # replicate tiny batches (long-context decode)
+    tp_size = mesh.shape["model"]
+    sp = kind in ("train", "prefill") and seq % tp_size == 0
+    return ShardCtx(mesh=mesh, tp="model", fsdp=fsdp, dp=dp, sp=sp)
+
+
+def pick_microbatches(cfg, batch: int, seq: int, ctx: ShardCtx) -> int:
+    """Memory napkin: keep per-device remat-saved residuals under ~2 GB."""
+    dp_size = max(
+        math.prod(ctx.axis_size(a) for a in ctx.dp) if ctx.dp else 1, 1
+    )
+    tp = ctx.tp_size if ctx.sp else 1
+    tokens_local = batch // dp_size * seq // tp
+    resid_bytes = cfg.num_layers * tokens_local * cfg.d_model * 2
+    target = 2e9
+    mb = 1
+    while resid_bytes / mb > target and (batch // (2 * mb)) % max(dp_size, 1) == 0 and batch // (2 * mb) >= dp_size:
+        mb *= 2
+    return mb
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(cfg, ctx, batch: int, seq: int):
+    specs = {}
+    for name, (shape, dt) in batch_shapes(cfg, batch, seq).items():
+        rest = (None,) * (len(shape) - 1)
+        specs[name] = P(ctx.dp_axis, *rest)
+    return specs
+
+
+def lower_cell(arch: str, shape_name: str, mesh, verbose: bool = True,
+               rwkv_chunked: bool = False):
+    """Returns a result dict (lowered/compiled stats) for one cell."""
+    spec = SHAPES[shape_name]
+    seq, batch, kind = spec["seq"], spec["batch"], spec["kind"]
+    cfg = get_config(arch)
+
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return {
+            "arch": arch, "shape": shape_name, "status": "skipped",
+            "reason": "pure full-attention arch: no sub-quadratic path "
+                      "(DESIGN.md §7)",
+        }
+    if kind == "decode" and cfg.input_kind == "embeds" and not cfg.is_encdec:
+        pass  # vlm decodes tokens after an embeds prefill — fine
+
+    ctx = build_ctx(mesh, batch, seq, kind)
+    kw = {}
+    if cfg.rwkv is not None and rwkv_chunked:
+        kw["rwkv_chunked"] = True  # beyond-paper parallel rwkv (§Perf B)
+    model = models.build(cfg, ctx, **kw)
+    t0 = time.time()
+
+    aparams = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    pspecs = model.specs()
+    psh = _shardings(mesh, pspecs)
+
+    if kind == "train":
+        big = arch in BF16_MOMENT_ARCHS
+        opt_cfg = AdamWConfig(
+            moment_dtype="bfloat16" if big else "float32",
+            chunked_update=False,
+        )
+        aopt = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), aparams
+        )
+        osh = _shardings(mesh, opt_state_specs(pspecs))
+        bspecs = batch_specs(cfg, ctx, batch, seq)
+        bsh = _shardings(mesh, bspecs)
+        mb = pick_microbatches(cfg, batch, seq, ctx)
+
+        def constrain(b):
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, s)
+                ),
+                b, bspecs,
+            )
+
+        step = build_train_step(
+            model, opt_cfg, microbatches=mb,
+            batch_constraint=constrain if mb > 1 else None,
+            accum_dtype=jnp.bfloat16 if big else jnp.float32,
+        )
+        abatch = input_specs(cfg, batch, seq)
+        fn = jax.jit(
+            step,
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = fn.lower(aparams, aopt, abatch)
+        extra = {"microbatches": mb}
+    elif kind == "prefill":
+        if cfg.is_encdec:
+            acache = jax.eval_shape(
+                lambda: model.init_cache(batch, seq, enc_len=seq)
+            )
+        else:
+            acache = jax.eval_shape(lambda: model.init_cache(batch, seq))
+        csh = _shardings(mesh, model.cache_specs())
+        bspecs = batch_specs(cfg, ctx, batch, seq)
+        bsh = _shardings(mesh, bspecs)
+        abatch = input_specs(cfg, batch, seq)
+        fn = jax.jit(
+            model.prefill,
+            in_shardings=(psh, bsh, csh),
+            out_shardings=(None, csh),
+            donate_argnums=(2,),
+        )
+        lowered = fn.lower(aparams, abatch, acache)
+        extra = {}
+    else:  # decode
+        if cfg.is_encdec:
+            acache = jax.eval_shape(
+                lambda: model.init_cache(batch, seq, enc_len=seq)
+            )
+        else:
+            acache = jax.eval_shape(lambda: model.init_cache(batch, seq))
+        csh = _shardings(mesh, model.cache_specs())
+        atoks = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        tsh = NamedSharding(mesh, P(ctx.dp_axis))
+        fn = jax.jit(
+            model.decode_step,
+            in_shardings=(psh, csh, tsh),
+            out_shardings=(None, csh),
+            donate_argnums=(1,),
+        )
+        lowered = fn.lower(aparams, acache, atoks)
+        extra = {}
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # loop-aware accounting (cost_analysis counts while bodies once)
+    from benchmarks.hlo_analysis import analyze_text  # late import
+    from benchmarks.roofline import collective_report
+
+    hlo_text = compiled.as_text()
+    st = analyze_text(hlo_text)
+    coll = collective_report(hlo_text)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": dict(mesh.shape),
+        "status": "ok",
+        "seq": seq,
+        "batch": batch,
+        "params_b": cfg.param_count(),
+        "active_params_b": cfg.active_param_count(),
+        "flops_per_device": st.flops,
+        "bytes_per_device": st.hbm_bytes,
+        "collective_bytes_per_device": st.collective_bytes,
+        "per_collective": st.per_collective,
+        "loops": st.loops,
+        "xla_cost_flops_once": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes_once": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": coll,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        **extra,
+    }
+    if verbose:
+        hbm = (
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes
+        )
+        print(
+            f"  ok  flops/dev={result['flops_per_device']:.3e} "
+            f"hbm/dev={hbm/2**30:.2f}GiB "
+            f"coll={st.collective_bytes/2**20:.1f}MiB "
+            f"compile={t_compile:.1f}s"
+        )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rwkv-chunked", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (
+        [False, True] if args.both_meshes else [args.multi_pod]
+    )
+
+    results = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = math.prod(mesh.shape.values())
+        print(f"== mesh {dict(mesh.shape)} ({chips} chips) ==")
+        for arch in archs:
+            for shape in shapes:
+                print(f"[{arch} × {shape}]", flush=True)
+                try:
+                    r = lower_cell(arch, shape, mesh,
+                                   rwkv_chunked=args.rwkv_chunked)
+                except Exception as e:
+                    traceback.print_exc()
+                    r = {
+                        "arch": arch, "shape": shape,
+                        "mesh": dict(mesh.shape),
+                        "status": "error", "error": repr(e),
+                    }
+                if r["status"] == "skipped":
+                    print(f"  skipped: {r['reason']}")
+                results.append(r)
+
+    ok = sum(r["status"] == "ok" for r in results)
+    skipped = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n== {ok} ok / {skipped} skipped / {err} errors ==")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

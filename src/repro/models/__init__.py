@@ -1,0 +1,11 @@
+from .encdec import EncDecLM
+from .lm import LM
+
+__all__ = ["LM", "EncDecLM"]
+
+
+def build(cfg, ctx, **kw):
+    """Model factory: enc-dec for [audio], decoder-only otherwise."""
+    if cfg.is_encdec:
+        return EncDecLM(cfg, ctx)
+    return LM(cfg, ctx, **kw)

@@ -1,0 +1,296 @@
+"""Encoder-decoder LM (whisper-small backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S, D).  Positions are fixed
+sinusoidal (whisper uses learned/ sinusoidal absolute positions, not RoPE).
+Decoder layers = self-attn (causal) + cross-attn (encoder K/V) + mlp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import ShardCtx, fsdp_gather
+from . import attention as attn_mod, mlp as mlp_mod
+from .layers import (
+    cross_entropy,
+    embed_tokens,
+    init_embed,
+    init_lm_head,
+    init_norm,
+    lm_logits,
+    rms_norm,
+    spec_embed,
+    spec_lm_head,
+    spec_norm,
+)
+from .lm import _dtype, _stack_init, _stack_spec
+
+
+def sinusoid(T: int, D: int, dtype) -> jax.Array:
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / D))
+    out = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return out[:, :D].astype(dtype)
+
+
+@dataclasses.dataclass
+class EncDecLM:
+    cfg: ModelConfig
+    ctx: ShardCtx
+
+    def _init_block(self, key, cross: bool):
+        c, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 3)
+        p = {
+            "ln1": init_norm(c.d_model),
+            "ln2": init_norm(c.d_model),
+            "attn": attn_mod.init_attn(ks[0], c, dt),
+            "mlp": mlp_mod.init_mlp(
+                ks[1], c.d_model, c.d_ff, c.mlp_gated, c.use_bias, dt
+            ),
+        }
+        if cross:
+            p["ln_x"] = init_norm(c.d_model)
+            p["xattn"] = attn_mod.init_attn(ks[2], c, dt)
+        return p
+
+    def _spec_block(self, cross: bool):
+        c, ctx = self.cfg, self.ctx
+        s = {
+            "ln1": spec_norm(),
+            "ln2": spec_norm(),
+            "attn": attn_mod.spec_attn(c, ctx),
+            "mlp": mlp_mod.spec_mlp(ctx, c.mlp_gated, c.use_bias),
+        }
+        if cross:
+            s["ln_x"] = spec_norm()
+            s["xattn"] = attn_mod.spec_attn(c, ctx)
+        return s
+
+    def init(self, key) -> dict:
+        c, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 4)
+        return {
+            "embed": init_embed(ks[0], c.padded_vocab, c.d_model, dt),
+            "encoder": _stack_init(
+                lambda k: self._init_block(k, cross=False),
+                ks[1], c.encoder_layers,
+            ),
+            "decoder": _stack_init(
+                lambda k: self._init_block(k, cross=True),
+                ks[2], c.num_layers,
+            ),
+            "ln_enc": init_norm(c.d_model),
+            "ln_f": init_norm(c.d_model),
+            "head": init_lm_head(ks[3], c.d_model, c.padded_vocab, dt),
+        }
+
+    def specs(self) -> dict:
+        return {
+            "embed": spec_embed(self.ctx),
+            "encoder": _stack_spec(self._spec_block(cross=False)),
+            "decoder": _stack_spec(self._spec_block(cross=True)),
+            "ln_enc": spec_norm(),
+            "ln_f": spec_norm(),
+            "head": spec_lm_head(self.ctx),
+        }
+
+    def _logits(self, params, x) -> jax.Array:
+        c = self.cfg
+        logits = lm_logits(params["head"], x)
+        pad = c.padded_vocab - c.vocab_size
+        if pad == 0:
+            return logits
+        if self.ctx.tp_size == 1:
+            return logits[..., : c.vocab_size]
+        mask = jnp.arange(c.padded_vocab) < c.vocab_size
+        return jnp.where(mask, logits, -1e30)
+
+    # ---------------------------------------------------------------- passes
+    def encode(self, params, enc_embeds: jax.Array) -> jax.Array:
+        c, ctx = self.cfg, self.ctx
+        B, S, D = enc_embeds.shape
+        x = enc_embeds.astype(_dtype(c)) + sinusoid(S, D, _dtype(c))[None]
+        x = ctx.constraint(x, ctx.spec_resid())
+        positions = jnp.arange(S)[None, :]
+
+        def body(x_, lp):
+            lp = fsdp_gather(ctx, lp, self._spec_block(cross=False))
+            x_ = ctx.constraint(x_, ctx.spec_resid())
+            cp = attn_mod.use_context_parallel(c, ctx) and ctx.sp
+            xg = x_ if cp else ctx.constraint(x_, ctx.spec_full())
+            h = rms_norm(xg, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+            x_ = x_ + attn_mod.attention(
+                lp["attn"], c, ctx, h, positions, causal=False
+            )
+            xg = ctx.constraint(x_, ctx.spec_full())
+            h = rms_norm(xg, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+            return x_ + mlp_mod.mlp(lp["mlp"], c, ctx, h), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"])
+        return rms_norm(x, params["ln_enc"]["scale"].astype(x.dtype), c.norm_eps)
+
+    def decode_train(self, params, enc_out, tokens) -> jax.Array:
+        c, ctx = self.cfg, self.ctx
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, self.ctx)
+        x = x + sinusoid(T, c.d_model, x.dtype)[None]
+        positions = jnp.arange(T)[None, :]
+
+        def body(x_, lp):
+            lp = fsdp_gather(ctx, lp, self._spec_block(cross=True))
+            x_ = ctx.constraint(x_, ctx.spec_resid())
+            cp = attn_mod.use_context_parallel(c, ctx) and ctx.sp
+            xg = x_ if cp else ctx.constraint(x_, ctx.spec_full())
+            h = rms_norm(xg, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+            x_ = x_ + attn_mod.attention(
+                lp["attn"], c, ctx, h, positions, causal=True
+            )
+            xg = ctx.constraint(x_, ctx.spec_full())
+            h = rms_norm(xg, lp["ln_x"]["scale"].astype(x_.dtype), c.norm_eps)
+            kv = attn_mod.project_cross_kv(lp["xattn"], c, enc_out)
+            x_ = x_ + attn_mod.attention(
+                lp["xattn"], c, ctx, h, positions, causal=False, kv=kv
+            )
+            xg = ctx.constraint(x_, ctx.spec_full())
+            h = rms_norm(xg, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+            return x_ + mlp_mod.mlp(lp["mlp"], c, ctx, h), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["decoder"])
+        x = rms_norm(x, params["ln_f"]["scale"].astype(x.dtype), c.norm_eps)
+        return self._logits(params, x)
+
+    def forward(self, params, batch):
+        enc = self.encode(params, batch["enc_embeds"])
+        logits = self.decode_train(params, enc, batch["tokens"])
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, aux_weight: float = 0.0):
+        logits, _ = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int, enc_len: int) -> dict:
+        c = self.cfg
+        dt = _dtype(c)
+        KV, hd = c.num_kv_heads, c.resolved_head_dim
+        L = c.num_layers
+        return {
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "k": jnp.zeros((L, batch, max_len, KV, hd), dt),
+            "v": jnp.zeros((L, batch, max_len, KV, hd), dt),
+            # cross K/V computed once from the encoder output
+            "xk": jnp.zeros((L, batch, enc_len, KV, hd), dt),
+            "xv": jnp.zeros((L, batch, enc_len, KV, hd), dt),
+        }
+
+    def cache_specs(self) -> dict:
+        ctx = self.ctx
+        dpspec = ctx.dp_axis
+        kv = P(None, dpspec, ctx.tp, None, None)
+        return {"pos": P(dpspec), "k": kv, "v": kv, "xk": kv, "xv": kv}
+
+    def build_cross_cache(self, params, enc_out):
+        """Prefill-side: project encoder K/V for every decoder layer."""
+        c = self.cfg
+
+        def per_layer(lp):
+            return attn_mod.project_cross_kv(lp["xattn"], c, enc_out)
+
+        # lax.map (not vmap): sequential over layers, peak memory = one
+        # layer's K/V at a time
+        ks, vs = jax.lax.map(per_layer, params["decoder"])
+        return ks, vs
+
+    def prefill(self, params, batch, cache):
+        """Encoder pass + cross-cache build + decoder prompt prefill.
+        batch: {"enc_embeds": (B,S,D), "tokens": (B,T)}."""
+        c, ctx = self.cfg, self.ctx
+        enc = self.encode(params, batch["enc_embeds"])
+        xk, xv = self.build_cross_cache(params, enc)
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, self.ctx)
+        x = x + sinusoid(T, c.d_model, x.dtype)[None]
+        positions = jnp.arange(T)[None, :]
+        new_cache = dict(cache)
+        new_cache["xk"], new_cache["xv"] = xk, xv
+
+        def body(x_, xs):
+            lp, kc, vc, xk_, xv_ = xs
+            lp = fsdp_gather(ctx, lp, self._spec_block(cross=True))
+            h = rms_norm(x_, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+            y, (k_, v_) = attn_mod.attention(
+                lp["attn"], c, ctx, h, positions, causal=True, return_kv=True
+            )
+            kc = jax.lax.dynamic_update_slice(kc, k_.astype(kc.dtype),
+                                              (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v_.astype(vc.dtype),
+                                              (0, 0, 0, 0))
+            x_ = x_ + y
+            h = rms_norm(x_, lp["ln_x"]["scale"].astype(x_.dtype), c.norm_eps)
+            x_ = x_ + attn_mod.attention(
+                lp["xattn"], c, ctx, h, positions, causal=False,
+                kv=(xk_, xv_),
+            )
+            h = rms_norm(x_, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+            return x_ + mlp_mod.mlp(lp["mlp"], c, ctx, h), (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["decoder"], cache["k"], cache["v"], xk, xv)
+        )
+        new_cache["k"], new_cache["v"] = ks, vs
+        x = rms_norm(x, params["ln_f"]["scale"].astype(x.dtype), c.norm_eps)
+        new_cache["pos"] = cache["pos"] + T
+        return self._logits(params, x[:, -1, :]), new_cache
+
+    def decode_step(self, params, cache, tokens):
+        c, ctx = self.cfg, self.ctx
+        pos = cache["pos"]
+        x = embed_tokens(params["embed"], tokens, self.ctx)[:, None, :]
+        # sinusoidal position for the new token
+        D = c.d_model
+        dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+        ang = pos[:, None].astype(jnp.float32) / (10_000.0 ** (dim / D))
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :D]
+        x = x + pe[:, None, :].astype(x.dtype)
+        new_cache = dict(cache)
+
+        # cross-attn cache lengths: all encoder positions visible
+        enc_len = cache["xk"].shape[2]
+        full = jnp.full_like(pos, enc_len - 1)
+
+        def body(x_, xs):
+            lp, k_, v_, xk_, xv_ = xs
+            lp = fsdp_gather(ctx, lp, self._spec_block(cross=True))
+            h = rms_norm(x_, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+            y, k_, v_ = attn_mod.decode_attention(
+                lp["attn"], c, ctx, h, k_, v_, pos
+            )
+            x_ = x_ + y
+            h = rms_norm(x_, lp["ln_x"]["scale"].astype(x_.dtype), c.norm_eps)
+            y, _, _ = attn_mod.decode_attention(
+                lp["xattn"], c, ctx, h, xk_, xv_, full, cross=True
+            )
+            x_ = x_ + y
+            h = rms_norm(x_, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+            return x_ + mlp_mod.mlp(lp["mlp"], c, ctx, h), (k_, v_)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x,
+            (params["decoder"], cache["k"], cache["v"], cache["xk"],
+             cache["xv"]),
+        )
+        new_cache["k"], new_cache["v"] = ks, vs
+        x = rms_norm(x, params["ln_f"]["scale"].astype(x.dtype), c.norm_eps)
+        new_cache["pos"] = pos + 1
+        return self._logits(params, x)[:, 0, :], new_cache

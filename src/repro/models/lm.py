@@ -1,0 +1,706 @@
+"""Decoder-only LM assembly for every assigned family.
+
+One class, four family paths:
+
+* dense / vlm            — scanned stack of (attn + mlp) blocks
+* moe                    — scanned stack of (attn + sort-dispatch MoE),
+                           optional leading dense layers (deepseek-moe)
+* ssm (mamba2) / rwkv6   — scanned recurrent stacks, O(1)-state decode
+* hybrid (zamba2)        — mamba2 stack with one SHARED attention block
+                           invoked every N layers (params reused; each
+                           invocation has its own KV cache)
+
+Layer params are stacked (L, ...) and the stack is a single
+``lax.scan`` with per-layer ``jax.checkpoint`` (remat), so the HLO is
+depth-independent: the 96-layer 340B config compiles as fast as the 12-layer
+one, and FSDP all-gathers happen once per scan step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import ShardCtx, fsdp_gather
+from . import attention as attn_mod
+from . import mamba2, mlp as mlp_mod, moe as moe_mod, rwkv6
+from .layers import (
+    cross_entropy,
+    embed_tokens,
+    init_embed,
+    init_lm_head,
+    init_norm,
+    lm_logits,
+    rms_norm,
+    spec_embed,
+    spec_lm_head,
+    spec_norm,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _stack_spec(spec_tree):
+    return jax.tree.map(
+        lambda s: P(None, *s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+    ctx: ShardCtx
+    rwkv_chunked: bool = False  # beyond-paper parallel rwkv (§Perf)
+
+    # ------------------------------------------------------------------ init
+    def _block_kind(self) -> str:
+        c = self.cfg
+        if c.rwkv is not None:
+            return "rwkv"
+        if c.family == "hybrid":
+            return "hybrid"
+        if c.ssm is not None:
+            return "mamba"
+        if c.moe is not None:
+            return "moe"
+        return "dense"
+
+    def _init_block(self, key):
+        c, dt = self.cfg, _dtype(self.cfg)
+        kind = self._block_kind()
+        ks = jax.random.split(key, 3)
+        if kind == "rwkv":
+            return {
+                "ln1": init_norm(c.d_model),
+                "ln2": init_norm(c.d_model),
+                "rwkv": rwkv6.init_rwkv(ks[0], c, dt),
+            }
+        if kind in ("mamba", "hybrid"):
+            return {
+                "ln1": init_norm(c.d_model),
+                "mamba": mamba2.init_mamba(ks[0], c, dt),
+            }
+        p = {
+            "ln1": init_norm(c.d_model),
+            "ln2": init_norm(c.d_model),
+            "attn": attn_mod.init_attn(ks[0], c, dt),
+        }
+        if kind == "moe":
+            p["moe"] = moe_mod.init_moe(ks[1], c, dt)
+        else:
+            p["mlp"] = mlp_mod.init_mlp(
+                ks[1], c.d_model, c.d_ff, c.mlp_gated, c.use_bias, dt
+            )
+        return p
+
+    def _spec_block(self):
+        c, ctx = self.cfg, self.ctx
+        kind = self._block_kind()
+        if kind == "rwkv":
+            return {
+                "ln1": spec_norm(),
+                "ln2": spec_norm(),
+                "rwkv": rwkv6.spec_rwkv(c, ctx),
+            }
+        if kind in ("mamba", "hybrid"):
+            return {"ln1": spec_norm(), "mamba": mamba2.spec_mamba(c, ctx)}
+        s = {
+            "ln1": spec_norm(),
+            "ln2": spec_norm(),
+            "attn": attn_mod.spec_attn(c, ctx),
+        }
+        if kind == "moe":
+            s["moe"] = moe_mod.spec_moe(c, ctx)
+        else:
+            s["mlp"] = mlp_mod.spec_mlp(ctx, c.mlp_gated, c.use_bias)
+        return s
+
+    def _init_dense_block(self, key, d_ff: int):
+        c, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": init_norm(c.d_model),
+            "ln2": init_norm(c.d_model),
+            "attn": attn_mod.init_attn(ks[0], c, dt),
+            "mlp": mlp_mod.init_mlp(
+                ks[1], c.d_model, d_ff, c.mlp_gated, c.use_bias, dt
+            ),
+        }
+
+    def _spec_dense_block(self):
+        c, ctx = self.cfg, self.ctx
+        return {
+            "ln1": spec_norm(),
+            "ln2": spec_norm(),
+            "attn": attn_mod.spec_attn(c, ctx),
+            "mlp": mlp_mod.spec_mlp(ctx, c.mlp_gated, c.use_bias),
+        }
+
+    def init(self, key) -> dict:
+        c, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 6)
+        n_scan = c.num_layers
+        params: dict[str, Any] = {}
+        # [vlm]/[audio] stub frontend archs still need the table for decode
+        params["embed"] = init_embed(ks[0], c.padded_vocab, c.d_model, dt)
+        if c.moe is not None and c.moe.first_dense_layers:
+            n_dense = c.moe.first_dense_layers
+            n_scan = c.num_layers - n_dense
+            params["dense_layers"] = [
+                self._init_dense_block(k, c.moe.d_ff_dense or c.d_ff)
+                for k in jax.random.split(ks[1], n_dense)
+            ]
+        params["layers"] = _stack_init(self._init_block, ks[2], n_scan)
+        if c.family == "hybrid" and c.shared_attn_every:
+            params["shared"] = {
+                "ln1": init_norm(c.d_model),
+                "ln2": init_norm(c.d_model),
+                "attn": attn_mod.init_attn(ks[3], c, dt),
+                "mlp": mlp_mod.init_mlp(
+                    ks[4], c.d_model, c.d_ff, c.mlp_gated, c.use_bias, dt
+                ),
+            }
+        params["ln_f"] = init_norm(c.d_model)
+        if not c.tie_embeddings:
+            params["head"] = init_lm_head(ks[5], c.d_model, c.padded_vocab, dt)
+        return params
+
+    def specs(self) -> dict:
+        c, ctx = self.cfg, self.ctx
+        specs: dict[str, Any] = {"embed": spec_embed(ctx)}
+        if c.moe is not None and c.moe.first_dense_layers:
+            specs["dense_layers"] = [
+                self._spec_dense_block()
+                for _ in range(c.moe.first_dense_layers)
+            ]
+        specs["layers"] = _stack_spec(self._spec_block())
+        if c.family == "hybrid" and c.shared_attn_every:
+            specs["shared"] = self._spec_dense_block()
+        specs["ln_f"] = spec_norm()
+        if not c.tie_embeddings:
+            specs["head"] = spec_lm_head(ctx)
+        return specs
+
+    def _spec_for_lp(self, lp):
+        """Spec tree matching a concrete layer-params dict (handles the
+        deepseek leading-dense-layer case inside a moe model)."""
+        if "mlp" in lp and self._block_kind() == "moe":
+            return self._spec_dense_block()
+        return self._spec_block()
+
+    # --------------------------------------------------------------- forward
+    def _attn_mlp_body(self, lp, x, positions, kind):
+        c, ctx = self.cfg, self.ctx
+        lp = fsdp_gather(ctx, lp, self._spec_for_lp(lp))
+        aux = jnp.zeros((), jnp.float32)
+        x = ctx.constraint(x, ctx.spec_resid())
+        # SP: gather the bf16 residual BEFORE the norm — gathering the norm
+        # output lets the partitioner hoist the collective into fp32
+        # intermediates (2x bytes, measured; §Perf cell A iteration 2).
+        # Context-parallel attention keeps rows T-sharded (no gather).
+        cp = attn_mod.use_context_parallel(c, ctx) and ctx.sp
+        xg = x if cp else ctx.constraint(x, ctx.spec_full())
+        h = rms_norm(xg, lp["ln1"]["scale"].astype(x.dtype), c.norm_eps)
+        x = x + attn_mod.attention(lp["attn"], c, ctx, h, positions)
+        xg = ctx.constraint(x, ctx.spec_full())
+        h = rms_norm(xg, lp["ln2"]["scale"].astype(x.dtype), c.norm_eps)
+        if kind == "moe":
+            if moe_mod.use_a2a(c, ctx):
+                # a2a dispatch consumes the T-sharded residual directly:
+                # routing/sort runs on 1/tp tokens (§Perf cell C)
+                h_loc = rms_norm(
+                    ctx.constraint(x, ctx.spec_resid()),
+                    lp["ln2"]["scale"].astype(x.dtype), c.norm_eps,
+                )
+                y, aux, _ = moe_mod.moe_layer_a2a(
+                    lp["moe"], c, ctx, h_loc, x_full=h
+                )
+            else:
+                y, aux, _ = moe_mod.moe_layer(lp["moe"], c, ctx, h)
+            x = x + y
+        else:
+            x = x + mlp_mod.mlp(lp["mlp"], c, ctx, h)
+        return x, aux
+
+    def _shared_attn(self, params, x, positions):
+        c, ctx = self.cfg, self.ctx
+        sp = fsdp_gather(ctx, params["shared"], self._spec_dense_block())
+        xg = ctx.constraint(x, ctx.spec_full())
+        h = rms_norm(xg, sp["ln1"]["scale"].astype(x.dtype), c.norm_eps)
+        x = x + attn_mod.attention(sp["attn"], c, ctx, h, positions)
+        xg = ctx.constraint(x, ctx.spec_full())
+        h = rms_norm(xg, sp["ln2"]["scale"].astype(x.dtype), c.norm_eps)
+        return x + mlp_mod.mlp(sp["mlp"], c, ctx, h)
+
+    def embed_inputs(self, params, batch) -> jax.Array:
+        c = self.cfg
+        if c.input_kind == "tokens":
+            x = embed_tokens(params["embed"], batch["tokens"], self.ctx)
+        else:
+            x = batch["embeds"].astype(_dtype(c))
+        return self.ctx.constraint(x, self.ctx.spec_resid())
+
+    def _logits(self, params, x) -> jax.Array:
+        """Vocab head with padded-column masking.  On a 1-device tp the
+        padding is sliced off (tests see exact vocab); on tp>1 the padded
+        width is kept (even sharding) and masked to -1e30."""
+        c = self.cfg
+        if c.tie_embeddings:
+            logits = x @ params["embed"]["table"].T
+        else:
+            logits = lm_logits(params["head"], x)
+        if self.ctx.tp_size > 1:
+            vspec = (P(self.ctx.dp_axis, None, self.ctx.tp)
+                     if logits.ndim == 3
+                     else P(self.ctx.dp_axis, self.ctx.tp))
+            logits = self.ctx.constraint(logits, vspec)
+        pad = c.padded_vocab - c.vocab_size
+        if pad == 0:
+            return logits
+        if self.ctx.tp_size == 1:
+            return logits[..., : c.vocab_size]
+        mask = jnp.arange(c.padded_vocab) < c.vocab_size
+        return jnp.where(mask, logits, -1e30)
+
+    def forward(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """Training/scoring forward.  Returns (logits, aux_loss)."""
+        c, ctx = self.cfg, self.ctx
+        x = self.embed_inputs(params, batch)
+        B, T, _ = x.shape
+        positions = jnp.arange(T)[None, :]
+        kind = self._block_kind()
+        aux_total = jnp.zeros((), jnp.float32)
+
+        for lp in params.get("dense_layers", []):
+            x, _ = jax.checkpoint(
+                lambda lp_, x_: self._attn_mlp_body(
+                    lp_, x_, positions, "dense_first")
+            )(lp, x)
+
+        if kind == "moe" and ctx.tp_size > 1 and not moe_mod.use_a2a(c, ctx):
+            raise ValueError(
+                "training MoE with tp>1 requires the a2a dispatch "
+                "(T % tp == 0 / SP); the psum fallback's gradient path is "
+                "only validated for tp=1"
+            )
+        if kind in ("dense", "moe"):
+            def body(x_, lp):
+                x_, aux = self._attn_mlp_body(lp, x_, positions, kind)
+                return x_, aux
+            x, auxs = jax.lax.scan(
+                jax.checkpoint(body), x, params["layers"]
+            )
+            aux_total = aux_total + auxs.sum()
+        elif kind == "rwkv":
+            hs, H = c.rwkv.head_size, c.d_model // c.rwkv.head_size
+            z_shift = jnp.zeros((B, c.d_model), x.dtype)
+            z_state = jnp.zeros((B, H, hs, hs), jnp.float32)
+            mix = (
+                rwkv6.rwkv_time_mix_chunked
+                if self.rwkv_chunked
+                else rwkv6.rwkv_time_mix
+            )
+
+            def body(x_, lp):
+                lp = fsdp_gather(ctx, lp, self._spec_block())
+                x_ = ctx.constraint(x_, ctx.spec_resid())
+                xg = ctx.constraint(x_, ctx.spec_full())
+                h = rms_norm(xg, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+                y, _, _ = mix(lp["rwkv"], c, h, z_shift, z_state)
+                x_ = x_ + y
+                xg = ctx.constraint(x_, ctx.spec_full())
+                h = rms_norm(xg, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+                y, _ = rwkv6.rwkv_channel_mix(lp["rwkv"], c, h, z_shift)
+                return x_ + y, jnp.zeros((), jnp.float32)
+
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+        elif kind in ("mamba", "hybrid"):
+            every = c.shared_attn_every if c.family == "hybrid" else 0
+
+            def body(x_, lp):
+                lp = fsdp_gather(ctx, lp, self._spec_block())
+                x_ = ctx.constraint(x_, ctx.spec_resid())
+                xg = ctx.constraint(x_, ctx.spec_full())
+                h = rms_norm(xg, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+                y, _, _ = mamba2.mamba_block(lp["mamba"], c, ctx, h)
+                return x_ + y, jnp.zeros((), jnp.float32)
+
+            if every:
+                # segmented scans with the shared attention block between
+                # segments (params reused across invocations)
+                stacked = params["layers"]
+                L = c.num_layers
+                done = 0
+                while done < L:
+                    seg = min(every, L - done)
+                    seg_params = jax.tree.map(
+                        lambda a: a[done : done + seg], stacked
+                    )
+                    x, _ = jax.lax.scan(jax.checkpoint(body), x, seg_params)
+                    done += seg
+                    if done < L or L % every == 0:
+                        x = jax.checkpoint(
+                            lambda p_, x_: self._shared_attn(p_, x_, positions)
+                        )(params, x)
+            else:
+                x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+        else:
+            raise ValueError(kind)
+
+        x = rms_norm(x, params["ln_f"]["scale"].astype(x.dtype), c.norm_eps)
+        return self._logits(params, x), aux_total
+
+    def loss(self, params, batch, aux_weight: float = 0.01):
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        """Abstract-friendly cache construction (zeros; jnp under jit)."""
+        c = self.cfg
+        dt = _dtype(c)
+        KV, hd = c.num_kv_heads, c.resolved_head_dim
+        kind = self._block_kind()
+        cache: dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+        if kind in ("dense", "moe"):
+            n_scan = c.num_layers - (
+                c.moe.first_dense_layers if c.moe else 0
+            )
+            cache["k"] = jnp.zeros((n_scan, batch, max_len, KV, hd), dt)
+            cache["v"] = jnp.zeros((n_scan, batch, max_len, KV, hd), dt)
+            if c.moe is not None and c.moe.first_dense_layers:
+                nd = c.moe.first_dense_layers
+                cache["k_dense"] = jnp.zeros((nd, batch, max_len, KV, hd), dt)
+                cache["v_dense"] = jnp.zeros((nd, batch, max_len, KV, hd), dt)
+        elif kind == "rwkv":
+            hs, H = c.rwkv.head_size, c.d_model // c.rwkv.head_size
+            L = c.num_layers
+            cache["tm_shift"] = jnp.zeros((L, batch, c.d_model), dt)
+            cache["cm_shift"] = jnp.zeros((L, batch, c.d_model), dt)
+            cache["wkv"] = jnp.zeros((L, batch, H, hs, hs), jnp.float32)
+        elif kind in ("mamba", "hybrid"):
+            s = c.ssm
+            d_inner = s.expand * c.d_model
+            nheads = d_inner // s.head_dim
+            conv_ch = d_inner + 2 * s.num_groups * s.state_dim
+            L = c.num_layers
+            cache["conv"] = jnp.zeros((L, batch, s.conv_width - 1, conv_ch), dt)
+            cache["ssm"] = jnp.zeros(
+                (L, batch, nheads, s.state_dim, s.head_dim), jnp.float32
+            )
+            if c.family == "hybrid" and c.shared_attn_every:
+                n_inv = c.num_layers // c.shared_attn_every
+                cache["shared_k"] = jnp.zeros(
+                    (n_inv, batch, max_len, KV, hd), dt
+                )
+                cache["shared_v"] = jnp.zeros(
+                    (n_inv, batch, max_len, KV, hd), dt
+                )
+        return cache
+
+    def cache_specs(self) -> dict:
+        c, ctx = self.cfg, self.ctx
+        dpspec = ctx.dp_axis
+        kind = self._block_kind()
+        specs: dict[str, Any] = {"pos": P(dpspec)}
+        kv_spec = P(None, dpspec, ctx.tp, None, None)  # seq sharded over tp
+        if kind in ("dense", "moe"):
+            specs["k"] = kv_spec
+            specs["v"] = kv_spec
+            if c.moe is not None and c.moe.first_dense_layers:
+                specs["k_dense"] = kv_spec
+                specs["v_dense"] = kv_spec
+        elif kind == "rwkv":
+            specs["tm_shift"] = P(None, dpspec, None)
+            specs["cm_shift"] = P(None, dpspec, None)
+            specs["wkv"] = P(None, dpspec, ctx.tp, None, None)
+        elif kind in ("mamba", "hybrid"):
+            specs["conv"] = P(None, dpspec, None, None)
+            specs["ssm"] = P(None, dpspec, ctx.tp, None, None)
+            if c.family == "hybrid" and c.shared_attn_every:
+                specs["shared_k"] = kv_spec
+                specs["shared_v"] = kv_spec
+        return specs
+
+    def prefill(self, params, batch, cache) -> tuple[jax.Array, dict]:
+        """Process a full prompt, populating the cache.  Returns
+        (last-position logits (B, V), cache with pos=T)."""
+        c, ctx = self.cfg, self.ctx
+        x = self.embed_inputs(params, batch)
+        B, T, _ = x.shape
+        positions = jnp.arange(T)[None, :]
+        kind = self._block_kind()
+        new_cache = dict(cache)
+
+        def attn_prefill(lp, x_, kc, vc):
+            lp = fsdp_gather(ctx, lp, self._spec_for_lp(lp))
+            x_ = ctx.constraint(x_, ctx.spec_resid())
+            cp = attn_mod.use_context_parallel(c, ctx) and ctx.sp
+            xg = x_ if cp else ctx.constraint(x_, ctx.spec_full())
+            h = rms_norm(xg, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+            y, (k_, v_) = attn_mod.attention(
+                lp["attn"], c, ctx, h, positions, return_kv=True
+            )
+            kc = jax.lax.dynamic_update_slice(kc, k_.astype(kc.dtype),
+                                              (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v_.astype(vc.dtype),
+                                              (0, 0, 0, 0))
+            x_ = x_ + y
+            xg = ctx.constraint(x_, ctx.spec_full())
+            h = rms_norm(xg, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+            if "moe" in lp:
+                if moe_mod.use_a2a(c, ctx):
+                    h_loc = rms_norm(
+                        ctx.constraint(x_, ctx.spec_resid()),
+                        lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps,
+                    )
+                    y2, _, _ = moe_mod.moe_layer_a2a(
+                        lp["moe"], c, ctx, h_loc, x_full=h
+                    )
+                else:
+                    y2, _, _ = moe_mod.moe_layer(lp["moe"], c, ctx, h)
+            else:
+                y2 = mlp_mod.mlp(lp["mlp"], c, ctx, h)
+            return x_ + y2, kc, vc
+
+        if kind in ("dense", "moe"):
+            for i, lp in enumerate(params.get("dense_layers", [])):
+                x, k_, v_ = attn_prefill(
+                    lp, x, cache["k_dense"][i], cache["v_dense"][i]
+                )
+                new_cache["k_dense"] = new_cache["k_dense"].at[i].set(k_)
+                new_cache["v_dense"] = new_cache["v_dense"].at[i].set(v_)
+
+            def body(x_, xs):
+                lp, kc, vc = xs
+                x_, kc, vc = attn_prefill(lp, x_, kc, vc)
+                return x_, (kc, vc)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"])
+            )
+            new_cache["k"], new_cache["v"] = ks, vs
+        elif kind == "rwkv":
+            hs, H = c.rwkv.head_size, c.d_model // c.rwkv.head_size
+            z_shift = jnp.zeros((B, c.d_model), x.dtype)
+            z_state = jnp.zeros((B, H, hs, hs), jnp.float32)
+
+            def body(x_, lp):
+                lp = fsdp_gather(ctx, lp, self._spec_block())
+                x_ = ctx.constraint(x_, ctx.spec_resid())
+                xg = ctx.constraint(x_, ctx.spec_full())
+                h = rms_norm(xg, lp["ln1"]["scale"].astype(x_.dtype),
+                             c.norm_eps)
+                y, tms, wkv = rwkv6.rwkv_time_mix(
+                    lp["rwkv"], c, h, z_shift, z_state
+                )
+                x_ = x_ + y
+                h = rms_norm(x_, lp["ln2"]["scale"].astype(x_.dtype),
+                             c.norm_eps)
+                y, cms = rwkv6.rwkv_channel_mix(lp["rwkv"], c, h, z_shift)
+                return x_ + y, (tms.astype(x_.dtype), cms.astype(x_.dtype),
+                                wkv)
+
+            x, (tms, cms, wkv) = jax.lax.scan(body, x, params["layers"])
+            new_cache["tm_shift"] = tms
+            new_cache["cm_shift"] = cms
+            new_cache["wkv"] = wkv
+        elif kind in ("mamba", "hybrid"):
+            every = c.shared_attn_every if c.family == "hybrid" else 0
+
+            def body(x_, lp):
+                lp = fsdp_gather(ctx, lp, self._spec_block())
+                x_ = ctx.constraint(x_, ctx.spec_resid())
+                xg = ctx.constraint(x_, ctx.spec_full())
+                h = rms_norm(xg, lp["ln1"]["scale"].astype(x_.dtype),
+                             c.norm_eps)
+                y, conv, ssm = mamba2.mamba_block(lp["mamba"], c, ctx, h)
+                return x_ + y, (conv.astype(x_.dtype), ssm)
+
+            if every:
+                L = c.num_layers
+                convs, ssms = [], []
+                done, inv = 0, 0
+                while done < L:
+                    seg = min(every, L - done)
+                    seg_params = jax.tree.map(
+                        lambda a: a[done : done + seg], params["layers"]
+                    )
+                    x, (cv, sm) = jax.lax.scan(body, x, seg_params)
+                    convs.append(cv)
+                    ssms.append(sm)
+                    done += seg
+                    if done < L or L % every == 0:
+                        sp = params["shared"]
+                        h = rms_norm(x, sp["ln1"]["scale"].astype(x.dtype),
+                                     c.norm_eps)
+                        y, (k_, v_) = attn_mod.attention(
+                            sp["attn"], c, ctx, h, positions, return_kv=True
+                        )
+                        kc = jax.lax.dynamic_update_slice(
+                            cache["shared_k"][inv], k_.astype(_dtype(c)),
+                            (0, 0, 0, 0),
+                        )
+                        vc = jax.lax.dynamic_update_slice(
+                            cache["shared_v"][inv], v_.astype(_dtype(c)),
+                            (0, 0, 0, 0),
+                        )
+                        new_cache["shared_k"] = (
+                            new_cache["shared_k"].at[inv].set(kc)
+                        )
+                        new_cache["shared_v"] = (
+                            new_cache["shared_v"].at[inv].set(vc)
+                        )
+                        x = x + y
+                        h = rms_norm(x, sp["ln2"]["scale"].astype(x.dtype),
+                                     c.norm_eps)
+                        x = x + mlp_mod.mlp(sp["mlp"], c, ctx, h)
+                        inv += 1
+                new_cache["conv"] = jnp.concatenate(convs, axis=0)
+                new_cache["ssm"] = jnp.concatenate(ssms, axis=0)
+            else:
+                x, (cv, sm) = jax.lax.scan(body, x, params["layers"])
+                new_cache["conv"] = cv
+                new_cache["ssm"] = sm
+        else:
+            raise ValueError(kind)
+
+        x = rms_norm(x, params["ln_f"]["scale"].astype(x.dtype), c.norm_eps)
+        new_cache["pos"] = cache["pos"] + T
+        return self._logits(params, x[:, -1, :]), new_cache
+
+    def decode_step(self, params, cache, tokens) -> tuple[jax.Array, dict]:
+        """One decode step.  tokens: (B,) int32.  Returns (logits, cache)."""
+        c, ctx = self.cfg, self.ctx
+        pos = cache["pos"]
+        x = embed_tokens(params["embed"], tokens, self.ctx)[:, None, :]
+        kind = self._block_kind()
+        new_cache = dict(cache)
+
+        def attn_step(lp, x_, k_, v_):
+            lp = fsdp_gather(ctx, lp, self._spec_for_lp(lp))
+            h = rms_norm(x_, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+            y, k_, v_ = attn_mod.decode_attention(
+                lp["attn"], c, ctx, h, k_, v_, pos
+            )
+            x_ = x_ + y
+            h = rms_norm(x_, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+            if "moe" in lp:
+                y2, _, _ = moe_mod.moe_layer(lp["moe"], c, ctx, h)
+            else:
+                y2 = mlp_mod.mlp(lp["mlp"], c, ctx, h)
+            return x_ + y2, k_, v_
+
+        if kind in ("dense", "moe"):
+            for i, lp in enumerate(params.get("dense_layers", [])):
+                x, k_, v_ = attn_step(
+                    lp, x, cache["k_dense"][i], cache["v_dense"][i]
+                )
+                new_cache["k_dense"] = new_cache["k_dense"].at[i].set(k_)
+                new_cache["v_dense"] = new_cache["v_dense"].at[i].set(v_)
+
+            def body(x_, xs):
+                lp, k_, v_ = xs
+                x_, k_, v_ = attn_step(lp, x_, k_, v_)
+                return x_, (k_, v_)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"])
+            )
+            new_cache["k"], new_cache["v"] = ks, vs
+        elif kind == "rwkv":
+            def body(x_, xs):
+                lp, tms, cms, wkv = xs
+                lp = fsdp_gather(ctx, lp, self._spec_block())
+                h = rms_norm(x_, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+                y, tms, wkv = rwkv6.rwkv_time_mix(lp["rwkv"], c, h, tms, wkv)
+                x_ = x_ + y
+                h = rms_norm(x_, lp["ln2"]["scale"].astype(x_.dtype), c.norm_eps)
+                y, cms = rwkv6.rwkv_channel_mix(lp["rwkv"], c, h, cms)
+                return x_ + y, (tms, cms, wkv)
+
+            x, (tms, cms, wkv) = jax.lax.scan(
+                body, x,
+                (params["layers"], cache["tm_shift"], cache["cm_shift"],
+                 cache["wkv"]),
+            )
+            new_cache["tm_shift"] = tms
+            new_cache["cm_shift"] = cms
+            new_cache["wkv"] = wkv
+        elif kind in ("mamba", "hybrid"):
+            every = c.shared_attn_every if c.family == "hybrid" else 0
+
+            def body(x_, xs):
+                lp, conv, ssm = xs
+                lp = fsdp_gather(ctx, lp, self._spec_block())
+                h = rms_norm(x_, lp["ln1"]["scale"].astype(x_.dtype), c.norm_eps)
+                y, conv, ssm = mamba2.mamba_decode(
+                    lp["mamba"], c, ctx, h, conv, ssm
+                )
+                return x_ + y, (conv, ssm)
+
+            if every:
+                L = c.num_layers
+                convs, ssms = [], []
+                done = 0
+                inv = 0
+                while done < L:
+                    seg = min(every, L - done)
+                    seg_xs = jax.tree.map(
+                        lambda a: a[done : done + seg],
+                        (params["layers"], cache["conv"], cache["ssm"]),
+                    )
+                    x, (cv, sm) = jax.lax.scan(body, x, seg_xs)
+                    convs.append(cv)
+                    ssms.append(sm)
+                    done += seg
+                    if done < L or L % every == 0:
+                        sp = params["shared"]
+                        h = rms_norm(
+                            x, sp["ln1"]["scale"].astype(x.dtype), c.norm_eps
+                        )
+                        y, k_, v_ = attn_mod.decode_attention(
+                            sp["attn"], c, ctx, h,
+                            cache["shared_k"][inv], cache["shared_v"][inv],
+                            pos,
+                        )
+                        x = x + y
+                        h = rms_norm(
+                            x, sp["ln2"]["scale"].astype(x.dtype), c.norm_eps
+                        )
+                        x = x + mlp_mod.mlp(sp["mlp"], c, ctx, h)
+                        new_cache["shared_k"] = (
+                            new_cache["shared_k"].at[inv].set(k_)
+                        )
+                        new_cache["shared_v"] = (
+                            new_cache["shared_v"].at[inv].set(v_)
+                        )
+                        inv += 1
+                new_cache["conv"] = jnp.concatenate(convs, axis=0)
+                new_cache["ssm"] = jnp.concatenate(ssms, axis=0)
+            else:
+                x, (cv, sm) = jax.lax.scan(
+                    body, x, (params["layers"], cache["conv"], cache["ssm"])
+                )
+                new_cache["conv"] = cv
+                new_cache["ssm"] = sm
+        else:
+            raise ValueError(kind)
+
+        x = rms_norm(x, params["ln_f"]["scale"].astype(x.dtype), c.norm_eps)
+        new_cache["pos"] = pos + 1
+        return self._logits(params, x)[:, 0, :], new_cache

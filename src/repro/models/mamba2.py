@@ -1,0 +1,233 @@
+"""Mamba2 (SSD) block — chunked state-space duality form, JAX-native.
+
+Training/prefill uses the chunked SSD algorithm: all intra-chunk terms are
+batched matmuls (MXU work), and only the O(T/Q) inter-chunk state propagation
+is a ``lax.scan``.  Decode is the O(1) recurrence on the carried state —
+this is what makes the hybrid/ssm archs eligible for the 500K-token decode
+shape.
+
+Projections are separate matrices (z, x, B, C, dt) rather than one fused
+in_proj so each gets a clean PartitionSpec (heads/d_inner on tp; B/C/dt are
+small and replicated over tp when groups < tp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, SSMConfig
+from ..distributed.sharding import ShardCtx
+from .layers import dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return s, d_inner, nheads
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s, d_inner, nheads = _dims(cfg)
+    D, G, N, W = cfg.d_model, s.num_groups, s.state_dim, s.conv_width
+    ks = jax.random.split(key, 8)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "wz": dense_init(ks[0], D, d_inner, dtype),
+        "wx": dense_init(ks[1], D, d_inner, dtype),
+        "wb": dense_init(ks[2], D, G * N, dtype),
+        "wc": dense_init(ks[3], D, G * N, dtype),
+        "wdt": dense_init(ks[4], D, nheads, dtype),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "conv_k": (jax.random.normal(ks[5], (W, conv_ch)) * W**-0.5).astype(dtype),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "wo": dense_init(ks[6], d_inner, D, dtype, scale=d_inner**-0.5),
+    }
+
+
+def spec_mamba(cfg: ModelConfig, ctx: ShardCtx):
+    s, d_inner, nheads = _dims(cfg)
+    G = s.num_groups
+    bc_tp = ctx.tp if G % max(ctx.tp_size, 1) == 0 else None
+    h_tp = ctx.tp if nheads % max(ctx.tp_size, 1) == 0 else None
+    return {
+        "wz": P(ctx.fsdp, ctx.tp),
+        "wx": P(ctx.fsdp, ctx.tp),
+        "wb": P(ctx.fsdp, bc_tp),
+        "wc": P(ctx.fsdp, bc_tp),
+        "wdt": P(ctx.fsdp, h_tp),
+        "dt_bias": P(h_tp),
+        "a_log": P(h_tp),
+        "d_skip": P(h_tp),
+        "conv_k": P(None, None),
+        "norm_scale": P(ctx.tp),
+        "wo": P(ctx.tp, ctx.fsdp),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, state=None):
+    """Depthwise causal conv via shifted adds.  x: (B, T, C); kernel (W, C);
+    state: (B, W-1, C) carried context (decode/prefill continuation)."""
+    W = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+W-1, C)
+    T = x.shape[1]
+    out = sum(
+        xp[:, w : w + T, :] * kernel[w][None, None, :] for w in range(W)
+    )
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _project(params, cfg: ModelConfig, u: jax.Array):
+    s, d_inner, nheads = _dims(cfg)
+    z = u @ params["wz"]
+    x = u @ params["wx"]
+    b = u @ params["wb"]
+    c = u @ params["wc"]
+    dt = jax.nn.softplus(
+        (u @ params["wdt"]).astype(jnp.float32) + params["dt_bias"]
+    )
+    return z, x, b, c, dt
+
+
+def mamba_block(
+    params,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    u: jax.Array,
+    conv_state=None,
+    ssm_state=None,
+):
+    """Full-sequence SSD.  u: (B, T, D) -> (B, T, D).
+
+    If states are given (prefill continuation) they are consumed and the
+    final (conv_state, ssm_state) is returned alongside the output.
+    """
+    s, d_inner, nheads = _dims(cfg)
+    G, N, Pd, Q = s.num_groups, s.state_dim, s.head_dim, s.chunk
+    B_, T, _ = u.shape
+    hpg = nheads // G
+
+    z, x, b, c, dt = _project(params, cfg, u)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, params["conv_k"], conv_state)
+    x, b, c = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+
+    a = -jnp.exp(params["a_log"])  # (H,) negative decay rates
+    xh = x.reshape(B_, T, nheads, Pd).astype(jnp.float32)
+    bh = b.reshape(B_, T, G, N).astype(jnp.float32)
+    ch = c.reshape(B_, T, G, N).astype(jnp.float32)
+    da = dt * a[None, None, :]  # (B, T, H) log-decay per step
+
+    # shrink the chunk to the largest divisor of T if needed (short seqs)
+    Q = min(Q, T)
+    while T % Q:
+        Q -= 1
+    nc = T // Q
+
+    def chunked(xh, bh, ch, dt, da):
+        xc = xh.reshape(B_, nc, Q, nheads, Pd)
+        bc_ = bh.reshape(B_, nc, Q, G, N)
+        cc = ch.reshape(B_, nc, Q, G, N)
+        dtc = dt.reshape(B_, nc, Q, nheads)
+        dac = da.reshape(B_, nc, Q, nheads)
+        cum = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H) within-chunk decay
+        total = cum[:, :, -1, :]  # (B,nc,H)
+
+        # intra-chunk: ((C B^T) ⊙ L) (x·dt)
+        # L[t,s] = exp(cum[t]-cum[s]) for s<=t
+        bh_heads = jnp.repeat(bc_, hpg, axis=3)  # (B,nc,Q,H,N)
+        ch_heads = jnp.repeat(cc, hpg, axis=3)
+        scores = jnp.einsum("bnqhs,bnkhs->bnhqk", ch_heads, bh_heads)
+        ldec = cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3) - cum[
+            :, :, None, :, :
+        ].transpose(0, 1, 4, 2, 3)  # (B,nc,H,Q(t),Q(s))
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(mask[None, None, None], jnp.exp(ldec), 0.0)
+        xdt = xc * dtc[..., None]  # (B,nc,Q,H,P)
+        y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", scores * L, xdt)
+
+        # chunk boundary states: S_n = sum_s exp(total - cum[s]) dt_s B_s x_s
+        w_end = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+        S_chunk = jnp.einsum(
+            "bnqhs,bnqhp->bnhsp", bh_heads * (w_end * dtc)[..., None], xc
+        )  # note: dt folded via (w_end*dtc)
+
+        # inter-chunk scan: h carries across chunks
+        def step(h, inp):
+            s_n, tot_n, c_n, cum_n = inp
+            y_inter = jnp.einsum(
+                "bqhs,bhsp->bqhp", c_n * jnp.exp(cum_n)[..., None], h
+            )
+            h_next = jnp.exp(tot_n)[:, :, None, None] * h + s_n
+            return h_next, y_inter
+
+        h0 = (
+            ssm_state.astype(jnp.float32)
+            if ssm_state is not None
+            else jnp.zeros((B_, nheads, N, Pd), jnp.float32)
+        )
+        inputs = (
+            S_chunk.transpose(1, 0, 2, 3, 4),
+            total.transpose(1, 0, 2),
+            ch_heads.transpose(1, 0, 2, 3, 4),
+            cum.transpose(1, 0, 2, 3),
+        )
+        h_last, y_inter = jax.lax.scan(step, h0, inputs)
+        y_inter = y_inter.transpose(1, 0, 2, 3, 4).reshape(B_, T, nheads, Pd)
+        y = y_intra.reshape(B_, T, nheads, Pd) + y_inter
+        return y, h_last
+
+    y, h_last = chunked(xh, bh, ch, dt, da)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(B_, T, d_inner)
+    y = rms_norm(y, params["norm_scale"].astype(u.dtype), cfg.norm_eps)
+    y = ((y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)).astype(
+        u.dtype) @ params["wo"]).astype(u.dtype)
+    y = ctx.constraint(y, ctx.spec_resid())
+    return y, new_conv, h_last
+
+
+def mamba_decode(
+    params, cfg: ModelConfig, ctx: ShardCtx, u, conv_state, ssm_state
+):
+    """One-token decode.  u: (B, 1, D); conv_state (B, W-1, C);
+    ssm_state (B, H, N, P)."""
+    s, d_inner, nheads = _dims(cfg)
+    G, N, Pd, W = s.num_groups, s.state_dim, s.head_dim, s.conv_width
+    B_ = u.shape[0]
+    hpg = nheads // G
+
+    z, x, b, c, dt = _project(params, cfg, u)
+    xbc = jnp.concatenate([x, b, c], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window, params["conv_k"])
+    xbc = jax.nn.silu(out)[:, None, :]
+    new_conv = window[:, 1:, :]
+    x, b, c = jnp.split(xbc[:, 0], [d_inner, d_inner + G * N], axis=-1)
+
+    a = -jnp.exp(params["a_log"])
+    xh = x.reshape(B_, nheads, Pd).astype(jnp.float32)
+    bh = jnp.repeat(b.reshape(B_, G, N), hpg, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(c.reshape(B_, G, N), hpg, axis=1).astype(jnp.float32)
+    dt1 = dt[:, 0]  # (B, H)
+    decay = jnp.exp(dt1 * a[None, :])  # (B, H)
+    h = ssm_state.astype(jnp.float32)
+    h = decay[:, :, None, None] * h + jnp.einsum(
+        "bhs,bhp->bhsp", bh * dt1[..., None], xh
+    )
+    y = jnp.einsum("bhs,bhsp->bhp", ch, h)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_inner)
+    y = rms_norm(y, params["norm_scale"].astype(u.dtype), cfg.norm_eps)
+    y = ((y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)).astype(
+        u.dtype) @ params["wo"]).astype(u.dtype)
+    return y, new_conv, h

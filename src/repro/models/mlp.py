@@ -1,0 +1,50 @@
+"""Feed-forward variants: gated (SwiGLU/GeGLU) and plain (GELU, squared-ReLU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import ShardCtx
+from .layers import activation, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, use_bias: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype, scale=d_ff**-0.5),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    if use_bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def spec_mlp(ctx: ShardCtx, gated: bool, use_bias: bool):
+    s = {"w_in": P(ctx.fsdp, ctx.tp), "w_out": P(ctx.tp, ctx.fsdp)}
+    if gated:
+        s["w_gate"] = P(ctx.fsdp, ctx.tp)
+    if use_bias:
+        s["b_in"] = P(ctx.tp)
+        s["b_out"] = P(None)
+    return s
+
+
+def mlp(params, cfg: ModelConfig, ctx: ShardCtx, x: jax.Array) -> jax.Array:
+    act = activation(cfg.mlp_act)
+    h = x @ params["w_in"]
+    if "b_in" in params:
+        h = h + params["b_in"]
+    if "w_gate" in params:
+        h = act(h) * (x @ params["w_gate"])
+    else:
+        h = act(h)
+    out = h @ params["w_out"]
+    if "b_out" in params:
+        out = out + params["b_out"]
+    return ctx.constraint(out, ctx.spec_resid())

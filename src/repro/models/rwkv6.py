@@ -1,0 +1,241 @@
+"""RWKV6 "Finch" block: data-dependent decay linear attention + channel mix.
+
+Time-mixing maintains a per-head (head_size x head_size) wkv state with a
+*data-dependent* diagonal decay w_t (the Finch contribution), produced by a
+low-rank MLP; token-shift lerps are likewise data-dependent (DDLerp).
+
+The training path here is the faithful sequential `lax.scan` over T — the
+recurrence is the definition.  The scan is O(T) steps of tiny outer products,
+which on TPU is latency-bound; the chunked parallel form is implemented as a
+beyond-paper optimization in ``rwkv_block_chunked`` (EXPERIMENTS.md §Perf)
+and validated against the scan by tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import ShardCtx
+from .layers import dense_init
+
+MIX = ("w", "k", "v", "r", "g")
+
+
+def _dims(cfg: ModelConfig):
+    hs = cfg.rwkv.head_size
+    return hs, cfg.d_model // hs  # head_size, num rwkv heads
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    hs, H = _dims(cfg)
+    r = cfg.rwkv
+    ks = jax.random.split(key, 16)
+    p = {
+        # time-mix
+        "mu_x": jnp.full((D,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], D, D, dtype),
+        "wk": dense_init(ks[1], D, D, dtype),
+        "wv": dense_init(ks[2], D, D, dtype),
+        "wg": dense_init(ks[3], D, D, dtype),
+        "wo": dense_init(ks[4], D, D, dtype, scale=D**-0.5),
+        "w0": jnp.full((D,), -6.0, jnp.float32),  # decay bias (slow decay)
+        "wa": (jax.random.normal(ks[5], (D, r.decay_lora)) * 0.01).astype(dtype),
+        "wb": (jax.random.normal(ks[6], (r.decay_lora, D)) * 0.01).astype(dtype),
+        "bonus": jnp.zeros((H, hs), jnp.float32),  # "u"
+        "ln_scale": jnp.ones((D,), jnp.float32),
+        # channel-mix
+        "cm_mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "cm_wk": dense_init(ks[7], D, F, dtype),
+        "cm_wv": dense_init(ks[8], F, D, dtype, scale=F**-0.5),
+        "cm_wr": dense_init(ks[9], D, D, dtype),
+    }
+    # DDLerp low-rank mixers per r/k/v/g/w
+    for i, c in enumerate(MIX):
+        p[f"mu_{c}"] = jnp.full((D,), 0.5, jnp.float32)
+        p[f"ma_{c}"] = (
+            jax.random.normal(ks[10 + i], (D, cfg.rwkv.mix_lora)) * 0.01
+        ).astype(dtype)
+        p[f"mb_{c}"] = jnp.zeros((cfg.rwkv.mix_lora, D), dtype)
+    return p
+
+
+def spec_rwkv(cfg: ModelConfig, ctx: ShardCtx):
+    s = {
+        "mu_x": P(None),
+        "wr": P(ctx.fsdp, ctx.tp),
+        "wk": P(ctx.fsdp, ctx.tp),
+        "wv": P(ctx.fsdp, ctx.tp),
+        "wg": P(ctx.fsdp, ctx.tp),
+        "wo": P(ctx.tp, ctx.fsdp),
+        "w0": P(ctx.tp),
+        "wa": P(ctx.fsdp, None),
+        "wb": P(None, ctx.tp),
+        "bonus": P(ctx.tp, None),
+        "ln_scale": P(None),
+        "cm_mu_k": P(None),
+        "cm_mu_r": P(None),
+        "cm_wk": P(ctx.fsdp, ctx.tp),
+        "cm_wv": P(ctx.tp, ctx.fsdp),
+        "cm_wr": P(ctx.fsdp, ctx.tp),
+    }
+    for c in MIX:
+        s[f"mu_{c}"] = P(None)
+        s[f"ma_{c}"] = P(ctx.fsdp, None)
+        s[f"mb_{c}"] = P(None, ctx.tp)
+    return s
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent token-shift: one lerp per r/k/v/g/w channel set."""
+    dx = x_prev - x
+    xx = x + dx * params["mu_x"].astype(x.dtype)
+    outs = {}
+    for c in MIX:
+        adj = jnp.tanh(xx @ params[f"ma_{c}"]) @ params[f"mb_{c}"]
+        mix = params[f"mu_{c}"].astype(x.dtype) + adj
+        outs[c] = x + dx * mix
+    return outs
+
+
+def _decay(params, xw):
+    """Data-dependent per-channel decay in (0,1): exp(-exp(w))."""
+    w = params["w0"] + (jnp.tanh(xw @ params["wa"]) @ params["wb"]).astype(
+        jnp.float32
+    )
+    return jnp.exp(-jnp.exp(w))
+
+
+def _group_norm(x, scale, eps, H):
+    """Per-head layernorm over head_size (rwkv 'ln_x')."""
+    B, T, D = x.shape
+    xh = x.reshape(B, T, H, D // H).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, T, D) * scale).astype(x.dtype)
+
+
+def rwkv_time_mix(params, cfg: ModelConfig, x, x_prev_last, state):
+    """x: (B,T,D); x_prev_last: (B,D) carried shift; state: (B,H,hs,hs).
+
+    Returns (out, new_shift, new_state)."""
+    hs, H = _dims(cfg)
+    B, T, D = x.shape
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    m = _ddlerp(params, x, x_prev)
+    r = (m["r"] @ params["wr"]).reshape(B, T, H, hs).astype(jnp.float32)
+    k = (m["k"] @ params["wk"]).reshape(B, T, H, hs).astype(jnp.float32)
+    v = (m["v"] @ params["wv"]).reshape(B, T, H, hs).astype(jnp.float32)
+    g = m["g"] @ params["wg"]
+    w = _decay(params, m["w"]).reshape(B, T, H, hs)  # (0,1) decays
+    u = params["bonus"]  # (H, hs)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hs) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hs,hs)
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    inputs = tuple(
+        a.transpose(1, 0, 2, 3) for a in (r, k, v, w)
+    )  # (T,B,H,hs)
+    state_new, outs = jax.lax.scan(step, state.astype(jnp.float32), inputs)
+    y = outs.transpose(1, 0, 2, 3).reshape(B, T, D)
+    y = _group_norm(y.astype(x.dtype), params["ln_scale"], 64e-5, H)
+    y = (y * jax.nn.silu(g)) @ params["wo"]
+    return y.astype(x.dtype), x[:, -1], state_new
+
+
+def rwkv_channel_mix(params, cfg: ModelConfig, x, x_prev_last):
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * params["cm_mu_k"].astype(x.dtype)
+    xr = x + dx * params["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ params["cm_wk"]))
+    kv = k @ params["cm_wv"]
+    out = jax.nn.sigmoid(xr @ params["cm_wr"]) * kv
+    return out.astype(x.dtype), x[:, -1]
+
+
+def rwkv_time_mix_chunked(params, cfg: ModelConfig, x, x_prev_last, state,
+                          chunk: int = 128):
+    """Beyond-paper parallel form: process T in chunks; within a chunk the
+    wkv contribution is a masked matmul with cumulative-decay weights; the
+    state is propagated once per chunk.  Exactly equal to the scan (same
+    f32 math, validated by tests) but turns T tiny outer products into
+    T/chunk MXU matmuls."""
+    hs, H = _dims(cfg)
+    B, T, D = x.shape
+    Q = min(chunk, T)
+    if T % Q:
+        raise ValueError(f"T={T} % chunk={Q}")
+    nc = T // Q
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    m = _ddlerp(params, x, x_prev)
+    r = (m["r"] @ params["wr"]).reshape(B, T, H, hs).astype(jnp.float32)
+    k = (m["k"] @ params["wk"]).reshape(B, T, H, hs).astype(jnp.float32)
+    v = (m["v"] @ params["wv"]).reshape(B, T, H, hs).astype(jnp.float32)
+    g = m["g"] @ params["wg"]
+    w = _decay(params, m["w"]).reshape(B, T, H, hs)
+    u = params["bonus"]
+
+    # log decay, floored so the factorized exp(±cum) below stays in f32
+    # range (non-binding for trained decays: |lw| ~ 1e-2; documented
+    # deviation from the scan only for pathological w -> 0)
+    lw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-38)), -20.0 / Q)
+    rc = r.reshape(B, nc, Q, H, hs)
+    kc = k.reshape(B, nc, Q, H, hs)
+    vc = v.reshape(B, nc, Q, H, hs)
+    lwc = lw.reshape(B, nc, Q, H, hs)
+    cum = jnp.cumsum(lwc, axis=2)  # within-chunk cumulative log decay
+    total = cum[:, :, -1]  # (B,nc,H,hs)
+
+    # Key s contributes to query t>s with weight exp(cum[t-1]... the decay
+    # applies between s and t exclusive of s, inclusive of... recurrence:
+    # S_t = w_t S_{t-1} + k_t v_t ; out_t = r_t (S_{t-1} + u k_t v_t)
+    # => out_t = r_t u k_t v_t + sum_{s<t} r_t exp(sum_{i=s+1..t-1} lw_i) k_s v_s
+    # weight(s<t) = exp(cum[t-1] - cum[s])  (define cum[-1]=0 via shifted)
+    cshift = jnp.pad(cum[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))
+    # a[t] = exp(cshift[t]) r_t ; b[s] = exp(-cum[s]) k_s  -> a·b upper-safe
+    a = rc * jnp.exp(cshift)
+    b = kc * jnp.exp(-cum)
+    scores = jnp.einsum("bnqhs,bnkhs->bnhqk", a, b)  # (B,nc,H,Q(t),Q(s))
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)  # strictly s < t
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", scores, vc)
+    # bonus diagonal term: r_t·(u ⊙ k_t) v_t
+    y_intra = y_intra + (
+        (rc * u[None, None, None] * kc).sum(-1, keepdims=True) * vc
+    )
+
+    # chunk states
+    S_chunk = jnp.einsum(
+        "bnqhs,bnqhp->bnhsp", kc * jnp.exp(total[:, :, None] - cum), vc
+    )
+
+    def step(s, inp):
+        s_n, tot_n, a_n = inp
+        y_inter = jnp.einsum("bqhs,bhsp->bqhp", a_n, s)
+        s_next = jnp.exp(tot_n)[..., None] * s + s_n
+        return s_next, y_inter
+
+    h0 = state.astype(jnp.float32)
+    state_new, y_inter = jax.lax.scan(
+        step,
+        h0,
+        (
+            S_chunk.transpose(1, 0, 2, 3, 4),
+            total.transpose(1, 0, 2, 3),
+            a.transpose(1, 0, 2, 3, 4),
+        ),
+    )
+    y = (y_intra + y_inter.transpose(1, 0, 2, 3, 4)).reshape(B, T, D)
+    y = _group_norm(y.astype(x.dtype), params["ln_scale"], 64e-5, H)
+    y = (y * jax.nn.silu(g)) @ params["wo"]
+    return y.astype(x.dtype), x[:, -1], state_new

@@ -1,0 +1,140 @@
+"""Batched serving engine: slot-based continuous batching.
+
+A fixed number of decode slots share one jitted decode_step; requests are
+admitted into free slots (prompt prefilled token-by-token into the slot's
+region of the batched cache — per-slot prefill; full-batch prefill is the
+``prefill()`` path used when all slots start together).  Finished slots
+(EOS or max_tokens) free immediately and the scheduler backfills from the
+queue — decode never stalls for stragglers in the queue (continuous
+batching).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampler import SampleConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_tokens: int = 16
+    eos: int | None = None
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 256,
+        sample_cfg: SampleConfig = SampleConfig(temperature=0.0),
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.sample_cfg = sample_cfg
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = model.init_cache(slots, max_len)
+        self.active: list[Request | None] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._step = jax.jit(model.decode_step)
+        self._next_token = np.zeros((slots,), np.int32)
+
+    # ------------------------------------------------------------- plumbing
+    def add(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _reset_slot(self, s: int) -> None:
+        """Zero one slot's cache region (pos + per-slot state)."""
+        def zero_slot(leaf):
+            if leaf.ndim == 0:
+                return leaf
+            # slot (=batch) axis differs per leaf family; pos is (B,),
+            # stacked caches are (L, B, ...)
+            if leaf.shape[0] == self.slots:
+                return leaf.at[s].set(jnp.zeros_like(leaf[s]))
+            if leaf.ndim > 1 and leaf.shape[1] == self.slots:
+                return leaf.at[:, s].set(jnp.zeros_like(leaf[:, s]))
+            return leaf
+
+        self.cache = jax.tree.map(zero_slot, self.cache)
+
+    def _graft(self, s: int, cache1) -> None:
+        """Write a batch-1 cache into slot ``s`` of the batched cache."""
+        def graft(leaf, l1):
+            if leaf.ndim == 0:
+                return leaf
+            if leaf.shape[0] == self.slots:
+                return leaf.at[s].set(l1[0])
+            if leaf.ndim > 1 and leaf.shape[1] == self.slots:
+                return leaf.at[:, s].set(l1[:, 0])
+            return leaf
+
+        self.cache = jax.tree.map(graft, self.cache, cache1)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self._reset_slot(s)
+                if len(req.prompt) > 1:
+                    # prefill the prompt head in ONE forward on a standalone
+                    # batch-1 cache, then graft it into the slot — active
+                    # slots never see prefill steps (continuous batching)
+                    cache1 = self.model.init_cache(1, self.max_len)
+                    _, cache1 = jax.jit(self.model.prefill)(
+                        self.params,
+                        {"tokens": jnp.asarray(req.prompt[:-1])[None]},
+                        cache1,
+                    )
+                    self._graft(s, cache1)
+                self._next_token[s] = req.prompt[-1]
+                self.active[s] = req
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(self._next_token)
+        )
+        self.key, sub = jax.random.split(self.key)
+        toks = np.asarray(sample(logits, sub, self.sample_cfg))
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(toks[s])
+            req.out.append(tok)
+            self._next_token[s] = tok
+            if (req.eos is not None and tok == req.eos) or len(
+                req.out
+            ) >= req.max_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+        return sum(r is not None for r in self.active)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

@@ -1,0 +1,50 @@
+"""Batched token sampler: greedy / temperature / top-k / top-p.
+
+Top-k and top-p only need the *head* of the distribution ordered — the
+paper's "partial sorting is enough" observation applied to sampling.  On
+TPU the head selection is ``lax.top_k``; the full-vocab sort that top-p
+naively wants is replaced by top-k truncation (k = 64 default) + sort of
+the tiny head, the same partial-sort-then-finish structure as the
+switch/server split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleConfig:
+    temperature: float = 1.0
+    top_k: int = 0          # 0 = off
+    top_p: float = 1.0      # 1.0 = off
+    head: int = 64          # partial-sort head size for top-p
+
+
+def sample(
+    logits: jax.Array, key: jax.Array, cfg: SampleConfig
+) -> jax.Array:
+    """logits: (B, V) -> (B,) int32 samples."""
+    if cfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+
+    if cfg.top_k or cfg.top_p < 1.0:
+        k = cfg.top_k if cfg.top_k else cfg.head
+        k = min(k, logits.shape[-1])  # tiny vocabs
+        head_logits, head_idx = jax.lax.top_k(logits, k)  # partial sort
+        if cfg.top_p < 1.0:
+            probs = jax.nn.softmax(head_logits, axis=-1)
+            csum = jnp.cumsum(probs, axis=-1)
+            # keep the smallest prefix with mass >= top_p (always >= 1 tok)
+            cut = csum - probs >= cfg.top_p
+            head_logits = jnp.where(cut, -jnp.inf, head_logits)
+        choice = jax.random.categorical(key, head_logits, axis=-1)
+        return jnp.take_along_axis(
+            head_idx, choice[:, None], axis=-1
+        )[:, 0].astype(jnp.int32)
+
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

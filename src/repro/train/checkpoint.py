@@ -1,0 +1,165 @@
+"""Fault-tolerant checkpointing: atomic, mesh-agnostic, keep-last-k, async.
+
+Checkpoints are written as host-side ``.npz`` bundles of the *unsharded*
+pytree plus a JSON manifest (step, data-pipeline cursor, config fingerprint).
+Because the stored arrays carry no device layout, a checkpoint taken on a
+(16,16) mesh restores cleanly onto (2,16,16) or a single CPU device —
+the elastic-rescale path (DESIGN.md §8).
+
+Crash safety: writes go to ``<dir>/tmp.<step>`` and are renamed into place
+(rename is atomic on POSIX); partially-written checkpoints are never visible
+and are garbage-collected on the next save.  ``AsyncCheckpointer`` moves the
+serialize+write off the training thread with a bounded queue (staleness <= 1
+checkpoint), which is the straggler-friendly mode.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import queue
+import shutil
+import threading
+import uuid
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith("#") for k in node):
+            items = sorted(node.items(), key=lambda kv: int(kv[0][1:]))
+            return [fix(v) for _, v in items]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._gc_tmp()
+
+    def _gc_tmp(self) -> None:
+        for p in self.dir.glob("tmp.*"):
+            shutil.rmtree(p, ignore_errors=True)
+
+    def save(self, step: int, state: dict, extra: dict | None = None) -> None:
+        """state: pytree bundle, e.g. {"params":…, "opt":…, "data":…}."""
+        # unique tmp dir: concurrent saves of the same step cannot collide
+        tmp = self.dir / f"tmp.{step}.{uuid.uuid4().hex[:8]}"
+        final = self.dir / f"step_{step:010d}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        flat = _flatten(host_state)
+        # npz can't round-trip ml_dtypes (bfloat16 etc) — store a bit-view
+        # plus a dtype sidecar
+        dtypes = {}
+        packed = {}
+        for k, v in flat.items():
+            if v.dtype.kind == "V" or v.dtype.name not in np.sctypeDict:
+                dtypes[k] = v.dtype.name
+                packed[k] = v.view(np.uint16 if v.dtype.itemsize == 2
+                                   else np.uint8)
+            else:
+                packed[k] = v
+        np.savez(tmp / "state.npz", **packed)
+        manifest = {"step": int(step), "dtypes": dtypes, **(extra or {})}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._prune()
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    def all_steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+        )
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None) -> tuple[dict, dict]:
+        """Returns (state, manifest).  Raises FileNotFoundError if empty."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:010d}"
+        with np.load(path / "state.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        manifest = json.loads((path / "manifest.json").read_text())
+        import ml_dtypes  # ships with jax
+
+        for k, name in manifest.get("dtypes", {}).items():
+            flat[k] = flat[k].view(np.dtype(getattr(ml_dtypes, name)))
+        return _unflatten(flat), manifest
+
+
+class AsyncCheckpointer:
+    """Background writer with a bounded queue (drops to sync if saturated)."""
+
+    def __init__(self, mgr: CheckpointManager):
+        self.mgr = mgr
+        self.q: queue.Queue = queue.Queue(maxsize=1)
+        self.err: Exception | None = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            try:
+                self.mgr.save(*item)
+            except Exception as e:  # surfaced on next save/close
+                self.err = e
+
+    def save(self, step: int, state: dict, extra: dict | None = None) -> None:
+        if self.err:
+            raise self.err
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        try:
+            self.q.put_nowait((step, host, extra))
+        except queue.Full:
+            self.mgr.save(step, host, extra)  # backpressure: write inline
+
+    def close(self) -> None:
+        self.q.put(None)
+        self._t.join()
+        if self.err:
+            raise self.err

@@ -1,0 +1,90 @@
+"""Train-step builder: microbatched grad accumulation + sharded AdamW.
+
+``build_train_step(model, opt_cfg, microbatches)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with explicit in/out shardings.  The global batch is split into
+``microbatches`` slices scanned sequentially with per-layer remat inside, so
+live activation memory is one microbatch deep while gradients accumulate in
+fp32 at parameter sharding (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, apply_updates
+
+
+def build_train_step(
+    model,
+    opt_cfg: AdamWConfig,
+    microbatches: int = 1,
+    aux_weight: float = 0.01,
+    grad_compressor=None,
+    batch_constraint: Callable | None = None,
+    accum_dtype=jnp.float32,
+) -> Callable:
+    """``grad_compressor``: optional (grads -> grads) hook applied to the
+    accumulated gradient before the optimizer (int8 error-feedback
+    compression plugs in here; it carries its own residual state).
+    ``batch_constraint``: optional sharding-constraint fn applied to each
+    microbatch (keeps the dp sharding through the reshape)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, aux_weight=aux_weight)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            if batch_constraint is not None:
+                batch_c = batch_constraint(batch)
+            else:
+                batch_c = batch
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch_c
+            )
+        else:
+            # static microbatch split: (B, ...) -> (mb, B/mb, ...) scanned
+            # over axis 0 (keeps dp sharding on the per-microbatch batch dim)
+            stacked = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch,
+            )
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                if batch_constraint is not None:
+                    mb = batch_constraint(mb)
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), gacc, grads
+                )
+                return (gacc, lacc + loss), None
+
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (gz, 0.0), stacked)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        out_metrics = {"loss": loss, **opt_metrics}
+        for k, v in (metrics or {}).items():
+            out_metrics[k] = v
+        return params, opt_state, out_metrics
+
+    return train_step

@@ -1,0 +1,30 @@
+"""Distributed range sort (shard_map all_to_all fabric) — subprocess test.
+
+Runs in a subprocess so the fake-device XLA flag never leaks into this
+process (smoke tests and benches must see exactly 1 device).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_distributed_sort_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "drivers" / "dist_sort_driver.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "dist-sort-ok" in proc.stdout

@@ -1,0 +1,59 @@
+"""The loop-aware HLO analyzer must match hand-counted programs exactly."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from benchmarks.hlo_analysis import analyze_text
+
+
+def test_scan_of_matmuls_counts_loop_trips():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)
+    c = jax.jit(f).lower(x, ws).compile()
+    st = analyze_text(c.as_text())
+    want = 7 * 2 * 128**3
+    assert abs(st.flops - want) / want < 1e-6
+    assert any(t == 7 for _, t in st.loops)
+    # cost_analysis undercounts (documents why the analyzer exists)
+    ca = c.cost_analysis()
+    assert ca["flops"] < want
+
+
+def test_nested_loops_multiply():
+    def f(x, ws):
+        def outer(c, _):
+            def inner(c2, w):
+                return jnp.tanh(c2 @ w), None
+            c, _ = jax.lax.scan(inner, c, ws)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = jax.jit(f).lower(x, ws).compile()
+    st = analyze_text(c.as_text())
+    want = 3 * 5 * 2 * 64**3
+    assert abs(st.flops - want) / want < 1e-6
+
+
+def test_unrolled_matmul_no_loop():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    st = analyze_text(c.as_text())
+    want = 2 * 256 * 512 * 128
+    assert abs(st.flops - want) / want < 1e-6
+    assert not st.loops
+    # memory traffic at least the operands + result once
+    assert st.hbm_bytes >= (256 * 512 + 512 * 128 + 256 * 128) * 4

@@ -1,0 +1,74 @@
+"""Server-side natural k-way merge sort tests + the paper's complexity model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    merge_passes,
+    merge_sort,
+    merge_sort_reference,
+    merge_two,
+    marathon_streams,
+    server_sort,
+)
+from repro.core.runs import run_starts
+
+
+@given(
+    st.lists(st.integers(-1000, 1000), max_size=200),
+    st.lists(st.integers(-1000, 1000), max_size=200),
+)
+@settings(max_examples=100, deadline=None)
+def test_merge_two(a, b):
+    a = np.sort(np.asarray(a, dtype=np.int64))
+    b = np.sort(np.asarray(b, dtype=np.int64))
+    out = merge_two(a, b)
+    np.testing.assert_array_equal(out, np.sort(np.concatenate([a, b])))
+
+
+@given(
+    st.lists(st.integers(0, 10_000), max_size=500),
+    st.integers(min_value=2, max_value=12),
+)
+@settings(max_examples=100, deadline=None)
+def test_merge_sort_sorts(vals, k):
+    a = np.asarray(vals, dtype=np.int64)
+    out, passes = merge_sort(a, k=k)
+    np.testing.assert_array_equal(out, np.sort(a))
+    # pass count equals the ceil-log_k of the initial run count
+    assert passes == merge_passes(run_starts(a).size, k)
+
+
+@given(st.lists(st.integers(0, 100), max_size=60), st.integers(2, 5))
+@settings(max_examples=50, deadline=None)
+def test_reference_agrees(vals, k):
+    a = np.asarray(vals, dtype=np.int64)
+    np.testing.assert_array_equal(
+        merge_sort_reference(a, k=k), np.sort(a) if a.size else a
+    )
+
+
+@given(
+    st.lists(st.integers(0, 500), min_size=1, max_size=400),
+    st.integers(1, 5),
+    st.integers(1, 8),
+)
+@settings(max_examples=100, deadline=None)
+def test_end_to_end_switch_plus_server(vals, segs, length):
+    """The full paper pipeline: switch partial-sort -> server sort+concat."""
+    a = np.asarray(vals, dtype=np.int64)
+    streams, _ = marathon_streams(a, segs, length, 500)
+    out, passes = server_sort(streams, k=10)
+    np.testing.assert_array_equal(out, np.sort(a))
+
+
+def test_longer_runs_fewer_passes():
+    """The paper's core claim at the pass-count level: MergeMarathon emission
+    requires fewer merge passes than the raw stream."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 32768, size=50_000)
+    _, base_passes = merge_sort(a, k=10)
+    streams, _ = marathon_streams(a, 1, 64, 32767)
+    _, mm_passes = merge_sort(streams[0], k=10)
+    assert mm_passes < base_passes

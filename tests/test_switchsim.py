@@ -1,0 +1,159 @@
+"""Property tests for the faithful switch simulator vs the vectorized oracle.
+
+The central claim (marathon.py module docstring): Alg. 3's emitted per-segment
+stream equals sorting each consecutive segment_length-sized chunk of that
+segment's arrivals.  Hypothesis drives both implementations over arbitrary
+streams and switch geometries.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    RunStats,
+    Switch,
+    blockwise_sort,
+    marathon_flat,
+    marathon_streams,
+    run_lengths,
+    segment_of,
+    set_ranges,
+)
+
+geometries = st.tuples(
+    st.integers(min_value=1, max_value=7),   # segments
+    st.integers(min_value=1, max_value=9),   # segment length
+    st.integers(min_value=7, max_value=200), # max value
+)
+
+
+@st.composite
+def switch_case(draw):
+    segs, length, maxv = draw(geometries)
+    n = draw(st.integers(min_value=0, max_value=300))
+    vals = draw(
+        st.lists(
+            st.integers(min_value=0, max_value=maxv), min_size=n, max_size=n
+        )
+    )
+    return segs, length, maxv, np.asarray(vals, dtype=np.int64)
+
+
+@given(switch_case())
+@settings(max_examples=200, deadline=None)
+def test_faithful_equals_blockwise_oracle(case):
+    segs, length, maxv, vals = case
+    sw = Switch(segs, length, maxv)
+    out_v, out_s = sw.apply(vals)
+    assert out_v.size == vals.size  # permutation: nothing lost or invented
+    # per-segment emitted stream == blockwise-sorted arrivals
+    ranges = set_ranges(maxv, segs)
+    arr_seg = segment_of(vals, ranges) if vals.size else np.zeros(0, np.int64)
+    for s in range(segs):
+        emitted = out_v[out_s == s]
+        arrivals = vals[arr_seg == s]
+        expect = blockwise_sort(arrivals, length)
+        np.testing.assert_array_equal(emitted, expect)
+
+
+@given(switch_case())
+@settings(max_examples=100, deadline=None)
+def test_flat_emission_matches_faithful(case):
+    segs, length, maxv, vals = case
+    sw = Switch(segs, length, maxv)
+    out_v, out_s = sw.apply(vals)
+    fv, fs = marathon_flat(vals, segs, length, maxv)
+    np.testing.assert_array_equal(out_v, fv)
+    np.testing.assert_array_equal(out_s, fs)
+
+
+@given(switch_case())
+@settings(max_examples=100, deadline=None)
+def test_output_is_permutation(case):
+    segs, length, maxv, vals = case
+    out_v, _ = Switch(segs, length, maxv).apply(vals)
+    np.testing.assert_array_equal(np.sort(out_v), np.sort(vals))
+
+
+@given(switch_case())
+@settings(max_examples=100, deadline=None)
+def test_emitted_runs_at_least_segment_length(case):
+    """Every maximal run in a segment's emission is >= L, except possibly
+    the trailing flush remainder (and degenerate short streams)."""
+    segs, length, maxv, vals = case
+    streams, _ = marathon_streams(vals, segs, length, maxv)
+    for sub in streams:
+        lens = run_lengths(sub)
+        if lens.size <= 1:
+            continue
+        # all runs except the last must be >= L (blocks of size L are sorted;
+        # maximal runs can only merge blocks, never split them)
+        assert (lens[:-1] >= length).all()
+
+
+@given(switch_case())
+@settings(max_examples=100, deadline=None)
+def test_range_concat_is_sorted(case):
+    """Sorting each segment and concatenating by id gives the global sort —
+    the property that lets the server skip the cross-segment merge."""
+    segs, length, maxv, vals = case
+    streams, _ = marathon_streams(vals, segs, length, maxv)
+    cat = np.concatenate([np.sort(s) for s in streams]) if streams else vals
+    np.testing.assert_array_equal(cat, np.sort(vals))
+
+
+def test_paper_figure9_not_full_insert():
+    """Fig. 9: insertion into a partially-filled segment right-shifts."""
+    sw = Switch(1, 6, 100)
+    for v in [3, 9, 12, 17]:
+        assert sw.insert(v) is None
+    assert sw.insert(10) is None  # belongs at index 3
+    np.testing.assert_array_equal(sw.segments[0].stages[:5], [3, 9, 10, 12, 17])
+
+
+def test_paper_figure10_full_insert_evicts_older_head():
+    """Fig. 10: full segment evicts the older run's head; the new value joins
+    the younger run."""
+    sw = Switch(1, 4, 100)
+    for v in [8, 3, 12, 5]:
+        sw.insert(v)
+    # stages sorted: [3,5,8,12]; full. Insert 7: evict 3 (older head),
+    # younger run starts with 7 at index 0.
+    out = sw.insert(7)
+    assert out == (0, 3)
+    # Insert 4: evict 5 (older head at pi=1); 4 < 7 so 4 inserted before 7.
+    out = sw.insert(4)
+    assert out == (0, 5)
+    np.testing.assert_array_equal(sw.segments[0].stages[:2], [4, 7])
+
+
+def test_flush_two_passes_preserve_run_order():
+    sw = Switch(1, 4, 100)
+    for v in [8, 3, 12, 5, 7, 4]:
+        sw.insert(v)
+    flushed = [v for _, v in sw.flush()]
+    # Older run remainder ascending first, then younger run ascending.
+    assert flushed == [8, 12, 4, 7]
+
+
+def test_segment_ids_cover_ranges():
+    ranges = set_ranges(99, 4)
+    assert ranges[0, 0] == 0 and ranges[-1, 1] == 100
+    vals = np.arange(100)
+    seg = segment_of(vals, ranges)
+    # contiguous, non-overlapping, complete cover
+    assert (np.diff(seg) >= 0).all()
+    np.testing.assert_array_equal(np.unique(seg), np.arange(4))
+
+
+def test_set_ranges_remainder_spread():
+    # domain 103 over 4 segments: q=25 r=3 -> widths [26,26,26,25]
+    r = set_ranges(102, 4)
+    widths = r[:, 1] - r[:, 0]
+    np.testing.assert_array_equal(widths, [26, 26, 26, 25])
+
+
+def test_runstats_basic():
+    s = RunStats.of(np.asarray([1, 2, 3, 1, 2, 0]))
+    assert s.num_runs == 3 and s.mean_len == 2.0

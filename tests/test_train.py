@@ -1,0 +1,208 @@
+"""Training substrate: optimizer, microbatching, checkpoint/restart (fault
+tolerance), gradient compression, data pipeline, straggler monitor."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_smoke_config
+from repro.data.packing import padding_waste, replacement_selection_order
+from repro.data.tokens import TokenPipeline
+from repro.distributed.collectives import (
+    StragglerMonitor,
+    compress_decompress,
+    make_int8_compressor,
+)
+from repro.distributed.sharding import local_ctx
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig, init_opt_state, lr_schedule
+from repro.train.train_step import build_train_step
+
+
+def _setup(arch="mistral-nemo-12b", **opt_kw):
+    cfg = get_smoke_config(arch)
+    ctx = local_ctx()
+    m = models.build(cfg, ctx)
+    params = m.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100, **opt_kw)
+    opt = init_opt_state(params, opt_cfg)
+    return cfg, m, params, opt_cfg, opt
+
+
+def test_loss_decreases_on_learnable_data():
+    cfg, m, params, opt_cfg, opt = _setup()
+    pipe = TokenPipeline(cfg.vocab_size, batch=4, seq=32, seed=0)
+    step = jax.jit(build_train_step(m, opt_cfg))
+    losses = []
+    for _ in range(30):
+        batch = jax.tree.map(jnp.asarray, pipe.next_batch())
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_microbatched_equals_full_batch_grads():
+    cfg, m, params, opt_cfg, opt = _setup()
+    pipe = TokenPipeline(cfg.vocab_size, batch=4, seq=16, seed=1)
+    batch = jax.tree.map(jnp.asarray, pipe.next_batch())
+    s1 = jax.jit(build_train_step(m, opt_cfg, microbatches=1))
+    s4 = jax.jit(build_train_step(m, opt_cfg, microbatches=4))
+    p1, o1, m1 = s1(params, opt, batch)
+    p4, o4, m4 = s4(params, opt, batch)
+    # same data, same update (microbatch mean == full-batch mean for mean CE)
+    np.testing.assert_allclose(
+        float(m1["loss"]), float(m4["loss"]), rtol=1e-3
+    )
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-3, rtol=2e-2,
+        )
+
+
+def test_checkpoint_restart_continuity(tmp_path):
+    """Kill training at step 10, restart from checkpoint, verify the loss
+    path equals an uninterrupted run (bitwise data cursor + params)."""
+    cfg, m, params, opt_cfg, opt = _setup()
+    step = jax.jit(build_train_step(m, opt_cfg))
+    mgr = CheckpointManager(tmp_path / "ckpt", keep=2)
+
+    def run(params, opt, pipe, n, record):
+        for _ in range(n):
+            batch = jax.tree.map(jnp.asarray, pipe.next_batch())
+            params, opt, metrics = step(params, opt, batch)
+            record.append(float(metrics["loss"]))
+        return params, opt
+
+    # uninterrupted reference
+    pipe = TokenPipeline(cfg.vocab_size, 4, 32, seed=7)
+    ref = []
+    rp, ro = run(params, opt, pipe, 20, ref)
+
+    # interrupted run: save at 10, "crash", restore, continue
+    pipe = TokenPipeline(cfg.vocab_size, 4, 32, seed=7)
+    got = []
+    p2, o2 = run(params, opt, pipe, 10, got)
+    mgr.save(10, {"params": p2, "opt": o2, "data": pipe.state()})
+    del p2, o2, pipe  # crash
+
+    state, manifest = mgr.restore()
+    assert manifest["step"] == 10
+    pipe = TokenPipeline.restore(cfg.vocab_size, 4, 32, state["data"])
+    p3 = jax.tree.map(jnp.asarray, state["params"])
+    o3 = jax.tree.map(jnp.asarray, state["opt"])
+    o3["step"] = jnp.asarray(o3["step"])
+    p3, o3 = run(p3, o3, pipe, 10, got)
+    np.testing.assert_allclose(got, ref, rtol=1e-4)
+    # final params identical too
+    for a, b in zip(jax.tree.leaves(rp), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-2,
+            atol=1e-5,
+        )
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, {"x": np.arange(3) * s})
+    assert mgr.all_steps() == [2, 3]  # pruned to keep-last-2
+    # simulate a crash mid-write: stray tmp dir is GC'd on next manager
+    (tmp_path / "tmp.99").mkdir()
+    mgr2 = CheckpointManager(tmp_path, keep=2)
+    assert not list(tmp_path.glob("tmp.*"))
+    state, man = mgr2.restore()
+    np.testing.assert_array_equal(state["x"], np.arange(3) * 3)
+
+
+def test_checkpoint_elastic_reshape(tmp_path):
+    """Checkpoints are mesh-agnostic: restore works regardless of the mesh
+    the arrays were sharded on (host-side npz)."""
+    mgr = CheckpointManager(tmp_path)
+    tree = {"a": {"b": jnp.ones((4, 4)), "c": [jnp.zeros(2), jnp.ones(3)]}}
+    mgr.save(5, tree)
+    state, _ = mgr.restore(5)
+    assert state["a"]["c"][1].shape == (3,)
+    np.testing.assert_array_equal(state["a"]["b"], np.ones((4, 4)))
+
+
+def test_int8_error_feedback_unbiased():
+    """Error feedback: the *accumulated* compressed signal tracks the true
+    signal even though each round is quantized."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)) * 1e-3)
+    r = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(50):
+        d, r = compress_decompress(g, r)
+        total = total + d
+    np.testing.assert_allclose(
+        np.asarray(total), np.asarray(g) * 50, rtol=0.02, atol=1e-4
+    )
+
+
+def test_compressed_training_converges():
+    cfg, m, params, opt_cfg, opt = _setup()
+    ctx = local_ctx()
+    compress, init_res = make_int8_compressor(ctx)
+    pipe = TokenPipeline(cfg.vocab_size, 4, 32, seed=0)
+
+    res = {"r": None}
+
+    def hook(grads):
+        if res["r"] is None:
+            res["r"] = init_res(grads)
+        g, res["r"] = compress(grads, res["r"])
+        return g
+
+    step = build_train_step(m, opt_cfg, grad_compressor=hook)
+    losses = []
+    for _ in range(30):
+        batch = jax.tree.map(jnp.asarray, pipe.next_batch())
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] == 0.0 and abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] == pytest.approx(0.1, rel=1e-3)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_pipeline_resumes_deterministically():
+    p1 = TokenPipeline(100, 2, 8, seed=3)
+    b1 = [p1.next_batch() for _ in range(5)]
+    p2 = TokenPipeline.restore(100, 2, 8, {"seed": 3, "step": 3})
+    np.testing.assert_array_equal(p2.next_batch()["tokens"], b1[3]["tokens"])
+
+
+def test_replacement_selection_packing_reduces_padding():
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(16, 2048, size=4096).tolist()
+    order = replacement_selection_order(lengths, buffer=256)
+    assert sorted(order) == list(range(len(lengths)))  # permutation
+    w_naive = padding_waste(lengths, batch=32)
+    w_packed = padding_waste([lengths[i] for i in order], batch=32)
+    assert w_packed < 0.5 * w_naive, (w_naive, w_packed)
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(window=20, threshold=3.0)
+    import time
+
+    for _ in range(10):
+        mon.start()
+        time.sleep(0.002)
+        assert mon.stop() is False or True  # warmup, no assertion
+    mon.start()
+    time.sleep(0.08)
+    assert mon.stop() is True
+    assert mon.summary()["p95_s"] >= mon.summary()["median_s"]
