@@ -1,0 +1,147 @@
+"""Dataplane benchmark: switch-assisted vs plain streaming sort per topology.
+
+Extends ``benchmarks/run.py`` (which times the batch server on in-memory
+arrays) to the packetized datapath: storage flows → switch fabric →
+streaming server.  For each topology × trace it reports
+
+    net_<topology>_<trace>,server_us,reduction=...;passes=...
+
+where ``reduction`` compares the streaming server's time consuming the
+switch-processed stream against the same server consuming the raw packet
+stream (the paper's metric: the switch is in-network, its work is free to
+the server).  The ``single`` topology is the paper's Fig. 12-14 setup and
+should land within noise of ``benchmarks/run.py``'s reduction for the same
+(segments, length) — printed side by side as ``batch_reduction`` for the
+comparison.
+
+Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--faithful-check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import marathon_streams, merge_sort, server_sort
+from repro.data import TRACES, trace_max_value
+from repro.net import plain_stream_sort, run_pipeline
+
+K = 10
+TOPOLOGIES = [
+    ("single", {}),
+    ("leaf_spine", {"num_leaves": 4}),
+    ("tree", {"branching": 2, "height": 3}),
+]
+
+
+def _time(fn, repeats: int):
+    times, out = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.mean(times)), out
+
+
+def batch_reduction(trace, maxv, segs, length, repeats) -> float:
+    """run.py's metric for the same geometry: batch server, no packets."""
+    t_base, (out, _) = _time(lambda: merge_sort(trace, k=K), repeats)
+    np.testing.assert_array_equal(out, np.sort(trace))
+    streams, _ = marathon_streams(trace, segs, length, maxv)
+    t_mm, (out, _) = _time(lambda: server_sort(streams, k=K), repeats)
+    np.testing.assert_array_equal(out, np.sort(trace))
+    return 1 - t_mm / t_base
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=400_000)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--segments", type=int, default=16)
+    ap.add_argument("--length", type=int, default=64)
+    ap.add_argument("--payload", type=int, default=256)
+    ap.add_argument("--quick", action="store_true", help="100k values, 1 repeat")
+    ap.add_argument(
+        "--faithful-check",
+        action="store_true",
+        help="also run the element-at-a-time switch on a small slice",
+    )
+    args = ap.parse_args()
+    n, repeats = (100_000, 1) if args.quick else (args.n, args.repeats)
+    segs, length = args.segments, args.length
+
+    def emit(name: str, us: float, derived: str) -> None:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    print(
+        f"# net_bench n={n} repeats={repeats} segments={segs} "
+        f"length={length} payload={args.payload} k={K}",
+        flush=True,
+    )
+    for trace_name, gen in TRACES.items():
+        trace = gen(n)
+        maxv = trace_max_value(trace_name)
+
+        # Baseline: server-only seconds (excludes packetization — the paper's
+        # metric charges the server, not the network).
+        plain_times = []
+        for _ in range(repeats):
+            out, plain_passes, secs = plain_stream_sort(trace, args.payload, k=K)
+            plain_times.append(secs)
+        np.testing.assert_array_equal(out, np.sort(trace))
+        t_plain = float(np.mean(plain_times))
+        emit(
+            f"net_plain_{trace_name}",
+            t_plain * 1e6,
+            f"passes={plain_passes[0]}",
+        )
+
+        batch_red = batch_reduction(trace, maxv, segs, length, repeats)
+
+        for topo, topo_kw in TOPOLOGIES:
+            server_times = []
+            for _ in range(repeats):
+                res = run_pipeline(
+                    trace,
+                    topology=topo,
+                    num_segments=segs,
+                    segment_length=length,
+                    max_value=maxv,
+                    payload_size=args.payload,
+                    num_flows=8,
+                    k=K,
+                    **topo_kw,
+                )
+                server_times.append(res.server_seconds)
+            t_server = float(np.mean(server_times))
+            np.testing.assert_array_equal(res.output, np.sort(trace))
+            red = 1 - t_server / t_plain
+            derived = (
+                f"reduction={red:.3f};passes={max(res.passes)};"
+                f"hops={len(res.hop_stats)};"
+                f"imbalance={res.hop_stats[-1].load_imbalance:.2f}"
+            )
+            if topo == "single":
+                derived += f";batch_reduction={batch_red:.3f}"
+            emit(f"net_{topo}_{trace_name}", t_server * 1e6, derived)
+
+        if args.faithful_check:
+            small = trace[:4000]
+            rf = run_pipeline(
+                small, topology="single", faithful=True,
+                num_segments=segs, segment_length=length, max_value=maxv,
+                payload_size=args.payload, verify=True,
+            )
+            emit(
+                f"net_faithful_{trace_name}", 0.0,
+                f"ok_n={small.size};passes={max(rf.passes)}",
+            )
+
+
+if __name__ == "__main__":
+    main()

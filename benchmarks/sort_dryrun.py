@@ -29,6 +29,8 @@ from repro.launch.mesh import make_production_mesh
 
 import functools
 
+from repro.distributed.compat import shard_map as compat_shard_map
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -51,7 +53,7 @@ def main() -> None:
         capacity=capacity,
         presort_block=args.presort_block,
     )
-    shmapped = jax.shard_map(
+    shmapped = compat_shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=(P(axis), P(axis), P(axis)),

@@ -24,15 +24,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributed import gather_sorted, make_splitters, sort_sharded
+from repro.distributed.compat import make_mesh
 from repro.core.runs import RunStats
 from repro.data import network_trace
 
 
 def main() -> None:
     D = 8
-    mesh = jax.make_mesh(
-        (D,), ("segments",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_mesh((D,), ("segments",))
     x = network_trace(D * 131_072).astype(np.int32)
     print(f"sorting {x.size} values across {D} devices "
           f"({RunStats.of(x).num_runs} runs in input)")

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from ..distributed.compat import shard_map
 
 
 def blockwise_sort_jax(x: jax.Array, block: int) -> jax.Array:
@@ -118,7 +119,7 @@ def sort_sharded(
         capacity=capacity,
         presort_block=presort_block,
     )
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis_name), P()),

@@ -56,6 +56,7 @@ def marathon_streams(
     segment_length: int,
     max_value: int,
     ranges: np.ndarray | None = None,
+    block_sort=None,
 ) -> tuple[list[np.ndarray], np.ndarray]:
     """Run MergeMarathon over a stream; return per-segment emitted streams.
 
@@ -67,11 +68,13 @@ def marathon_streams(
     values = np.asarray(values, dtype=np.int64)
     if ranges is None:
         ranges = set_ranges(max_value, num_segments)
+    if block_sort is None:
+        block_sort = blockwise_sort
     seg = segment_of(values, ranges)
     streams = []
     for s in range(num_segments):
         sub = values[seg == s]
-        streams.append(blockwise_sort(sub, segment_length))
+        streams.append(block_sort(sub, segment_length))
     return streams, ranges
 
 
@@ -81,6 +84,7 @@ def marathon_flat(
     segment_length: int,
     max_value: int,
     ranges: np.ndarray | None = None,
+    block_sort=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Emission-ordered (value, segment_id) stream, matching the faithful
     simulator's wire order exactly.
@@ -92,12 +96,14 @@ def marathon_flat(
     values = np.asarray(values, dtype=np.int64)
     if ranges is None:
         ranges = set_ranges(max_value, num_segments)
+    if block_sort is None:
+        block_sort = blockwise_sort
     seg = segment_of(values, ranges)
     L = segment_length
 
     streams = []
     for s in range(num_segments):
-        streams.append(blockwise_sort(values[seg == s], L))
+        streams.append(block_sort(values[seg == s], L))
 
     # Vectorized rank-within-segment for every arrival.
     order = np.argsort(seg, kind="stable")

@@ -43,9 +43,8 @@ def merge_two(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return out
 
 
-def _merge_set(arr: np.ndarray, starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
-    """Merge the runs arr[starts[i]:ends[i]] (each sorted) into one run."""
-    runs = [arr[s:e] for s, e in zip(starts, ends)]
+def merge_runs(runs: list[np.ndarray]) -> np.ndarray:
+    """Merge sorted runs into one via a tournament of two-way merges."""
     while len(runs) > 1:
         nxt = []
         for i in range(0, len(runs) - 1, 2):
@@ -54,6 +53,11 @@ def _merge_set(arr: np.ndarray, starts: np.ndarray, ends: np.ndarray) -> np.ndar
             nxt.append(runs[-1])
         runs = nxt
     return runs[0]
+
+
+def _merge_set(arr: np.ndarray, starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Merge the runs arr[starts[i]:ends[i]] (each sorted) into one run."""
+    return merge_runs([arr[s:e] for s, e in zip(starts, ends)])
 
 
 def merge_sort(a: np.ndarray, k: int = 10) -> tuple[np.ndarray, int]:

@@ -59,19 +59,35 @@ def quantile_ranges(
     skew) are de-duplicated by widening to the next representable key, so the
     ranges remain strictly increasing and cover [0, max_value].
     """
+    if num_segments <= 0:
+        raise ValueError("num_segments must be positive")
+    if num_segments > max_value + 1:
+        raise ValueError(
+            f"more segments ({num_segments}) than domain values ({max_value + 1})"
+        )
+    need = num_segments - 1
     qs = np.quantile(np.asarray(sample), np.linspace(0, 1, num_segments + 1)[1:-1])
     splits = np.unique(np.floor(qs).astype(np.int64))
     # Strictly increasing interior splitters within (0, max_value+1).
-    splits = splits[(splits > 0) & (splits <= max_value)]
-    # Pad back to num_segments-1 splitters by spreading the leftover width.
-    if len(splits) < num_segments - 1:
-        missing = num_segments - 1 - len(splits)
-        candidates = np.setdiff1d(
-            np.linspace(1, max_value, num_segments + missing, dtype=np.int64),
+    splits = splits[(splits > 0) & (splits <= max_value)][:need]
+    # Pad back to exactly num_segments-1 splitters by spreading the leftover
+    # width.  A cheap evenly-spaced candidate pool suffices when the domain is
+    # much larger than the deficit; materializing the full domain is the
+    # fallback (only reachable when the domain is small, so it stays cheap).
+    missing = need - len(splits)
+    if missing > 0:
+        pool = np.setdiff1d(
+            np.unique(np.linspace(1, max_value, min(max_value, 4 * need)).astype(np.int64)),
             splits,
         )
-        splits = np.sort(np.concatenate([splits, candidates[:missing]]))
-        splits = np.unique(splits)[: num_segments - 1]
+        if pool.size < missing:
+            pool = np.setdiff1d(np.arange(1, max_value + 1, dtype=np.int64), splits)
+        # Evenly-spread distinct picks: floor(i * |pool| / missing) is
+        # strictly increasing because |pool| >= missing (feasibility guard).
+        take = (np.arange(missing) * pool.size) // missing
+        splits = np.sort(np.concatenate([splits, pool[take]]))
     lo = np.concatenate([[0], splits])
     hi = np.concatenate([splits, [max_value + 1]])
-    return np.stack([lo, hi], axis=1).astype(np.int64)
+    out = np.stack([lo, hi], axis=1).astype(np.int64)
+    assert out.shape == (num_segments, 2)
+    return out

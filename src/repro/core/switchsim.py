@@ -121,11 +121,23 @@ class Switch:
     number_of_segments: int
     segment_length: int
     max_value: int
+    # Control-plane override: a topology's control plane may dictate ranges
+    # (e.g. quantile splitters) instead of the default equal-width SetRanges.
+    # compare=False: ndarray fields would make the generated __eq__ raise.
+    ranges: np.ndarray | None = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self) -> None:
         # SetRanges runs on the control plane (the paper: division is not
         # available in the data plane; ranges are dictated by the server).
-        self.ranges = set_ranges(self.max_value, self.number_of_segments)
+        if self.ranges is None:
+            self.ranges = set_ranges(self.max_value, self.number_of_segments)
+        else:
+            self.ranges = np.asarray(self.ranges, dtype=np.int64)
+            if self.ranges.shape != (self.number_of_segments, 2):
+                raise ValueError(
+                    f"dictated ranges shape {self.ranges.shape} != "
+                    f"({self.number_of_segments}, 2)"
+                )
         self.segments = [
             Segment(int(lo), int(hi), self.segment_length)
             for lo, hi in self.ranges

@@ -1,0 +1,49 @@
+"""jax version adapters for the small API surface this repo depends on.
+
+The repo targets the modern API (``jax.shard_map``, ``jax.make_mesh`` with
+``axis_types``, the VMA checker).  Older jax (< 0.5) ships the same
+functionality under different names:
+
+* ``jax.shard_map``            → ``jax.experimental.shard_map.shard_map``
+* ``check_vma=``               → ``check_rep=`` — but the old replication
+  checker lacks rules for several collectives we use (``all_to_all``,
+  scanned ``psum``), which is why the new API reworked it; on the fallback
+  path it is disabled wholesale rather than half-enforced.
+* ``axis_types=(AxisType.Auto, ...)`` → implicit (auto was the only mode).
+
+Every module that touches these goes through this shim so the whole repo
+runs unchanged on either jax generation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+if not _HAS_NEW_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax; the experimental one on old jax."""
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    return _legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)

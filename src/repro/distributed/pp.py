@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+from .compat import shard_map
 
 
 def gpipe(
@@ -69,7 +70,7 @@ def gpipe(
         # replicate the last stage's outputs to all stages
         return jax.lax.psum(outs, axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(

@@ -18,6 +18,7 @@ import dataclasses
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from .compat import make_mesh, shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,7 +97,7 @@ def fsdp_gather(ctx: ShardCtx, tree, spec_tree):
             return x
         dim = list(spec).index(ctx.fsdp)
         out_spec = P(*[None if s == ctx.fsdp else s for s in spec])
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda v: jax.lax.all_gather(v, ctx.fsdp, axis=dim, tiled=True),
             mesh=ctx.mesh,
             in_specs=spec,
@@ -115,10 +116,7 @@ def fsdp_gather(ctx: ShardCtx, tree, spec_tree):
 def local_ctx() -> ShardCtx:
     """1-device (1,1) mesh for unit/smoke tests — same code paths (shard_map,
     psum, all_to_all) as the production mesh, trivially sized."""
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_mesh((1, 1), ("data", "model"))
     return ShardCtx(mesh=mesh, tp="model", fsdp=None, dp=("data",))
 
 

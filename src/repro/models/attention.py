@@ -19,6 +19,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..distributed.sharding import ShardCtx
 from .layers import apply_rope, dense_init
+from ..distributed.compat import shard_map
 
 
 def init_attn(key, cfg: ModelConfig, dtype):
@@ -390,7 +391,7 @@ def decode_attention(
 
     # shard_map can't take None leaves; close over cross-case instead
     if knew is None:
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda q_, kc, vc, p_: body(q_, kc, vc, p_, None, None),
             mesh=ctx.mesh,
             in_specs=tuple(in_specs[:4]),
@@ -398,7 +399,7 @@ def decode_attention(
         )
         out, kc, vc = fn(q, kcache, vcache, pos)
     else:
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             mesh=ctx.mesh,
             in_specs=tuple(in_specs),

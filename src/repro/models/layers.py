@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..distributed.sharding import ShardCtx
+from ..distributed.compat import shard_map
 
 
 def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
@@ -90,7 +91,7 @@ def embed_tokens(params, tokens: jax.Array, ctx: ShardCtx | None = None
         rows = jnp.where(ok[..., None], rows, 0)
         return jax.lax.psum(rows, ctx.tp)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(ctx.tp, None), P(dpspec, *trail)),
         out_specs=P(dpspec, *trail, None),

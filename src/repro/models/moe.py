@@ -28,6 +28,7 @@ from ..configs.base import ModelConfig, MoEConfig
 from ..distributed.sharding import ShardCtx
 from .layers import activation, dense_init
 from .mlp import init_mlp, mlp, spec_mlp
+from ..distributed.compat import shard_map
 
 
 def padded_experts(num_experts: int, multiple: int = 16) -> int:
@@ -303,7 +304,7 @@ def moe_layer_a2a(
     allax = (tuple(ctx.dp) + (ctx.tp,)) if ctx.dp else (ctx.tp,)
     sspec = P(allax)
     if w_gate is None:
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda x_, wi, wo, router: wrapped(x_, wi, None, wo, router),
             mesh=ctx.mesh,
             in_specs=(xf_spec, wspec, wspec, P(None, None)),
@@ -313,7 +314,7 @@ def moe_layer_a2a(
             x, params["w_in"], params["w_out"], params["router"]
         )
     else:
-        fn = jax.shard_map(
+        fn = shard_map(
             wrapped,
             mesh=ctx.mesh,
             in_specs=(xf_spec, wspec, wspec, wspec, P(None, None)),
@@ -375,7 +376,7 @@ def moe_layer(
     )
     wspec = P(ctx.tp, None, None)
     if w_gate is None:
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda a, b, c, wi, wo: body(a, b, c, wi, None, wo),
             mesh=ctx.mesh,
             in_specs=(P(dpspec, None), P(dpspec, None), P(dpspec, None),
@@ -384,7 +385,7 @@ def moe_layer(
         )
         out, dropped = fn(xf, topk_idx, topk_p, params["w_in"], params["w_out"])
     else:
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             mesh=ctx.mesh,
             in_specs=(P(dpspec, None), P(dpspec, None), P(dpspec, None),

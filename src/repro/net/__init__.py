@@ -1,0 +1,62 @@
+"""repro.net — the in-network sort dataplane (paper Figs. 1–5).
+
+Models the path the data actually takes: storage servers emit fixed-size
+packets (:mod:`packet`), an arrival model interleaves concurrent flows
+(:mod:`flow`), one or more programmable switches partially sort in flight
+(:mod:`topology`), and a streaming compute server overlaps its k-way merge
+with arrival (:mod:`server`).  :mod:`pipeline` wires it end to end.
+"""
+
+from .flow import INTERLEAVES, Flow, interleave, split_flows
+from .packet import (
+    DEFAULT_PAYLOAD,
+    UNTAGGED,
+    Packet,
+    depacketize,
+    packetize,
+    segment_streams,
+)
+from .pipeline import (
+    PipelineResult,
+    jitter_delivery,
+    plain_stream_sort,
+    run_pipeline,
+)
+from .server import StreamingServer, stream_sort
+from .topology import (
+    TOPOLOGIES,
+    AggregationTree,
+    ControlPlane,
+    HopStats,
+    LeafSpine,
+    SingleSwitch,
+    SwitchHop,
+    make_topology,
+)
+
+__all__ = [
+    "INTERLEAVES",
+    "Flow",
+    "interleave",
+    "split_flows",
+    "DEFAULT_PAYLOAD",
+    "UNTAGGED",
+    "Packet",
+    "depacketize",
+    "packetize",
+    "segment_streams",
+    "PipelineResult",
+    "jitter_delivery",
+    "plain_stream_sort",
+    "run_pipeline",
+    "StreamingServer",
+    "stream_sort",
+    "TOPOLOGIES",
+    "AggregationTree",
+    "ControlPlane",
+    "HopStats",
+    "LeafSpine",
+    "SingleSwitch",
+    "SwitchHop",
+    "make_topology",
+]

@@ -1,0 +1,123 @@
+"""Flows: multiple storage servers feeding one switch, with arrival models.
+
+The paper's testbed has storage servers streaming to the switch concurrently
+(Fig. 1); the order in which their packets hit the ingress pipeline is a
+property of the network, not of the data.  MergeMarathon's guarantees are
+arrival-order-sensitive (blocks are *consecutive arrivals*), so the harness
+must be able to replay different, reproducible interleaves:
+
+* ``round_robin`` — perfectly fair link scheduling, one packet per flow per
+  turn (the idealized testbed).
+* ``bursty`` — geometric bursts per flow (TCP windows / disk readahead): a
+  flow keeps the link for a geometrically-distributed number of packets.
+* ``weighted_fair`` — weighted fair queueing: each turn, a flow is drawn with
+  probability proportional to its weight (heterogeneous storage servers).
+
+All interleaves are seeded and deterministic: same (flows, mode, seed) ⇒ same
+packet order, which is what makes the equivalence test matrix reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .packet import DEFAULT_PAYLOAD, Packet, merge_round_robin, packetize
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    """One storage server's outbound stream."""
+
+    flow_id: int
+    values: np.ndarray = dataclasses.field(compare=False)
+    payload_size: int = DEFAULT_PAYLOAD
+
+    def packets(self) -> list[Packet]:
+        return packetize(
+            self.values, self.payload_size, flow_id=self.flow_id
+        )
+
+
+def split_flows(
+    values: np.ndarray,
+    num_flows: int,
+    payload_size: int = DEFAULT_PAYLOAD,
+) -> list[Flow]:
+    """Shard one logical dataset across ``num_flows`` storage servers.
+
+    Contiguous shards (how a distributed FS stripes a file), one flow each.
+    """
+    if num_flows <= 0:
+        raise ValueError("num_flows must be positive")
+    values = np.asarray(values, dtype=np.int64)
+    shards = np.array_split(values, num_flows)
+    return [Flow(f, shard, payload_size) for f, shard in enumerate(shards)]
+
+
+def round_robin(flows: list[Flow], seed: int = 0) -> list[Packet]:
+    """One packet per flow per turn until all flows drain."""
+    del seed  # deterministic regardless; kept for a uniform signature
+    return merge_round_robin([f.packets() for f in flows])
+
+
+def bursty(flows: list[Flow], seed: int = 0, mean_burst: int = 4) -> list[Packet]:
+    """Geometric bursts: a flow holds the link for ~``mean_burst`` packets."""
+    rng = np.random.default_rng(seed)
+    queues = [f.packets() for f in flows]
+    heads = [0] * len(queues)
+    out: list[Packet] = []
+    live = [i for i, q in enumerate(queues) if q]
+    while live:
+        i = live[int(rng.integers(len(live)))]
+        burst = 1 + int(rng.geometric(1.0 / max(mean_burst, 1)))
+        take = min(burst, len(queues[i]) - heads[i])
+        out.extend(queues[i][heads[i] : heads[i] + take])
+        heads[i] += take
+        if heads[i] >= len(queues[i]):
+            live.remove(i)
+    return out
+
+
+def weighted_fair(
+    flows: list[Flow], seed: int = 0, weights: list[float] | None = None
+) -> list[Packet]:
+    """Weighted fair queueing: draw the next transmitting flow by weight."""
+    rng = np.random.default_rng(seed)
+    queues = [f.packets() for f in flows]
+    heads = [0] * len(queues)
+    if weights is None:
+        # heterogeneous defaults: flow i twice the weight of flow i+1
+        weights = [2.0 ** (-i) for i in range(len(flows))]
+    w = np.asarray(weights, dtype=np.float64)
+    out: list[Packet] = []
+    live = [i for i, q in enumerate(queues) if q]
+    while live:
+        wl = w[live] / w[live].sum()
+        i = live[int(rng.choice(len(live), p=wl))]
+        out.append(queues[i][heads[i]])
+        heads[i] += 1
+        if heads[i] >= len(queues[i]):
+            live.remove(i)
+    return out
+
+
+INTERLEAVES = {
+    "round_robin": round_robin,
+    "bursty": bursty,
+    "weighted_fair": weighted_fair,
+}
+
+
+def interleave(
+    flows: list[Flow], mode: str = "round_robin", seed: int = 0, **kw
+) -> list[Packet]:
+    """Merge all flows into one arrival-ordered packet stream."""
+    try:
+        fn = INTERLEAVES[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown interleave {mode!r}; options: {sorted(INTERLEAVES)}"
+        ) from None
+    return fn(flows, seed=seed, **kw)

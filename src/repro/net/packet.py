@@ -1,0 +1,105 @@
+"""Packetized key streams — the paper's wire format (§4.1, Fig. 2).
+
+A storage server does not hand the switch an in-memory array; it emits
+fixed-size packets, each carrying ``payload_size`` keys.  The switch tags
+every emitted packet with the id of the segment (pipeline) that produced it —
+the paper's "port number" — so the computation server can demultiplex the
+interleaved stream back into per-segment sub-streams without inspecting keys.
+
+``Packet`` is deliberately tiny and immutable: (payload, flow_id, seq,
+segment_id).  ``seq`` is a per-(source, segment) sequence number assigned at
+emission; the streaming server's bounded reorder buffer
+(:mod:`repro.net.server`) uses it to restore emission order when the network
+delivers packets out of order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# segment_id of a packet that has not traversed a switch yet (raw storage
+# traffic carries no port number).
+UNTAGGED = -1
+
+DEFAULT_PAYLOAD = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class Packet:
+    """One wire packet: ``payload_size`` (or fewer, for the tail) keys."""
+
+    # compare=False: an ndarray field would make the generated __eq__ raise;
+    # packets compare by (flow, seq, segment) identity
+    payload: np.ndarray = dataclasses.field(compare=False)
+    flow_id: int  # originating storage server / emitting hop
+    seq: int  # per-(flow, segment) emission sequence number
+    segment_id: int = UNTAGGED  # the paper's port number; set by the switch
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self, "payload", np.asarray(self.payload, dtype=np.int64)
+        )
+
+    @property
+    def size(self) -> int:
+        return int(self.payload.size)
+
+
+def packetize(
+    values: np.ndarray,
+    payload_size: int = DEFAULT_PAYLOAD,
+    *,
+    flow_id: int = 0,
+    segment_id: int = UNTAGGED,
+    start_seq: int = 0,
+) -> list[Packet]:
+    """Chop a key stream into fixed-size packets (ragged tail allowed)."""
+    values = np.asarray(values, dtype=np.int64)
+    if payload_size <= 0:
+        raise ValueError("payload_size must be positive")
+    return [
+        Packet(values[i : i + payload_size], flow_id, start_seq + j, segment_id)
+        for j, i in enumerate(range(0, values.size, payload_size))
+    ]
+
+
+def depacketize(packets: list[Packet]) -> np.ndarray:
+    """Concatenate payloads in list (arrival) order."""
+    if not packets:
+        return np.zeros(0, dtype=np.int64)
+    return np.concatenate([p.payload for p in packets])
+
+
+def merge_round_robin(streams: list[list[Packet]]) -> list[Packet]:
+    """Interleave packet streams one packet per stream per turn — the fair
+    link-scheduling order used both for storage flows sharing an ingress
+    link and for switch uplinks feeding the next hop."""
+    out: list[Packet] = []
+    heads = [0] * len(streams)
+    while True:
+        progressed = False
+        for i, q in enumerate(streams):
+            if heads[i] < len(q):
+                out.append(q[heads[i]])
+                heads[i] += 1
+                progressed = True
+        if not progressed:
+            return out
+
+
+def segment_streams(packets: list[Packet], num_segments: int) -> list[np.ndarray]:
+    """Demultiplex by port number: per-segment streams in arrival order.
+
+    This is the computation server's NIC-side demux — it never looks at key
+    values, only at the segment id the switch stamped on each packet.
+    """
+    buckets: list[list[np.ndarray]] = [[] for _ in range(num_segments)]
+    for p in packets:
+        if not 0 <= p.segment_id < num_segments:
+            raise ValueError(f"packet with untagged/invalid segment {p.segment_id}")
+        buckets[p.segment_id].append(p.payload)
+    return [
+        np.concatenate(b) if b else np.zeros(0, dtype=np.int64) for b in buckets
+    ]

@@ -1,0 +1,144 @@
+"""End-to-end datapath harness: generators → flows → topology → server.
+
+This is the paper's Fig. 1 as an executable object: storage servers
+packetize their shards, an arrival model interleaves the flows onto the
+ingress link, a switch topology runs MergeMarathon at every hop, an optional
+delivery model jitters packet order (bounded displacement — real networks
+reorder), and the streaming server recovers the global sort.
+
+The load-bearing invariant, checked by ``verify=True`` and the test matrix:
+for any topology × interleave × delivery, the server's output equals
+``np.sort(input)``, and the per-segment delivered multisets equal the
+single-switch reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .flow import interleave, split_flows
+from .packet import DEFAULT_PAYLOAD, Packet, packetize, segment_streams
+from .server import StreamingServer
+from .topology import ControlPlane, HopStats, make_topology
+
+
+@dataclasses.dataclass(eq=False)  # ndarray fields: generated __eq__ would raise
+class PipelineResult:
+    output: np.ndarray
+    passes: list[int]  # per-segment merge passes (server contract)
+    hop_stats: list[HopStats]
+    segment_multisets: list[np.ndarray]  # delivered per-segment streams
+    max_reorder_depth: int
+    server_seconds: float  # time spent in the server (the paper's metric)
+    n: int
+
+
+def jitter_delivery(
+    packets: list[Packet], window: int, seed: int = 0
+) -> list[Packet]:
+    """Bounded-displacement reorder modelling in-network jitter.
+
+    Each packet's departure priority is its index plus uniform noise in
+    ``[0, window)``; stable-sorting by priority can only invert packets whose
+    indices differ by less than ``window``, so every packet lands strictly
+    less than ``window`` positions from where it started — the bound a
+    receiver sizes its reorder buffer against.
+    """
+    if window <= 0:
+        return list(packets)
+    rng = np.random.default_rng(seed)
+    pri = np.arange(len(packets)) + rng.random(len(packets)) * window
+    return [packets[i] for i in np.argsort(pri, kind="stable")]
+
+
+def run_pipeline(
+    values: np.ndarray,
+    *,
+    topology: str = "single",
+    num_flows: int = 4,
+    payload_size: int = DEFAULT_PAYLOAD,
+    num_segments: int = 16,
+    segment_length: int = 32,
+    max_value: int | None = None,
+    control: ControlPlane | None = None,
+    interleave_mode: str = "round_robin",
+    seed: int = 0,
+    faithful: bool = False,
+    backend: str = "numpy",
+    k: int = 10,
+    jitter_window: int = 0,
+    reorder_capacity: int | None = None,
+    verify: bool = False,
+    **topo_kw,
+) -> PipelineResult:
+    """Drive the full storage→switch→server datapath over ``values``."""
+    values = np.asarray(values, dtype=np.int64)
+    if max_value is None:
+        max_value = int(values.max(initial=0))
+    control = control or ControlPlane()
+    ranges = control.ranges(values, num_segments, max_value)
+
+    flows = split_flows(values, num_flows, payload_size)
+    arrivals = interleave(flows, interleave_mode, seed=seed)
+
+    topo = make_topology(
+        topology,
+        num_segments=num_segments,
+        segment_length=segment_length,
+        max_value=max_value,
+        ranges=ranges,
+        faithful=faithful,
+        backend=backend,
+        payload_size=payload_size,
+        **topo_kw,
+    )
+    delivered, hop_stats = topo.run(arrivals)
+    if jitter_window:
+        delivered = jitter_delivery(delivered, jitter_window, seed=seed + 1)
+
+    server = StreamingServer(
+        num_segments, k=k, reorder_capacity=reorder_capacity
+    )
+    t0 = time.perf_counter()
+    for p in delivered:
+        server.ingest(p)
+    out, passes = server.finish()
+    server_seconds = time.perf_counter() - t0
+
+    if verify:
+        np.testing.assert_array_equal(out, np.sort(values))
+
+    # Reorder-buffer-corrected per-segment streams, for multiset invariants.
+    # (jitter permutes packets; segment_streams gives raw arrival order,
+    # which is fine — invariants are multiset-level.)
+    seg_ms = segment_streams(delivered, num_segments)
+    return PipelineResult(
+        output=out,
+        passes=passes,
+        hop_stats=hop_stats,
+        segment_multisets=seg_ms,
+        max_reorder_depth=server.max_reorder_depth,
+        server_seconds=server_seconds,
+        n=int(values.size),
+    )
+
+
+def plain_stream_sort(
+    values: np.ndarray,
+    payload_size: int = DEFAULT_PAYLOAD,
+    k: int = 10,
+) -> tuple[np.ndarray, list[int], float]:
+    """Switchless baseline: raw packets straight into the streaming server
+    (one segment, no port numbers to demux by).  Returns
+    ``(sorted, passes, server_seconds)``."""
+    values = np.asarray(values, dtype=np.int64)
+    pkts = packetize(values, payload_size, segment_id=0)
+    server = StreamingServer(1, k=k)
+    t0 = time.perf_counter()
+    for p in pkts:
+        server.ingest(p)
+    out, passes = server.finish()
+    return out, passes, time.perf_counter() - t0

@@ -1,0 +1,161 @@
+"""Streaming computation server: sort overlapped with packet arrival.
+
+The paper's server (Alg. 1) buffers the whole stream, then runs k-way
+natural merge sort.  A real compute server does not wait: it consumes packets
+as they land.  :class:`StreamingServer` keeps, per segment (port number):
+
+* a **bounded reorder buffer** — packets carry per-segment sequence numbers;
+  the network may deliver them out of order, and the buffer restores emission
+  order before any key is looked at (capacity overflow raises: the knob is
+  the memory the NIC driver would dedicate per port);
+* incremental **natural-run detection** across packet boundaries — the
+  switch guarantees ≥L-length ascending runs, which the detector recovers
+  exactly as Alg. 1 would on the full stream;
+* an **eager k-way merge ladder** — closed runs enter level 0; whenever a
+  level accumulates ``k`` runs they merge into one run a level up (the same
+  k-sets Alg. 1's passes form, executed as soon as their inputs exist, so
+  merge work overlaps with arrival instead of following it).
+
+``finish()`` returns the same ``(sorted, per-segment passes)`` contract as
+:func:`repro.core.mergesort.server_sort`, so benchmarks can swap one for the
+other.  The reported pass count is ``merge_passes(runs, k)`` — provably equal
+to ``merge_sort``'s measured pass count on the identical stream (asserted by
+``benchmarks/run.py bench_theory`` and the net test-suite).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.mergesort import merge_runs
+from ..core.runs import merge_passes, run_starts
+from .packet import Packet
+
+
+class StreamingServer:
+    """Consumes tagged packets incrementally; emits the global sort."""
+
+    def __init__(
+        self,
+        num_segments: int,
+        k: int = 10,
+        reorder_capacity: int | None = None,
+    ) -> None:
+        if num_segments <= 0:
+            raise ValueError("num_segments must be positive")
+        self.num_segments = num_segments
+        self.k = k
+        self.reorder_capacity = reorder_capacity
+        S = num_segments
+        self._pending: list[dict[int, np.ndarray]] = [{} for _ in range(S)]
+        self._next_seq = [0] * S
+        self._cur: list[list[np.ndarray]] = [[] for _ in range(S)]
+        self._tail: list[int | None] = [None] * S
+        self._levels: list[list[list[np.ndarray]]] = [[] for _ in range(S)]
+        self._run_count = [0] * S
+        self._ingested = 0
+        self.max_reorder_depth = 0  # observability: worst buffer occupancy
+
+    # -- ingestion ------------------------------------------------------
+    def ingest(self, packet: Packet) -> None:
+        sid = packet.segment_id
+        if not 0 <= sid < self.num_segments:
+            raise ValueError(f"packet with invalid segment id {sid}")
+        buf = self._pending[sid]
+        if packet.seq < self._next_seq[sid] or packet.seq in buf:
+            raise ValueError(
+                f"duplicate packet seg={sid} seq={packet.seq}"
+            )
+        buf[packet.seq] = packet.payload
+        depth = len(buf)
+        self.max_reorder_depth = max(self.max_reorder_depth, depth)
+        if self.reorder_capacity is not None and depth > self.reorder_capacity:
+            raise ValueError(
+                f"reorder buffer overflow on segment {sid}: {depth} packets "
+                f"buffered, capacity {self.reorder_capacity}"
+            )
+        while self._next_seq[sid] in buf:
+            arr = buf.pop(self._next_seq[sid])
+            self._next_seq[sid] += 1
+            self._feed(sid, arr)
+
+    def _feed(self, sid: int, arr: np.ndarray) -> None:
+        """Continue natural-run detection over one in-order payload."""
+        if arr.size == 0:
+            return
+        self._ingested += int(arr.size)
+        tail = self._tail[sid]
+        if tail is not None and int(arr[0]) < tail:
+            self._close_run(sid)
+        breaks = np.nonzero(arr[1:] < arr[:-1])[0] + 1
+        parts = np.split(arr, breaks)
+        for chunk in parts[:-1]:
+            self._cur[sid].append(chunk)
+            self._close_run(sid)
+        self._cur[sid].append(parts[-1])
+        self._tail[sid] = int(parts[-1][-1])
+
+    def _close_run(self, sid: int) -> None:
+        if not self._cur[sid]:
+            return
+        run = (
+            self._cur[sid][0]
+            if len(self._cur[sid]) == 1
+            else np.concatenate(self._cur[sid])
+        )
+        self._cur[sid] = []
+        self._tail[sid] = None
+        self._run_count[sid] += 1
+        self._push_run(sid, run, 0)
+
+    def _push_run(self, sid: int, run: np.ndarray, depth: int) -> None:
+        levels = self._levels[sid]
+        while len(levels) <= depth:
+            levels.append([])
+        levels[depth].append(run)
+        if len(levels[depth]) == self.k:
+            merged = merge_runs(levels[depth])
+            levels[depth] = []
+            self._push_run(sid, merged, depth + 1)
+
+    # -- completion -----------------------------------------------------
+    def finish(self) -> tuple[np.ndarray, list[int]]:
+        """Drain state; return ``(globally sorted stream, passes/segment)``."""
+        for sid in range(self.num_segments):
+            if self._pending[sid]:
+                missing = self._next_seq[sid]
+                raise ValueError(
+                    f"segment {sid}: stream incomplete, waiting on seq "
+                    f"{missing} with {len(self._pending[sid])} buffered"
+                )
+        outs: list[np.ndarray] = []
+        passes: list[int] = []
+        for sid in range(self.num_segments):
+            self._close_run(sid)
+            remaining = [r for level in self._levels[sid] for r in level]
+            if remaining:
+                outs.append(merge_runs(remaining))
+            passes.append(merge_passes(self._run_count[sid], self.k))
+        out = (
+            np.concatenate(outs) if outs else np.zeros(0, dtype=np.int64)
+        )
+        assert out.size == self._ingested
+        return out, passes
+
+
+def stream_sort(
+    packets: list[Packet],
+    num_segments: int,
+    k: int = 10,
+    reorder_capacity: int | None = None,
+) -> tuple[np.ndarray, list[int]]:
+    """One-shot convenience: ingest every packet, then finish."""
+    server = StreamingServer(num_segments, k=k, reorder_capacity=reorder_capacity)
+    for p in packets:
+        server.ingest(p)
+    return server.finish()
+
+
+def plain_runs_upper_bound(values: np.ndarray, k: int) -> int:
+    """Passes a switchless server would need on the raw stream (baseline)."""
+    return merge_passes(int(run_starts(np.asarray(values)).size), k)

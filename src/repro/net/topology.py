@@ -1,0 +1,339 @@
+"""Composable switch topologies: single switch, leaf–spine, k-ary trees.
+
+The paper evaluates one switch between storage and compute (Fig. 1); related
+work (Cheetah, switch-as-parallel-computer pipelines) shows the interesting
+regimes are *fabrics*: leaves partially sort their shard, spines merge the
+already-friendlier streams.  Every hop here is a :class:`SwitchHop` running
+MergeMarathon; all hops in a fabric share one set of key ranges dictated by
+the :class:`ControlPlane` (the paper's division-free data plane), which is
+what makes per-segment multisets invariant across topologies — each hop only
+permutes *within* a segment, never across.
+
+Two hop engines, identical wire behaviour (property-tested):
+
+* ``faithful=True``  — :class:`repro.core.switchsim.Switch`, element at a
+  time, every SegmentInsertValue case exercised as written in Alg. 3.
+* ``faithful=False`` — :func:`repro.core.marathon.marathon_flat`, vectorized
+  reconstruction of the exact emission order; ``backend="pallas"`` plugs the
+  bitonic TPU kernel (:mod:`repro.kernels.ops`) in as the per-segment block
+  sorter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.marathon import blockwise_sort, marathon_flat
+from ..core.partition import quantile_ranges, set_ranges
+from ..core.runs import run_lengths
+from ..core.switchsim import Switch
+from .packet import DEFAULT_PAYLOAD, Packet, depacketize, merge_round_robin
+
+
+# ---------------------------------------------------------------------------
+# Control plane
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlPlane:
+    """Computes the key ranges every hop in the fabric uses.
+
+    ``mode="width"`` is the paper's Alg. 2 (equal-width, comparison-only);
+    ``mode="quantile"`` is the beyond-paper balanced splitter variant, fed by
+    a bounded sample of the data (what the server would sniff from the first
+    packets).
+    """
+
+    mode: str = "width"
+    sample_size: int = 4096
+    seed: int = 0
+
+    def ranges(
+        self, values: np.ndarray, num_segments: int, max_value: int
+    ) -> np.ndarray:
+        if self.mode == "width":
+            return set_ranges(max_value, num_segments)
+        if self.mode == "quantile":
+            values = np.asarray(values)
+            if values.size > self.sample_size:
+                rng = np.random.default_rng(self.seed)
+                values = rng.choice(values, size=self.sample_size, replace=False)
+            return quantile_ranges(values, num_segments, max_value)
+        raise ValueError(f"unknown control-plane mode {self.mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# One hop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HopStats:
+    """Per-hop observability (paper §6.3 run statistics, per hop)."""
+
+    name: str
+    arrivals: int
+    # arrivals routed to each segment (compare=False: ndarray __eq__)
+    segment_loads: np.ndarray = dataclasses.field(compare=False)
+    # peak segment load relative to the ideal uniform share (total/segments);
+    # 1.0 = perfectly balanced, S = everything on one of S segments
+    load_imbalance: float
+    emitted_runs: int  # total maximal runs across emitted sub-streams
+    mean_run_len: float
+    recirculations: int  # emitting flush passes (≤ 2 per segment, Alg. 3)
+
+    @classmethod
+    def collect(
+        cls,
+        name: str,
+        values: np.ndarray,
+        sids: np.ndarray,
+        num_segments: int,
+        segment_length: int,
+    ) -> "HopStats":
+        loads = np.bincount(sids, minlength=num_segments) if sids.size else (
+            np.zeros(num_segments, dtype=np.int64)
+        )
+        imbalance = (
+            float(loads.max() / loads.mean()) if loads.sum() else 1.0
+        )
+        runs = 0
+        total_len = 0
+        recirc = 0
+        L = segment_length
+        for s in range(num_segments):
+            sub = values[sids == s]
+            if not sub.size:
+                continue
+            lens = run_lengths(sub)
+            runs += int(lens.size)
+            total_len += int(sub.size)
+            # Flush passes that emit values: one for a partially-filled
+            # segment (single young run), two for a full one — unless the
+            # younger run is empty (arrivals a multiple of L).
+            n_s = int(sub.size)
+            if n_s <= L:
+                recirc += 1
+            else:
+                recirc += 1 if (n_s % L) == 0 else 2
+        return cls(
+            name=name,
+            arrivals=int(values.size),
+            segment_loads=loads,
+            load_imbalance=imbalance,
+            emitted_runs=runs,
+            mean_run_len=(total_len / runs) if runs else 0.0,
+            recirculations=recirc,
+        )
+
+
+def _pallas_block_sort(values: np.ndarray, block: int) -> np.ndarray:
+    """Per-segment MergeMarathon emission on the bitonic TPU kernel.
+
+    Pads the ragged tail with the dtype max (pads sort to the tail of the
+    final block and are sliced off — identical to the numpy semantics of
+    sorting the short tail separately).  Falls back to numpy when the block
+    is not a power of two or the keys exceed int32.
+    """
+    values = np.asarray(values, dtype=np.int64)
+    n = values.size
+    if (
+        n == 0
+        or block <= 1
+        or block & (block - 1)
+        or values.max(initial=0) >= np.iinfo(np.int32).max
+        or values.min(initial=0) < 0
+    ):
+        return blockwise_sort(values, block)
+    from ..kernels import ops  # deferred: jax import is heavy
+
+    m = -(-n // block) * block
+    pad = np.full(m - n, np.iinfo(np.int32).max, dtype=np.int32)
+    x = np.concatenate([values.astype(np.int32), pad])
+    out = np.asarray(ops.blockwise_sort(x, block))
+    return out[:n].astype(np.int64)
+
+
+BLOCK_SORTERS = {"numpy": blockwise_sort, "pallas": _pallas_block_sort}
+
+
+@dataclasses.dataclass
+class SwitchHop:
+    """One programmable switch in the fabric."""
+
+    name: str
+    num_segments: int
+    segment_length: int
+    max_value: int
+    ranges: np.ndarray = dataclasses.field(compare=False)
+    faithful: bool = False
+    backend: str = "numpy"
+    payload_size: int = DEFAULT_PAYLOAD
+
+    def process(self, packets: list[Packet]) -> tuple[list[Packet], HopStats]:
+        """Run the arrival stream through MergeMarathon; re-packetize.
+
+        Output packets are tagged with their segment id (port number) and a
+        per-segment ``seq``; packet order follows the wire: a packet ships
+        when its last value is emitted.
+        """
+        stream = depacketize(packets)
+        if self.faithful:
+            sw = Switch(
+                self.num_segments,
+                self.segment_length,
+                self.max_value,
+                ranges=self.ranges,
+            )
+            values, sids = sw.apply(stream)
+        else:
+            values, sids = marathon_flat(
+                stream,
+                self.num_segments,
+                self.segment_length,
+                self.max_value,
+                ranges=self.ranges,
+                block_sort=BLOCK_SORTERS[self.backend],
+            )
+        stats = HopStats.collect(
+            self.name, values, sids, self.num_segments, self.segment_length
+        )
+        return self._repacketize(values, sids), stats
+
+    def _repacketize(
+        self, values: np.ndarray, sids: np.ndarray
+    ) -> list[Packet]:
+        out: list[tuple[int, Packet]] = []
+        for s in range(self.num_segments):
+            pos = np.nonzero(sids == s)[0]
+            if not pos.size:
+                continue
+            sub = values[pos]
+            for seq, i in enumerate(range(0, sub.size, self.payload_size)):
+                chunk = sub[i : i + self.payload_size]
+                ship_at = int(pos[i + chunk.size - 1])  # wire idx of last key
+                out.append(
+                    (ship_at, Packet(chunk, 0, seq, segment_id=s))
+                )
+        out.sort(key=lambda t: t[0])  # ship order; wire indices are unique
+        return [p for _, p in out]
+
+
+# ---------------------------------------------------------------------------
+# Topologies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _TopoBase:
+    num_segments: int
+    segment_length: int
+    max_value: int
+    ranges: np.ndarray = dataclasses.field(compare=False)
+    faithful: bool = False
+    backend: str = "numpy"
+    payload_size: int = DEFAULT_PAYLOAD
+
+    def _hop(self, name: str) -> SwitchHop:
+        return SwitchHop(
+            name,
+            self.num_segments,
+            self.segment_length,
+            self.max_value,
+            self.ranges,
+            faithful=self.faithful,
+            backend=self.backend,
+            payload_size=self.payload_size,
+        )
+
+    def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class SingleSwitch(_TopoBase):
+    """Fig. 1: storage → one switch → compute."""
+
+    def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
+        out, stats = self._hop("switch").process(packets)
+        return out, [stats]
+
+
+@dataclasses.dataclass
+class LeafSpine(_TopoBase):
+    """Each leaf partially sorts its storage servers' shard; the spine
+    merges the leaf streams (which arrive as ≥L-length runs per segment)."""
+
+    num_leaves: int = 2
+
+    def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
+        if self.num_leaves < 1:
+            raise ValueError("num_leaves must be >= 1")
+        per_leaf: list[list[Packet]] = [[] for _ in range(self.num_leaves)]
+        for p in packets:  # storage server f is cabled to leaf f mod K
+            per_leaf[p.flow_id % self.num_leaves].append(p)
+        stats: list[HopStats] = []
+        uplinks: list[list[Packet]] = []
+        for leaf, pkts in enumerate(per_leaf):
+            out, st = self._hop(f"leaf{leaf}").process(pkts)
+            uplinks.append(out)
+            stats.append(st)
+        spine_in = merge_round_robin(uplinks)
+        out, st = self._hop("spine").process(spine_in)
+        stats.append(st)
+        return out, stats
+
+
+@dataclasses.dataclass
+class AggregationTree(_TopoBase):
+    """k-ary reduction tree of switches, ``height`` levels deep.
+
+    ``branching ** (height - 1)`` leaves; each internal node merges its
+    children's round-robin-interleaved output streams.  ``height=1``
+    degenerates to the single switch.
+    """
+
+    branching: int = 2
+    height: int = 2
+
+    def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
+        if self.branching < 1 or self.height < 1:
+            raise ValueError("branching and height must be >= 1")
+        num_leaves = self.branching ** (self.height - 1)
+        groups: list[list[Packet]] = [[] for _ in range(num_leaves)]
+        for p in packets:
+            groups[p.flow_id % num_leaves].append(p)
+        stats: list[HopStats] = []
+        for level in range(self.height):
+            outs: list[list[Packet]] = []
+            for node, pkts in enumerate(groups):
+                out, st = self._hop(f"l{level}n{node}").process(pkts)
+                outs.append(out)
+                stats.append(st)
+            if level == self.height - 1:
+                return outs[0], stats
+            groups = [
+                merge_round_robin(outs[g : g + self.branching])
+                for g in range(0, len(outs), self.branching)
+            ]
+        raise AssertionError("unreachable")
+
+
+TOPOLOGIES = {
+    "single": SingleSwitch,
+    "leaf_spine": LeafSpine,
+    "tree": AggregationTree,
+}
+
+
+def make_topology(kind: str, **kw) -> _TopoBase:
+    try:
+        cls = TOPOLOGIES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology {kind!r}; options: {sorted(TOPOLOGIES)}"
+        ) from None
+    return cls(**kw)

@@ -17,13 +17,12 @@ from repro.core.distributed import (
     sort_sharded,
 )
 from repro.core.runs import RunStats
+from repro.distributed.compat import make_mesh
 
 
 def main() -> None:
     assert len(jax.devices()) == 8, jax.devices()
-    mesh = jax.make_mesh(
-        (8,), ("sortaxis",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_mesh((8,), ("sortaxis",))
     rng = np.random.default_rng(0)
 
     # uniform, skewed, and presorted-chunk inputs; int32 and float32

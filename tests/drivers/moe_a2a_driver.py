@@ -11,15 +11,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.distributed.compat import make_mesh
 from repro.distributed.sharding import ShardCtx
 from repro.models import moe as moe_mod
 
 
 def main() -> None:
-    mesh = jax.make_mesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_smoke_config("deepseek-moe-16b")
     cfg = dataclasses.replace(
         cfg, dtype="float32",

@@ -8,14 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.compat import make_mesh
 from repro.distributed.pp import gpipe, sequential_reference
 
 
 def main() -> None:
     S, M, mb, d = 4, 6, 8, 32
-    mesh = jax.make_mesh(
-        (S,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_mesh((S,), ("pipe",))
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     params = {
         "w": jax.random.normal(k1, (S, d, d)) * d**-0.5,

@@ -21,8 +21,11 @@ def test_scan_of_matmuls_counts_loop_trips():
     want = 7 * 2 * 128**3
     assert abs(st.flops - want) / want < 1e-6
     assert any(t == 7 for _, t in st.loops)
-    # cost_analysis undercounts (documents why the analyzer exists)
+    # cost_analysis undercounts (documents why the analyzer exists);
+    # old jax returns a one-element list of dicts, new jax a dict
     ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
     assert ca["flops"] < want
 
 

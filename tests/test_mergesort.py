@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: property tests skip, the rest run
+    from _hypstub import given, settings, st
 
 from repro.core import (
     merge_passes,

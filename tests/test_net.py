@@ -1,0 +1,247 @@
+"""repro.net invariants: the equivalence matrix the subsystem is built on.
+
+The load-bearing claims (ISSUE tentpole):
+
+1. For every topology × interleave × trace, the streaming server's output
+   equals ``np.sort(input)``.
+2. The per-segment delivered multiset is invariant across topologies (every
+   hop permutes within a segment only) — multi-switch fabrics deliver exactly
+   what the single switch would.
+3. The faithful (element-at-a-time Alg. 3) and vectorized hop engines produce
+   byte-identical packet streams, including across multi-hop fabrics.
+4. The streaming server matches ``server_sort``'s ``(sorted, passes)``
+   contract, and its bounded reorder buffer recovers from bounded network
+   reordering (and faults on overflow / truncated streams).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import marathon_streams, server_sort
+from repro.data import TRACES, trace_max_value
+from repro.net import (
+    INTERLEAVES,
+    Packet,
+    StreamingServer,
+    depacketize,
+    interleave,
+    jitter_delivery,
+    packetize,
+    plain_stream_sort,
+    run_pipeline,
+    segment_streams,
+    split_flows,
+)
+
+TOPO_CASES = [
+    ("single", {}),
+    ("leaf_spine", {"num_leaves": 3}),
+    ("tree", {"branching": 2, "height": 3}),
+]
+N = 2500
+SEGS, LENGTH = 8, 16
+
+
+def _common(trace_name, **over):
+    kw = dict(
+        num_segments=SEGS,
+        segment_length=LENGTH,
+        max_value=trace_max_value(trace_name),
+        num_flows=4,
+        payload_size=32,
+    )
+    kw.update(over)
+    return kw
+
+
+# -- packets & flows -----------------------------------------------------
+
+
+def test_packetize_roundtrip():
+    vals = np.arange(101, dtype=np.int64)
+    pkts = packetize(vals, 16, flow_id=3)
+    assert [p.size for p in pkts] == [16] * 6 + [5]
+    assert [p.seq for p in pkts] == list(range(7))
+    assert all(p.flow_id == 3 for p in pkts)
+    np.testing.assert_array_equal(depacketize(pkts), vals)
+
+
+def test_segment_streams_demux_by_port():
+    pkts = [
+        Packet([1, 2], 0, 0, segment_id=1),
+        Packet([3], 0, 0, segment_id=0),
+        Packet([4, 5], 0, 1, segment_id=1),
+    ]
+    streams = segment_streams(pkts, 2)
+    np.testing.assert_array_equal(streams[0], [3])
+    np.testing.assert_array_equal(streams[1], [1, 2, 4, 5])
+    with pytest.raises(ValueError):
+        segment_streams([Packet([1], 0, 0)], 2)  # untagged
+
+
+@pytest.mark.parametrize("mode", sorted(INTERLEAVES))
+def test_interleaves_preserve_flows_and_are_deterministic(mode):
+    vals = TRACES["random"](600, seed=0)
+    flows = split_flows(vals, 5, payload_size=16)
+    a = interleave(flows, mode, seed=42)
+    b = interleave(flows, mode, seed=42)
+    assert [(p.flow_id, p.seq) for p in a] == [(p.flow_id, p.seq) for p in b]
+    # multiset preserved, and per-flow packet order preserved (FIFO links)
+    np.testing.assert_array_equal(
+        np.sort(depacketize(a)), np.sort(vals)
+    )
+    for f in range(5):
+        seqs = [p.seq for p in a if p.flow_id == f]
+        assert seqs == sorted(seqs)
+
+
+# -- the equivalence matrix ---------------------------------------------
+
+
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+@pytest.mark.parametrize("mode", sorted(INTERLEAVES))
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+def test_end_to_end_sorted_and_single_switch_multisets(
+    trace_name, mode, topo, topo_kw
+):
+    vals = TRACES[trace_name](N, seed=13)
+    kw = _common(trace_name)
+    res = run_pipeline(
+        vals, topology=topo, interleave_mode=mode, verify=True, **kw, **topo_kw
+    )
+    # (1) streaming server output == np.sort(input) (verify=True asserted it)
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+    # (2) per-segment delivered multiset == single-switch reference
+    ref = run_pipeline(vals, topology="single", interleave_mode=mode, **kw)
+    for got, want in zip(res.segment_multisets, ref.segment_multisets):
+        np.testing.assert_array_equal(np.sort(got), np.sort(want))
+
+
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+def test_faithful_and_vectorized_hops_identical(topo, topo_kw):
+    vals = TRACES["memory"](900, seed=5)
+    kw = _common("memory", num_segments=4, segment_length=8, payload_size=16)
+    rf = run_pipeline(vals, topology=topo, faithful=True, **kw, **topo_kw)
+    rv = run_pipeline(vals, topology=topo, faithful=False, **kw, **topo_kw)
+    # exact per-segment delivered order, not just multisets
+    for a, b in zip(rf.segment_multisets, rv.segment_multisets):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(rf.output, rv.output)
+    assert rf.passes == rv.passes
+
+
+def test_pallas_backend_matches_numpy():
+    vals = TRACES["network"](1024, seed=9)
+    kw = _common("network", segment_length=16)  # pow2 -> bitonic kernel path
+    rn = run_pipeline(vals, topology="single", backend="numpy", **kw)
+    rp = run_pipeline(vals, topology="single", backend="pallas", **kw)
+    for a, b in zip(rn.segment_multisets, rp.segment_multisets):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(rp.output, np.sort(vals))
+
+
+def test_quantile_control_plane_balances_load():
+    from repro.net import ControlPlane
+
+    vals = TRACES["memory"](4000, seed=1)
+    kw = _common("memory")
+    rq = run_pipeline(
+        vals, topology="single", control=ControlPlane("quantile"),
+        verify=True, **kw,
+    )
+    rw = run_pipeline(vals, topology="single", verify=True, **kw)
+    assert rq.hop_stats[0].load_imbalance < rw.hop_stats[0].load_imbalance
+
+
+# -- streaming server ----------------------------------------------------
+
+
+def test_streaming_server_matches_server_sort_contract():
+    vals = TRACES["random"](3000, seed=2)
+    maxv = trace_max_value("random")
+    streams, _ = marathon_streams(vals, SEGS, LENGTH, maxv)
+    want_out, want_passes = server_sort(streams, k=10)
+    res = run_pipeline(vals, topology="single", **_common("random"))
+    np.testing.assert_array_equal(res.output, want_out)
+    assert res.passes == want_passes
+
+
+def test_switch_reduces_streaming_passes_vs_plain():
+    vals = TRACES["random"](20_000, seed=4)
+    out, plain_passes, _ = plain_stream_sort(vals, 32)
+    np.testing.assert_array_equal(out, np.sort(vals))
+    res = run_pipeline(
+        vals, topology="single", **_common("random", segment_length=64)
+    )
+    assert max(res.passes) < plain_passes[0]
+
+
+def test_reorder_buffer_recovers_bounded_jitter():
+    vals = TRACES["network"](2000, seed=6)
+    res = run_pipeline(
+        vals,
+        topology="leaf_spine",
+        num_leaves=2,
+        jitter_window=5,
+        reorder_capacity=64,
+        verify=True,
+        **_common("network"),
+    )
+    assert 0 < res.max_reorder_depth <= 64
+
+
+def test_reorder_buffer_overflow_raises():
+    server = StreamingServer(1, reorder_capacity=2)
+    # seqs 5, 4, 3 buffer without draining: the third breaches capacity 2
+    server.ingest(Packet([1], 0, 5, segment_id=0))
+    server.ingest(Packet([2], 0, 4, segment_id=0))
+    with pytest.raises(ValueError, match="overflow"):
+        server.ingest(Packet([3], 0, 3, segment_id=0))
+
+
+def test_truncated_stream_detected_at_finish():
+    server = StreamingServer(1)
+    server.ingest(Packet([1, 2], 0, 1, segment_id=0))  # seq 0 never arrives
+    with pytest.raises(ValueError, match="incomplete"):
+        server.finish()
+
+
+def test_duplicate_packet_rejected():
+    server = StreamingServer(1)
+    server.ingest(Packet([1], 0, 0, segment_id=0))
+    with pytest.raises(ValueError, match="duplicate"):
+        server.ingest(Packet([1], 0, 0, segment_id=0))
+
+
+def test_run_detection_spans_packet_boundaries():
+    """An ascending run split across packets must count as ONE run."""
+    server = StreamingServer(1, k=10)
+    server.ingest(Packet([1, 2, 3], 0, 0, segment_id=0))
+    server.ingest(Packet([4, 5, 6], 0, 1, segment_id=0))
+    out, passes = server.finish()
+    np.testing.assert_array_equal(out, [1, 2, 3, 4, 5, 6])
+    assert passes == [0]  # a single run needs zero merge passes
+
+
+# -- hop statistics ------------------------------------------------------
+
+
+def test_hop_stats_observability():
+    vals = TRACES["random"](2000, seed=8)
+    res = run_pipeline(vals, topology="single", **_common("random"))
+    st = res.hop_stats[0]
+    assert st.arrivals == vals.size
+    assert int(st.segment_loads.sum()) == vals.size
+    assert st.load_imbalance >= 1.0
+    # MergeMarathon guarantee: every run is >= L except per-segment flush
+    # tails, so the mean can dip only slightly below L
+    assert st.mean_run_len >= LENGTH * 0.9
+    assert 0 < st.recirculations <= 2 * SEGS
+
+
+def test_jitter_delivery_bounded_displacement():
+    pkts = packetize(np.arange(200), 1, segment_id=0)
+    out = jitter_delivery(pkts, window=4, seed=0)
+    assert sorted(p.seq for p in out) == list(range(200))
+    for i, p in enumerate(out):
+        assert abs(i - p.seq) <= 4

@@ -1,7 +1,12 @@
 """Range partitioner properties: paper equal-width + beyond-paper quantile."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: property tests skip, the rest run
+    from _hypstub import given, settings, st
 
 from repro.core import quantile_ranges, segment_of, set_ranges
 
@@ -53,3 +58,46 @@ def test_quantile_ranges_balance_skewed():
     heaviest = np.bincount(vals).max()
     assert qr_counts.max() < eq_counts.max() / 2
     assert qr_counts.max() <= 1.1 * heaviest
+
+
+def test_quantile_ranges_exact_count_on_memory_trace():
+    """Regression: the splitter re-padding path must always return exactly
+    ``num_segments`` ranges, even when heavy skew deduplicates most
+    quantiles.  The memory trace (368 distinct power-of-two-ish IO sizes,
+    Zipf popularity) is the paper trace that exercises this."""
+    from repro.data import memory_trace, trace_max_value
+
+    trace = memory_trace(50_000)
+    maxv = trace_max_value("memory")
+    for S in (16, 64, 256, 1024):
+        r = quantile_ranges(trace, S, maxv)
+        assert r.shape == (S, 2)
+        assert r[0, 0] == 0 and r[-1, 1] == maxv + 1
+        np.testing.assert_array_equal(r[1:, 0], r[:-1, 1])
+        assert (r[:, 1] > r[:, 0]).all()
+    # quantized to block counts the domain shrinks to 368 values; segment
+    # counts right up to the domain boundary must still return exactly S
+    blocks = trace // 512
+    for S in (256, 368, 369):
+        r = quantile_ranges(blocks, S, 368)
+        assert r.shape == (S, 2)
+        assert (r[:, 1] > r[:, 0]).all()
+
+
+def test_quantile_ranges_degenerate_sample_exact_count():
+    """A fully-degenerate sample (one distinct value) collapses every
+    quantile; padding must still restore exactly num_segments ranges."""
+    sample = np.full(1000, 7, dtype=np.int64)
+    for maxv, S in [(20, 16), (20, 21), (10_000, 64)]:
+        r = quantile_ranges(sample, S, maxv)
+        assert r.shape == (S, 2)
+        assert (r[:, 1] > r[:, 0]).all()
+        seg = segment_of(sample, r)
+        assert ((seg >= 0) & (seg < S)).all()
+
+
+def test_quantile_ranges_infeasible_raises():
+    """More segments than domain values used to silently return fewer than
+    num_segments ranges; now it raises like set_ranges does."""
+    with pytest.raises(ValueError, match="more segments"):
+        quantile_ranges(np.asarray([1, 2, 3]), 12, 10)
