@@ -1,0 +1,16 @@
+"""Make ``repro`` importable when scripts run from a source checkout.
+
+The single shared bootstrap ISSUE 2 asked for: scripts import this instead
+of each repeating ``sys.path.insert(0, "src")`` (which silently broke when
+run from any directory but the repo root).  Resolves ``src/`` relative to
+this file, so ``python benchmarks/net_bench.py`` works from anywhere; a
+no-op under pytest, which gets the same path from pyproject's
+``pythonpath = ["src"]``.
+"""
+
+import sys
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

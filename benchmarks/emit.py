@@ -1,0 +1,205 @@
+"""BENCH_*.json artifact schema: write, validate, and gate bench results.
+
+Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
+trajectory across PRs.  The schema (version 1) is hand-validated here — no
+external dependency — and documented in README "Reproducing the numbers":
+
+    {
+      "schema_version": 1,
+      "bench": "net",
+      "config":  {"n", "repeats", "segments", "length", "payload", "k",
+                  "quick": bool},
+      "results": [            # one row per topology × trace × range_mode
+        {"topology": str, "trace": str, "range_mode": str,
+         "plain_seconds": float,   # switchless streaming-server baseline
+         "server_seconds": float,  # server time consuming the switch stream
+         "reduction": float,       # 1 - server_seconds / plain_seconds
+         "passes": int,            # max per-(epoch, segment) merge passes
+         "plain_passes": int,      # baseline merge passes
+         "pass_reduction": float,  # 1 - passes / plain_passes (timing-free)
+         "hops": int, "epochs": int,
+         "load_imbalance": float,  # arrival-weighted mean across hops
+         "mean_run_len": float},   # arrival-weighted mean across hops
+      ]
+    }
+
+CLI — validate an artifact, and optionally gate on the ISSUE 2 acceptance
+bar (sampled ranges within ``--min-sampled-ratio`` of the oracle-quantile
+reduction on the skewed traces):
+
+    python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+try:
+    import _bootstrap  # noqa: F401  (python benchmarks/emit.py)
+except ImportError:  # pragma: no cover - python -m benchmarks.emit
+    from benchmarks import _bootstrap  # noqa: F401
+
+SCHEMA_VERSION = 1
+
+_CONFIG_FIELDS = {
+    "n": int,
+    "repeats": int,
+    "segments": int,
+    "length": int,
+    "payload": int,
+    "k": int,
+    "quick": bool,
+}
+
+_ROW_FIELDS = {
+    "topology": str,
+    "trace": str,
+    "range_mode": str,
+    "plain_seconds": float,
+    "server_seconds": float,
+    "reduction": float,
+    "passes": int,
+    "plain_passes": int,
+    "pass_reduction": float,
+    "hops": int,
+    "epochs": int,
+    "load_imbalance": float,
+    "mean_run_len": float,
+}
+
+_RANGE_MODES = {"oracle", "sampled", "static"}
+
+
+def _check_type(path: str, value, want: type) -> None:
+    if want is float:
+        ok = isinstance(value, (int, float)) and not isinstance(value, bool)
+    elif want is int:
+        ok = isinstance(value, int) and not isinstance(value, bool)
+    else:
+        ok = isinstance(value, want)
+    if not ok:
+        raise ValueError(
+            f"{path}: expected {want.__name__}, got {type(value).__name__} "
+            f"({value!r})"
+        )
+
+
+def validate_net_bench(doc: dict) -> None:
+    """Raise ``ValueError`` naming the offending path on any schema breach."""
+    _check_type("$", doc, dict)
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"$.schema_version: expected {SCHEMA_VERSION}, "
+            f"got {doc.get('schema_version')!r}"
+        )
+    if doc.get("bench") != "net":
+        raise ValueError(f"$.bench: expected 'net', got {doc.get('bench')!r}")
+    _check_type("$.config", doc.get("config"), dict)
+    for key, want in _CONFIG_FIELDS.items():
+        if key not in doc["config"]:
+            raise ValueError(f"$.config.{key}: missing")
+        _check_type(f"$.config.{key}", doc["config"][key], want)
+    _check_type("$.results", doc.get("results"), list)
+    if not doc["results"]:
+        raise ValueError("$.results: empty")
+    for i, row in enumerate(doc["results"]):
+        _check_type(f"$.results[{i}]", row, dict)
+        for key, want in _ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.results[{i}].{key}: missing")
+            _check_type(f"$.results[{i}].{key}", row[key], want)
+        if row["range_mode"] not in _RANGE_MODES:
+            raise ValueError(
+                f"$.results[{i}].range_mode: {row['range_mode']!r} not in "
+                f"{sorted(_RANGE_MODES)}"
+            )
+        for key in ("plain_seconds", "server_seconds", "mean_run_len"):
+            if row[key] < 0:
+                raise ValueError(f"$.results[{i}].{key}: negative")
+        for key in ("passes", "plain_passes"):
+            if row[key] < 0:
+                raise ValueError(f"$.results[{i}].{key}: negative")
+        if row["hops"] < 1 or row["epochs"] < 1:
+            raise ValueError(f"$.results[{i}]: hops/epochs must be >= 1")
+        if row["load_imbalance"] < 1.0:
+            raise ValueError(f"$.results[{i}].load_imbalance: < 1.0")
+        if row["reduction"] > 1.0 or row["pass_reduction"] > 1.0:
+            raise ValueError(f"$.results[{i}]: reduction > 1.0")
+
+
+def write_net_bench(path: str, config: dict, results: list[dict]) -> dict:
+    """Assemble, validate, and write a net-bench artifact; return the doc."""
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "bench": "net",
+        "config": config,
+        "results": results,
+    }
+    validate_net_bench(doc)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return doc
+
+
+def sampled_vs_oracle(
+    doc: dict, traces: tuple[str, ...] = ("network", "memory"),
+    topology: str = "single",
+) -> dict[str, float]:
+    """Per-trace ratio of sampled to oracle time reduction (1.0 = parity)."""
+    by_mode: dict[tuple[str, str], dict] = {
+        (r["trace"], r["range_mode"]): r
+        for r in doc["results"]
+        if r["topology"] == topology
+    }
+    out = {}
+    for trace in traces:
+        oracle = by_mode.get((trace, "oracle"))
+        sampled = by_mode.get((trace, "sampled"))
+        if oracle is None or sampled is None:
+            raise ValueError(
+                f"missing oracle/sampled rows for topology={topology!r} "
+                f"trace={trace!r}"
+            )
+        if oracle["reduction"] <= 0:
+            raise ValueError(
+                f"oracle reduction non-positive on {trace!r}: switch did not help"
+            )
+        out[trace] = sampled["reduction"] / oracle["reduction"]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="path to a BENCH_net.json")
+    ap.add_argument(
+        "--min-sampled-ratio", type=float, default=None,
+        help="gate: sampled reduction must reach this fraction of oracle's "
+        "on the skewed traces (ISSUE 2 acceptance: 0.8)",
+    )
+    ap.add_argument(
+        "--traces", default="network,memory",
+        help="comma-separated traces the gate applies to",
+    )
+    args = ap.parse_args()
+    with open(args.artifact) as fh:
+        doc = json.load(fh)
+    validate_net_bench(doc)
+    print(f"{args.artifact}: schema v{doc['schema_version']} OK "
+          f"({len(doc['results'])} rows)")
+    if args.min_sampled_ratio is not None:
+        ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))
+        for trace, ratio in ratios.items():
+            status = "OK" if ratio >= args.min_sampled_ratio else "FAIL"
+            print(f"  sampled/oracle reduction on {trace}: {ratio:.3f} {status}")
+        worst = min(ratios.values())
+        if worst < args.min_sampled_ratio:
+            raise SystemExit(
+                f"sampled ranges reach only {worst:.3f} of oracle reduction "
+                f"(need {args.min_sampled_ratio})"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,35 +1,49 @@
-"""Dataplane benchmark: switch-assisted vs plain streaming sort per topology.
+"""Dataplane benchmark matrix: topology × trace × range-mode, with artifact.
 
 Extends ``benchmarks/run.py`` (which times the batch server on in-memory
 arrays) to the packetized datapath: storage flows → switch fabric →
-streaming server.  For each topology × trace it reports
+streaming server.  Every cell of the matrix reports
 
-    net_<topology>_<trace>,server_us,reduction=...;passes=...
+    net_<topology>_<trace>_<range_mode>,server_us,reduction=...;passes=...
 
 where ``reduction`` compares the streaming server's time consuming the
 switch-processed stream against the same server consuming the raw packet
 stream (the paper's metric: the switch is in-network, its work is free to
-the server).  The ``single`` topology is the paper's Fig. 12-14 setup and
-should land within noise of ``benchmarks/run.py``'s reduction for the same
-(segments, length) — printed side by side as ``batch_reduction`` for the
-comparison.
+the server), and ``range_mode`` selects how the control plane set the
+segment ranges (:mod:`repro.net.control`): the paper's ``static``
+equal-width, the full-data ``oracle`` quantiles, or the ``sampled``
+adaptive plane that learns ranges from the live stream.  The run also
+writes a schema-validated ``BENCH_net.json`` (see :mod:`benchmarks.emit`)
+so the numbers accumulate as a trajectory across PRs.
 
-Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--faithful-check]
+The ``single``/``static`` cell is the paper's Fig. 12-14 setup and should
+land within noise of ``benchmarks/run.py``'s reduction for the same
+(segments, length) — printed side by side as ``batch_reduction``.
+
+Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
+            [--faithful-check] [--out BENCH_net.json]
 """
 
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 import numpy as np
 
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (python benchmarks/net_bench.py)
+except ImportError:  # pragma: no cover - python -m benchmarks.net_bench
+    from benchmarks import _bootstrap  # noqa: F401
+
+try:
+    from benchmarks.emit import write_net_bench
+except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
+    from emit import write_net_bench
 
 from repro.core import marathon_streams, merge_sort, server_sort
-from repro.data import TRACES, trace_max_value
-from repro.net import plain_stream_sort, run_pipeline
+from repro.data import SCENARIOS, TRACES, scenario_max_value, trace_max_value
+from repro.net import RANGE_MODES, plain_stream_sort, run_pipeline
 
 K = 10
 TOPOLOGIES = [
@@ -37,25 +51,34 @@ TOPOLOGIES = [
     ("leaf_spine", {"num_leaves": 4}),
     ("tree", {"branching": 2, "height": 3}),
 ]
+# Scenario rows (beyond-paper workloads) added with --scenarios; kept to the
+# two the control plane differentiates most to bound runtime.
+BENCH_SCENARIOS = ("adversarial_skew", "drifting")
 
 
-def _time(fn, repeats: int):
+def _best(fn, repeats: int):
+    """Min-time over repeats (noise-robust) + the last result."""
     times, out = [], None
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn()
         times.append(time.perf_counter() - t0)
-    return float(np.mean(times)), out
+    return float(np.min(times)), out
 
 
 def batch_reduction(trace, maxv, segs, length, repeats) -> float:
     """run.py's metric for the same geometry: batch server, no packets."""
-    t_base, (out, _) = _time(lambda: merge_sort(trace, k=K), repeats)
+    t_base, (out, _) = _best(lambda: merge_sort(trace, k=K), repeats)
     np.testing.assert_array_equal(out, np.sort(trace))
     streams, _ = marathon_streams(trace, segs, length, maxv)
-    t_mm, (out, _) = _time(lambda: server_sort(streams, k=K), repeats)
+    t_mm, (out, _) = _best(lambda: server_sort(streams, k=K), repeats)
     np.testing.assert_array_equal(out, np.sort(trace))
     return 1 - t_mm / t_base
+
+
+def _weighted(stats, attr: str) -> float:
+    total = sum(st.arrivals for st in stats) or 1
+    return sum(getattr(st, attr) * st.arrivals for st in stats) / total
 
 
 def main() -> None:
@@ -65,14 +88,22 @@ def main() -> None:
     ap.add_argument("--segments", type=int, default=16)
     ap.add_argument("--length", type=int, default=64)
     ap.add_argument("--payload", type=int, default=256)
-    ap.add_argument("--quick", action="store_true", help="100k values, 1 repeat")
+    ap.add_argument("--quick", action="store_true", help="100k values, 2 repeats")
+    ap.add_argument(
+        "--scenarios", action="store_true",
+        help=f"also bench the scenario workloads {BENCH_SCENARIOS}",
+    )
+    ap.add_argument(
+        "--out", default="BENCH_net.json",
+        help="artifact path ('' disables the artifact)",
+    )
     ap.add_argument(
         "--faithful-check",
         action="store_true",
         help="also run the element-at-a-time switch on a small slice",
     )
     args = ap.parse_args()
-    n, repeats = (100_000, 1) if args.quick else (args.n, args.repeats)
+    n, repeats = (100_000, 2) if args.quick else (args.n, args.repeats)
     segs, length = args.segments, args.length
 
     def emit(name: str, us: float, derived: str) -> None:
@@ -83,18 +114,25 @@ def main() -> None:
         f"length={length} payload={args.payload} k={K}",
         flush=True,
     )
-    for trace_name, gen in TRACES.items():
-        trace = gen(n)
-        maxv = trace_max_value(trace_name)
+    workloads: list[tuple[str, np.ndarray, int]] = [
+        (name, gen(n), trace_max_value(name)) for name, gen in TRACES.items()
+    ]
+    if args.scenarios:
+        workloads += [
+            (name, SCENARIOS[name](n), scenario_max_value(name))
+            for name in BENCH_SCENARIOS
+        ]
 
+    rows: list[dict] = []
+    for trace_name, trace, maxv in workloads:
         # Baseline: server-only seconds (excludes packetization — the paper's
         # metric charges the server, not the network).
         plain_times = []
         for _ in range(repeats):
             out, plain_passes, secs = plain_stream_sort(trace, args.payload, k=K)
             plain_times.append(secs)
+        t_plain = float(np.min(plain_times))
         np.testing.assert_array_equal(out, np.sort(trace))
-        t_plain = float(np.mean(plain_times))
         emit(
             f"net_plain_{trace_name}",
             t_plain * 1e6,
@@ -104,31 +142,58 @@ def main() -> None:
         batch_red = batch_reduction(trace, maxv, segs, length, repeats)
 
         for topo, topo_kw in TOPOLOGIES:
-            server_times = []
-            for _ in range(repeats):
-                res = run_pipeline(
-                    trace,
-                    topology=topo,
-                    num_segments=segs,
-                    segment_length=length,
-                    max_value=maxv,
-                    payload_size=args.payload,
-                    num_flows=8,
-                    k=K,
-                    **topo_kw,
+            for mode in RANGE_MODES:
+                server_times = []
+                for _ in range(repeats):
+                    res = run_pipeline(
+                        trace,
+                        topology=topo,
+                        num_segments=segs,
+                        segment_length=length,
+                        max_value=maxv,
+                        payload_size=args.payload,
+                        num_flows=8,
+                        k=K,
+                        range_mode=mode,
+                        **topo_kw,
+                    )
+                    server_times.append(res.server_seconds)
+                t_server = float(np.min(server_times))
+                np.testing.assert_array_equal(res.output, np.sort(trace))
+                red = 1 - t_server / t_plain
+                passes = int(max(res.passes))
+                pass_red = (
+                    1 - passes / plain_passes[0] if plain_passes[0] else 0.0
                 )
-                server_times.append(res.server_seconds)
-            t_server = float(np.mean(server_times))
-            np.testing.assert_array_equal(res.output, np.sort(trace))
-            red = 1 - t_server / t_plain
-            derived = (
-                f"reduction={red:.3f};passes={max(res.passes)};"
-                f"hops={len(res.hop_stats)};"
-                f"imbalance={res.hop_stats[-1].load_imbalance:.2f}"
-            )
-            if topo == "single":
-                derived += f";batch_reduction={batch_red:.3f}"
-            emit(f"net_{topo}_{trace_name}", t_server * 1e6, derived)
+                derived = (
+                    f"reduction={red:.3f};passes={passes};"
+                    f"hops={len(res.hop_stats)};epochs={res.num_epochs};"
+                    f"imbalance={_weighted(res.hop_stats, 'load_imbalance'):.2f}"
+                )
+                if topo == "single" and mode == "static":
+                    derived += f";batch_reduction={batch_red:.3f}"
+                emit(f"net_{topo}_{trace_name}_{mode}", t_server * 1e6, derived)
+                rows.append(
+                    {
+                        "topology": topo,
+                        "trace": trace_name,
+                        "range_mode": mode,
+                        "plain_seconds": t_plain,
+                        "server_seconds": t_server,
+                        "reduction": red,
+                        "passes": passes,
+                        "plain_passes": int(plain_passes[0]),
+                        "pass_reduction": pass_red,
+                        "hops": len(res.hop_stats),
+                        "epochs": int(res.num_epochs),
+                        "load_imbalance": _weighted(
+                            res.hop_stats, "load_imbalance"
+                        ),
+                        "mean_run_len": _weighted(
+                            res.hop_stats, "mean_run_len"
+                        ),
+                    }
+                )
 
         if args.faithful_check:
             small = trace[:4000]
@@ -141,6 +206,19 @@ def main() -> None:
                 f"net_faithful_{trace_name}", 0.0,
                 f"ok_n={small.size};passes={max(rf.passes)}",
             )
+
+    if args.out:
+        config = {
+            "n": n,
+            "repeats": repeats,
+            "segments": segs,
+            "length": length,
+            "payload": args.payload,
+            "k": K,
+            "quick": bool(args.quick),
+        }
+        write_net_bench(args.out, config, rows)
+        print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 
 
 if __name__ == "__main__":

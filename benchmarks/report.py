@@ -9,9 +9,15 @@ import json
 import math
 import sys
 
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (python benchmarks/report.py)
+except ImportError:  # pragma: no cover - python -m benchmarks.report
+    from benchmarks import _bootstrap  # noqa: F401
 
-from benchmarks.roofline import analyze, model_flops_for
+try:
+    from benchmarks.roofline import analyze, model_flops_for
+except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
+    from roofline import analyze, model_flops_for
 from repro.configs import get_config
 
 HBM_PER_CHIP = 16 * 2**30  # v5e

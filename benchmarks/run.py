@@ -15,12 +15,14 @@ identical server — is what each figure reproduces.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 import numpy as np
 
-sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+try:
+    import _bootstrap  # noqa: F401  (python benchmarks/run.py)
+except ImportError:  # pragma: no cover - python -m benchmarks.run
+    from benchmarks import _bootstrap  # noqa: F401
 
 from repro.core import (
     RunStats,

@@ -13,17 +13,23 @@ roofline terms — the 256 chips are the switch's segments, ICI the fabric.
 
 import argparse
 import math
-import sys
 
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (python benchmarks/sort_dryrun.py)
+except ImportError:  # pragma: no cover - python -m benchmarks.sort_dryrun
+    from benchmarks import _bootstrap  # noqa: F401
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.hlo_analysis import analyze_text
-from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+try:
+    from benchmarks.hlo_analysis import analyze_text
+    from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
+    from hlo_analysis import analyze_text
+    from roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.core.distributed import _sort_body
 from repro.launch.mesh import make_production_mesh
 

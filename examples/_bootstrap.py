@@ -1,0 +1,13 @@
+"""Make ``repro`` importable when examples run from a source checkout.
+
+Same role as ``benchmarks/_bootstrap.py``: resolves ``src/`` relative to
+this file so ``python examples/<name>.py`` works from any directory,
+replacing the per-file ``sys.path.insert(0, "src")`` hacks.
+"""
+
+import sys
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

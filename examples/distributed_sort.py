@@ -14,11 +14,9 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import sys
 import time
 
-sys.path.insert(0, "src")
-
+import _bootstrap  # noqa: F401
 import jax
 import jax.numpy as jnp
 import numpy as np

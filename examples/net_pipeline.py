@@ -4,25 +4,28 @@ Four storage servers stream packets through a switch topology that runs
 MergeMarathon at every hop; the compute server overlaps its k-way merge with
 packet arrival and never holds the unsorted stream in memory.
 
-    PYTHONPATH=src python examples/net_pipeline.py [--n 400000]
-        [--topology single|leaf_spine|tree] [--interleave bursty] [--jitter 8]
+    python examples/net_pipeline.py [--n 400000] [--trace drifting]
+        [--topology single|leaf_spine|tree] [--interleave bursty]
+        [--jitter 8] [--ranges static|oracle|sampled]
 """
 
 import argparse
-import sys
 
 import numpy as np
 
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401
 
-from repro.data import TRACES, trace_max_value
-from repro.net import ControlPlane, plain_stream_sort, run_pipeline
+from repro.data import SCENARIOS, TRACES, scenario_max_value, trace_max_value
+from repro.net import RANGE_MODES, plain_stream_sort, run_pipeline
+
+WORKLOADS = {**TRACES, **SCENARIOS}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=400_000)
-    ap.add_argument("--trace", choices=sorted(TRACES), default="network")
+    ap.add_argument("--trace", choices=sorted(WORKLOADS), default="network",
+                    help="a paper trace or a scenario workload")
     ap.add_argument("--topology", default="leaf_spine",
                     choices=["single", "leaf_spine", "tree"])
     ap.add_argument("--interleave", default="bursty",
@@ -32,12 +35,18 @@ def main() -> None:
     ap.add_argument("--payload", type=int, default=256)
     ap.add_argument("--jitter", type=int, default=8,
                     help="bounded packet-reorder window at delivery")
-    ap.add_argument("--quantile", action="store_true",
-                    help="balanced (sampled-splitter) ranges vs equal-width")
+    ap.add_argument("--ranges", default="static", choices=list(RANGE_MODES),
+                    help="control plane: paper equal-width (static), "
+                    "full-data quantiles (oracle), or adaptive online "
+                    "estimation with mid-stream re-partitioning (sampled)")
     args = ap.parse_args()
 
-    trace = TRACES[args.trace](args.n)
-    maxv = trace_max_value(args.trace)
+    trace = WORKLOADS[args.trace](args.n)
+    maxv = (
+        trace_max_value(args.trace)
+        if args.trace in TRACES
+        else scenario_max_value(args.trace)
+    )
     topo_kw = (
         {"num_leaves": 4} if args.topology == "leaf_spine"
         else {"branching": 2, "height": 3} if args.topology == "tree"
@@ -59,13 +68,14 @@ def main() -> None:
         num_flows=4,
         jitter_window=args.jitter,
         reorder_capacity=max(64, 4 * args.jitter),
-        control=ControlPlane("quantile" if args.quantile else "width"),
+        range_mode=args.ranges,
         verify=True,
         **topo_kw,
     )
     print(
         f"{args.topology} fabric ({len(res.hop_stats)} hops, "
-        f"{args.interleave} arrivals, jitter {args.jitter}): "
+        f"{args.interleave} arrivals, jitter {args.jitter}, "
+        f"{res.range_mode} ranges, {res.num_epochs} epoch(s)): "
         f"server {res.server_seconds:.3f}s, max {max(res.passes)} passes "
         f"-> {100 * (1 - res.server_seconds / t_plain):.1f}% faster"
     )

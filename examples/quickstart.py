@@ -7,12 +7,11 @@ Stream -> programmable switch (MergeMarathon partial sort, simulated)
 """
 
 import argparse
-import sys
 import time
 
 import numpy as np
 
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401
 
 from repro.core import RunStats, Switch, marathon_streams, merge_sort, server_sort
 from repro.data import random_trace

@@ -5,11 +5,9 @@ batching engine with the partial-sort top-k sampler.
 """
 
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
-
+import _bootstrap  # noqa: F401
 import jax
 import numpy as np
 

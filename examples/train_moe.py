@@ -11,11 +11,9 @@ a few hundred steps (slower on one CPU core).
 
 import argparse
 import dataclasses
-import sys
 import time
 
-sys.path.insert(0, "src")
-
+import _bootstrap  # noqa: F401
 import jax
 import jax.numpy as jnp
 import numpy as np

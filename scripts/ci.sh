@@ -16,6 +16,9 @@ echo "== batch benchmark smoke (benchmarks/run.py --quick) =="
 python benchmarks/run.py --quick
 
 echo "== dataplane benchmark smoke (benchmarks/net_bench.py --quick) =="
-python benchmarks/net_bench.py --quick --faithful-check
+python benchmarks/net_bench.py --quick --faithful-check --out BENCH_net.json
+
+echo "== BENCH_net.json schema + sampled-vs-oracle gate (benchmarks/emit.py) =="
+python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8
 
 echo "CI OK"

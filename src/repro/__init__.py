@@ -1,0 +1,12 @@
+"""Reproduction of *Accelerating Big-Data Sorting Through Programmable
+Switches* (arXiv 2103.14071), grown into a jax_pallas system.
+
+Layers (see docs/ARCHITECTURE.md): :mod:`repro.core` (the paper's
+algorithms), :mod:`repro.net` (the packetized dataplane + adaptive control
+plane), :mod:`repro.kernels` (Pallas TPU fast paths), :mod:`repro.data`
+(traces and scenario workloads), plus the training/serving harnesses that
+exercise the sort primitive at scale.
+
+Deliberately import-free: subpackages pull in heavy dependencies (jax) only
+when used.
+"""

@@ -10,7 +10,7 @@
 
 from .marathon import blockwise_sort, marathon_flat, marathon_streams
 from .mergesort import merge_sort, merge_sort_reference, merge_two, server_sort
-from .partition import quantile_ranges, segment_of, set_ranges
+from .partition import load_imbalance, quantile_ranges, segment_of, set_ranges
 from .runs import RunStats, merge_passes, run_lengths, run_starts
 from .switchsim import Segment, Switch
 
@@ -22,6 +22,7 @@ __all__ = [
     "merge_sort_reference",
     "merge_two",
     "server_sort",
+    "load_imbalance",
     "quantile_ranges",
     "segment_of",
     "set_ranges",

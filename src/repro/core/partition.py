@@ -50,6 +50,21 @@ def segment_of(values: np.ndarray, ranges: np.ndarray) -> np.ndarray:
     return seg.astype(np.int64)
 
 
+def load_imbalance(values: np.ndarray, ranges: np.ndarray) -> float:
+    """Peak-over-mean segment load of routing ``values`` through ``ranges``.
+
+    1.0 is perfect balance; ``len(ranges)`` is everything on one segment.
+    This is the §6.3 imbalance statistic as a *prediction*: the adaptive
+    control plane evaluates it on a traffic sample to decide whether the
+    installed ranges still fit the distribution (drift detection).
+    """
+    values = np.asarray(values)
+    if values.size == 0:
+        return 1.0
+    counts = np.bincount(segment_of(values, ranges), minlength=len(ranges))
+    return float(counts.max() / (values.size / len(ranges)))
+
+
 def quantile_ranges(
     sample: np.ndarray, num_segments: int, max_value: int
 ) -> np.ndarray:

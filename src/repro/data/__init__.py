@@ -1,6 +1,33 @@
+"""repro.data — workloads: the paper's §6 traces plus beyond-paper scenarios.
+
+:mod:`traces` synthesizes the paper's three evaluation traces (uniform
+random, CAIDA-like packet lengths, SNIA-like IO sizes); :mod:`scenarios`
+dials the axes the paper never swept (sortedness, adversarial skew,
+duplicates, drift, outliers); :mod:`synthetic`/:mod:`tokens`/:mod:`packing`
+feed the training-side harnesses.
+"""
+
+from .scenarios import (
+    SCENARIO_DOMAIN,
+    SCENARIOS,
+    adversarial_skew,
+    drifting,
+    duplicate_heavy,
+    near_sorted_outliers,
+    scenario_max_value,
+    sortedness_dial,
+)
 from .traces import TRACES, memory_trace, network_trace, random_trace, trace_max_value
 
 __all__ = [
+    "SCENARIO_DOMAIN",
+    "SCENARIOS",
+    "adversarial_skew",
+    "drifting",
+    "duplicate_heavy",
+    "near_sorted_outliers",
+    "scenario_max_value",
+    "sortedness_dial",
     "TRACES",
     "memory_trace",
     "network_trace",

@@ -13,6 +13,9 @@ results (§6.3): the unique-value count and the heavy skew of the real traces.
 * ``memory_trace`` — IO sizes: power-of-two-aligned block sizes (512B..1MB)
   with Zipf popularity over 368 distinct sizes, plus short bursts of repeats
   (sequential IO), which gives the long pre-existing runs the paper observes.
+
+Axes the paper does *not* sweep (sortedness, adversarial skew, duplicates,
+distribution drift) live in :mod:`repro.data.scenarios`.
 """
 
 from __future__ import annotations

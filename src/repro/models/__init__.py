@@ -1,3 +1,7 @@
+"""Model zoo for the training/serving harnesses (decoder LMs, enc-dec,
+MoE, SSM variants) — the workloads that exercise the sort-based dispatch
+primitives at scale."""
+
 from .encdec import EncDecLM
 from .lm import LM
 

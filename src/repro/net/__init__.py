@@ -3,10 +3,19 @@
 Models the path the data actually takes: storage servers emit fixed-size
 packets (:mod:`packet`), an arrival model interleaves concurrent flows
 (:mod:`flow`), one or more programmable switches partially sort in flight
-(:mod:`topology`), and a streaming compute server overlaps its k-way merge
-with arrival (:mod:`server`).  :mod:`pipeline` wires it end to end.
+(:mod:`topology`) under ranges dictated by the control plane
+(:mod:`control` — static equal-width, oracle quantile, or adaptive sampled
+with mid-stream re-partitioning), and a streaming compute server overlaps
+its k-way merge with arrival (:mod:`server`).  :mod:`pipeline` wires it end
+to end.
 """
 
+from .control import (
+    RANGE_MODES,
+    AdaptiveControlPlane,
+    ControlPlane,
+    ReservoirSampler,
+)
 from .flow import INTERLEAVES, Flow, interleave, split_flows
 from .packet import (
     DEFAULT_PAYLOAD,
@@ -26,7 +35,6 @@ from .server import StreamingServer, stream_sort
 from .topology import (
     TOPOLOGIES,
     AggregationTree,
-    ControlPlane,
     HopStats,
     LeafSpine,
     SingleSwitch,
@@ -35,6 +43,10 @@ from .topology import (
 )
 
 __all__ = [
+    "RANGE_MODES",
+    "AdaptiveControlPlane",
+    "ControlPlane",
+    "ReservoirSampler",
     "INTERLEAVES",
     "Flow",
     "interleave",
@@ -53,7 +65,6 @@ __all__ = [
     "stream_sort",
     "TOPOLOGIES",
     "AggregationTree",
-    "ControlPlane",
     "HopStats",
     "LeafSpine",
     "SingleSwitch",

@@ -1,0 +1,258 @@
+"""Adaptive control plane: online range estimation + epoched re-partitioning.
+
+The paper's range partitioning (§5, Alg. 2) assumes the control plane knows
+the key distribution when it programs the switch: equal-width ranges need
+only ``max_value``; the beyond-paper balanced splitters need the quantiles.
+A real deployment knows neither ahead of time — the control plane must learn
+the distribution from the traffic itself and, when the traffic *drifts*,
+re-program the data plane without corrupting the sort in flight.  This
+module provides that loop, in three range modes used across the pipeline,
+benchmarks, and tests:
+
+* ``"static"``  — the paper's Alg. 2 equal-width ranges.  Needs only the key
+  domain; badly load-unbalanced on skewed traces (§6.3).
+* ``"oracle"``  — balanced quantile splitters computed from the *full*
+  dataset before any packet moves.  The upper bound no online scheme beats.
+* ``"sampled"`` — :class:`AdaptiveControlPlane`: bootstrap on equal-width
+  ranges, sample the live stream into a :class:`ReservoirSampler`, install
+  estimated quantile ranges after a warmup prefix, and re-partition again
+  whenever a recent-traffic window shows the installed ranges have drifted
+  badly out of balance.
+
+Re-partitioning is *epoched*: a range update never rewrites routing for keys
+already inside the fabric.  The pipeline closes the current epoch (the
+switch drains every segment — exactly Alg. 3's flush passes), installs the
+new ranges, and continues in a fresh epoch.  Keys are then demultiplexed per
+(epoch, segment); each such sub-stream is still emitted as ≥L-length sorted
+runs, and the streaming server merges the per-epoch segment outputs into the
+global order (:class:`repro.net.server.StreamingServer` ``final_merge``) —
+so correctness never depends on the estimate being any good, only load
+balance does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.partition import load_imbalance, quantile_ranges, set_ranges
+
+#: The range modes ``run_pipeline``/``net_bench`` sweep.
+RANGE_MODES = ("oracle", "sampled", "static")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlPlane:
+    """One-shot control plane: computes the ranges every hop uses (PR 1).
+
+    ``mode="width"`` is the paper's Alg. 2 (equal-width, comparison-only);
+    ``mode="quantile"`` is the balanced splitter variant, fed by a bounded
+    sample of the data (what the server would sniff from the first packets).
+    :class:`AdaptiveControlPlane` supersedes this for online operation; this
+    class remains the explicit, stateless way to pin a fabric's ranges.
+    """
+
+    mode: str = "width"
+    sample_size: int = 4096
+    seed: int = 0
+
+    def ranges(
+        self, values: np.ndarray, num_segments: int, max_value: int
+    ) -> np.ndarray:
+        if self.mode == "width":
+            return set_ranges(max_value, num_segments)
+        if self.mode == "quantile":
+            values = np.asarray(values)
+            if values.size > self.sample_size:
+                rng = np.random.default_rng(self.seed)
+                values = rng.choice(values, size=self.sample_size, replace=False)
+            return quantile_ranges(values, num_segments, max_value)
+        raise ValueError(f"unknown control-plane mode {self.mode!r}")
+
+
+class ReservoirSampler:
+    """Bounded uniform sample of an unbounded key stream (Algorithm R).
+
+    ``offer`` is vectorized over packet payloads: the fill phase copies, the
+    steady state keeps arrival ``t`` (0-based) with probability ``cap/(t+1)``
+    into a uniformly random slot.  Batched slot assignment lets later writes
+    within one payload shadow earlier ones — the sample stays uniform to
+    within one payload, which is far below what the splitter needs.
+    Deterministic for a fixed seed, like every other randomized piece of the
+    harness.
+    """
+
+    def __init__(self, capacity: int = 4096, seed: int = 0) -> None:
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self._rng = np.random.default_rng(seed)
+        self._buf = np.empty(capacity, dtype=np.int64)
+        self._fill = 0
+        self._seen = 0
+
+    @property
+    def seen(self) -> int:
+        """Total keys offered so far."""
+        return self._seen
+
+    def offer(self, values: np.ndarray) -> None:
+        v = np.asarray(values, dtype=np.int64).ravel()
+        if v.size == 0:
+            return
+        if self._fill < self.capacity:
+            take = min(self.capacity - self._fill, v.size)
+            self._buf[self._fill : self._fill + take] = v[:take]
+            self._fill += take
+            self._seen += take
+            v = v[take:]
+            if v.size == 0:
+                return
+        t = self._seen + np.arange(v.size)
+        keep = self._rng.random(v.size) * (t + 1) < self.capacity
+        if keep.any():
+            slots = self._rng.integers(0, self.capacity, size=v.size)
+            self._buf[slots[keep]] = v[keep]
+        self._seen += v.size
+
+    def snapshot(self) -> np.ndarray:
+        """Copy of the current sample (≤ capacity keys)."""
+        return self._buf[: self._fill].copy()
+
+
+class AdaptiveControlPlane:
+    """Estimates balanced segment ranges from the live packet stream.
+
+    Lifecycle, driven by the pipeline one payload at a time:
+
+    1. ``bootstrap_ranges()`` installs equal-width ranges (Alg. 2 — the only
+       thing computable before traffic exists) and opens epoch 1.
+    2. ``observe(payload)`` feeds the reservoir and a sliding
+       ``recent_window`` of the newest keys; it returns ``True`` when the
+       current epoch should close.  The first handoff fires once ``warmup``
+       keys have been seen; later handoffs fire when, re-checked every
+       ``check_every`` keys, the installed ranges' load imbalance on the
+       recent window exceeds ``rebalance_factor ×`` what freshly estimated
+       ranges would achieve (distribution drift).
+    3. ``propose()`` returns the next epoch's ranges — from the whole-prefix
+       reservoir at the warmup handoff (the distribution so far), from the
+       recent window at drift handoffs (the distribution *now*) — and
+       ``install()`` commits them, opening the next epoch.
+
+    ``max_epochs`` caps the number of installed range-sets (bootstrap
+    included), bounding re-partition churn the way a real control plane
+    rate-limits table rewrites.
+    """
+
+    def __init__(
+        self,
+        num_segments: int,
+        max_value: int,
+        *,
+        sample_capacity: int = 4096,
+        warmup: int = 4096,
+        recent_window: int = 4096,
+        check_every: int = 4096,
+        rebalance_factor: float = 2.0,
+        max_epochs: int = 4,
+        seed: int = 0,
+    ) -> None:
+        if num_segments <= 0:
+            raise ValueError("num_segments must be positive")
+        if max_value < 0:
+            raise ValueError("max_value must be non-negative")
+        if warmup <= 0 or recent_window <= 0 or check_every <= 0:
+            raise ValueError("warmup/recent_window/check_every must be positive")
+        if max_epochs < 1:
+            raise ValueError("max_epochs must be >= 1")
+        self.num_segments = num_segments
+        self.max_value = max_value
+        self.warmup = warmup
+        self.recent_window = recent_window
+        self.check_every = check_every
+        self.rebalance_factor = rebalance_factor
+        self.max_epochs = max_epochs
+        self.reservoir = ReservoirSampler(sample_capacity, seed)
+        self.installed: np.ndarray | None = None
+        self.epoch = 0  # number of installed range-sets
+        self._since_check = 0
+        self._recent_chunks: list[np.ndarray] = []
+        self._recent_total = 0
+        self._pending: np.ndarray | None = None  # drift proposal from observe()
+
+    # -- sliding window -------------------------------------------------
+    def _push_recent(self, v: np.ndarray) -> None:
+        self._recent_chunks.append(v)
+        self._recent_total += v.size
+        while (
+            self._recent_chunks
+            and self._recent_total - self._recent_chunks[0].size
+            >= self.recent_window
+        ):
+            self._recent_total -= self._recent_chunks[0].size
+            self._recent_chunks.pop(0)
+
+    def recent(self) -> np.ndarray:
+        """The newest ≤ ``recent_window`` keys, oldest first."""
+        if not self._recent_chunks:
+            return np.zeros(0, dtype=np.int64)
+        cat = np.concatenate(self._recent_chunks)
+        return cat[-self.recent_window :]
+
+    # -- lifecycle ------------------------------------------------------
+    def bootstrap_ranges(self) -> np.ndarray:
+        """Epoch 1's ranges: equal-width (needs only the key domain)."""
+        ranges = set_ranges(self.max_value, self.num_segments)
+        self.install(ranges)
+        return ranges
+
+    def install(self, ranges: np.ndarray) -> None:
+        """Commit ``ranges`` as the fabric's routing for the next epoch."""
+        ranges = np.asarray(ranges, dtype=np.int64)
+        if ranges.shape != (self.num_segments, 2):
+            raise ValueError(
+                f"ranges shape {ranges.shape} != ({self.num_segments}, 2)"
+            )
+        self.installed = ranges
+        self.epoch += 1
+        self._since_check = 0
+        self._pending = None
+
+    def observe(self, payload: np.ndarray) -> bool:
+        """Feed one payload; return ``True`` when the epoch should close."""
+        if self.installed is None:
+            raise RuntimeError("observe() before bootstrap_ranges()")
+        v = np.asarray(payload, dtype=np.int64).ravel()
+        self.reservoir.offer(v)
+        self._push_recent(v)
+        self._since_check += v.size
+        if self.epoch >= self.max_epochs:
+            return False
+        if self.epoch == 1:  # bootstrap epoch: hand off after the warmup
+            return self.reservoir.seen >= self.warmup
+        if self._since_check < self.check_every:
+            return False
+        self._since_check = 0
+        recent = self.recent()
+        if recent.size < 4 * self.num_segments:  # too few keys to judge
+            return False
+        cur = load_imbalance(recent, self.installed)
+        proposed = quantile_ranges(recent, self.num_segments, self.max_value)
+        best = load_imbalance(recent, proposed)
+        if cur > self.rebalance_factor * max(best, 1.0):
+            self._pending = proposed  # propose() reuses the scored ranges
+            return True
+        return False
+
+    def propose(self) -> np.ndarray:
+        """Ranges for the next epoch (does not install them)."""
+        if self._pending is not None:  # drift handoff: the ranges observe() scored
+            return self._pending
+        if self.epoch <= 1:
+            sample = self.reservoir.snapshot()  # uniform over the prefix
+        else:
+            sample = self.recent()  # drift: what traffic looks like *now*
+        if sample.size == 0:
+            return set_ranges(self.max_value, self.num_segments)
+        return quantile_ranges(sample, self.num_segments, self.max_value)

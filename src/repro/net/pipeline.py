@@ -6,10 +6,21 @@ ingress link, a switch topology runs MergeMarathon at every hop, an optional
 delivery model jitters packet order (bounded displacement — real networks
 reorder), and the streaming server recovers the global sort.
 
+Ranges come from the control plane in one of three ``range_mode`` settings
+(:mod:`repro.net.control`): ``"static"`` equal-width (paper Alg. 2),
+``"oracle"`` full-data quantile splitters, or ``"sampled"`` — the adaptive
+plane that estimates ranges online and may re-partition mid-stream.  A
+re-partition closes the current *epoch*: the fabric drains (Alg. 3's flush
+passes), new ranges are installed, and subsequent packets route in a fresh
+epoch whose segments get distinct virtual ids; the server then k-way merges
+the per-(epoch, segment) outputs instead of concatenating
+(``final_merge``) — so a bad or stale estimate can cost balance, never
+correctness.
+
 The load-bearing invariant, checked by ``verify=True`` and the test matrix:
-for any topology × interleave × delivery, the server's output equals
-``np.sort(input)``, and the per-segment delivered multisets equal the
-single-switch reference.
+for any topology × interleave × delivery × range mode, the server's output
+equals ``np.sort(input)``, and the per-(epoch, segment) delivered multisets
+equal the single-switch reference.
 """
 
 from __future__ import annotations
@@ -19,21 +30,26 @@ import time
 
 import numpy as np
 
+from ..core.partition import quantile_ranges, set_ranges
+from .control import RANGE_MODES, AdaptiveControlPlane, ControlPlane
 from .flow import interleave, split_flows
 from .packet import DEFAULT_PAYLOAD, Packet, packetize, segment_streams
 from .server import StreamingServer
-from .topology import ControlPlane, HopStats, make_topology
+from .topology import HopStats, make_topology
 
 
 @dataclasses.dataclass(eq=False)  # ndarray fields: generated __eq__ would raise
 class PipelineResult:
     output: np.ndarray
-    passes: list[int]  # per-segment merge passes (server contract)
+    passes: list[int]  # per-(epoch, segment) merge passes (server contract)
     hop_stats: list[HopStats]
-    segment_multisets: list[np.ndarray]  # delivered per-segment streams
+    segment_multisets: list[np.ndarray]  # delivered per-(epoch, segment) streams
     max_reorder_depth: int
     server_seconds: float  # time spent in the server (the paper's metric)
     n: int
+    range_mode: str = "width"
+    num_epochs: int = 1
+    ranges_history: list[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 def jitter_delivery(
@@ -64,6 +80,8 @@ def run_pipeline(
     segment_length: int = 32,
     max_value: int | None = None,
     control: ControlPlane | None = None,
+    range_mode: str | None = None,
+    adaptive: AdaptiveControlPlane | None = None,
     interleave_mode: str = "round_robin",
     seed: int = 0,
     faithful: bool = False,
@@ -74,33 +92,99 @@ def run_pipeline(
     verify: bool = False,
     **topo_kw,
 ) -> PipelineResult:
-    """Drive the full storage→switch→server datapath over ``values``."""
+    """Drive the full storage→switch→server datapath over ``values``.
+
+    Exactly one range source applies: ``range_mode`` (``"oracle"``,
+    ``"sampled"``, ``"static"``), an explicit ``control`` plane, or the
+    default equal-width :class:`ControlPlane`.  ``adaptive`` optionally
+    supplies a pre-configured :class:`AdaptiveControlPlane` for
+    ``range_mode="sampled"``; it is consumed by the run (single-use).
+    """
     values = np.asarray(values, dtype=np.int64)
     if max_value is None:
         max_value = int(values.max(initial=0))
-    control = control or ControlPlane()
-    ranges = control.ranges(values, num_segments, max_value)
+    if range_mode is not None:
+        if range_mode not in RANGE_MODES:
+            raise ValueError(
+                f"unknown range_mode {range_mode!r}; options: {RANGE_MODES}"
+            )
+        if control is not None:
+            raise ValueError("pass either control= or range_mode=, not both")
+    if adaptive is not None and range_mode != "sampled":
+        raise ValueError('adaptive= requires range_mode="sampled"')
 
     flows = split_flows(values, num_flows, payload_size)
     arrivals = interleave(flows, interleave_mode, seed=seed)
 
-    topo = make_topology(
-        topology,
-        num_segments=num_segments,
-        segment_length=segment_length,
-        max_value=max_value,
-        ranges=ranges,
-        faithful=faithful,
-        backend=backend,
-        payload_size=payload_size,
-        **topo_kw,
-    )
-    delivered, hop_stats = topo.run(arrivals)
+    def _run_topology(ranges: np.ndarray, packets: list[Packet]):
+        topo = make_topology(
+            topology,
+            num_segments=num_segments,
+            segment_length=segment_length,
+            max_value=max_value,
+            ranges=ranges,
+            faithful=faithful,
+            backend=backend,
+            payload_size=payload_size,
+            **topo_kw,
+        )
+        return topo.run(packets)
+
+    if range_mode == "sampled":
+        plane = adaptive or AdaptiveControlPlane(
+            num_segments, max_value, seed=seed
+        )
+        epochs: list[tuple[np.ndarray, list[Packet]]] = [
+            (plane.bootstrap_ranges(), [])
+        ]
+        for p in arrivals:
+            epochs[-1][1].append(p)
+            if plane.observe(p.payload):
+                nxt = plane.propose()
+                plane.install(nxt)
+                epochs.append((nxt, []))
+        nonempty = [(r, pk) for r, pk in epochs if pk]
+        epochs = nonempty or epochs[:1]
+        delivered: list[Packet] = []
+        hop_stats: list[HopStats] = []
+        ranges_history: list[np.ndarray] = []
+        for e, (ranges_e, pkts) in enumerate(epochs):
+            out, stats = _run_topology(ranges_e, pkts)
+            delivered.extend(
+                dataclasses.replace(
+                    p, segment_id=p.segment_id + e * num_segments
+                )
+                for p in out
+            )
+            hop_stats.extend(
+                dataclasses.replace(st, name=f"e{e}:{st.name}") for st in stats
+            )
+            ranges_history.append(ranges_e)
+        eff_segments = num_segments * len(epochs)
+        final_merge = len(epochs) > 1
+        mode_str = "sampled"
+    else:
+        if range_mode == "oracle":
+            ranges = quantile_ranges(values, num_segments, max_value)
+            mode_str = "oracle"
+        elif range_mode == "static":
+            ranges = set_ranges(max_value, num_segments)
+            mode_str = "static"
+        else:
+            plane = control or ControlPlane()
+            ranges = plane.ranges(values, num_segments, max_value)
+            mode_str = plane.mode
+        delivered, hop_stats = _run_topology(ranges, arrivals)
+        ranges_history = [ranges]
+        eff_segments = num_segments
+        final_merge = False
+
     if jitter_window:
         delivered = jitter_delivery(delivered, jitter_window, seed=seed + 1)
 
     server = StreamingServer(
-        num_segments, k=k, reorder_capacity=reorder_capacity
+        eff_segments, k=k, reorder_capacity=reorder_capacity,
+        final_merge=final_merge,
     )
     t0 = time.perf_counter()
     for p in delivered:
@@ -114,7 +198,7 @@ def run_pipeline(
     # Reorder-buffer-corrected per-segment streams, for multiset invariants.
     # (jitter permutes packets; segment_streams gives raw arrival order,
     # which is fine — invariants are multiset-level.)
-    seg_ms = segment_streams(delivered, num_segments)
+    seg_ms = segment_streams(delivered, eff_segments)
     return PipelineResult(
         output=out,
         passes=passes,
@@ -123,6 +207,9 @@ def run_pipeline(
         max_reorder_depth=server.max_reorder_depth,
         server_seconds=server_seconds,
         n=int(values.size),
+        range_mode=mode_str,
+        num_epochs=len(ranges_history),
+        ranges_history=ranges_history,
     )
 
 

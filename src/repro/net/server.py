@@ -18,7 +18,10 @@ as they land.  :class:`StreamingServer` keeps, per segment (port number):
 
 ``finish()`` returns the same ``(sorted, per-segment passes)`` contract as
 :func:`repro.core.mergesort.server_sort`, so benchmarks can swap one for the
-other.  The reported pass count is ``merge_passes(runs, k)`` — provably equal
+other.  With ``final_merge=True`` the per-segment outputs are k-way merged
+instead of concatenated — required when segments are *epoched* by the
+adaptive control plane (:mod:`repro.net.control`): ranges from different
+epochs overlap, so segment order no longer implies key order.  The reported pass count is ``merge_passes(runs, k)`` — provably equal
 to ``merge_sort``'s measured pass count on the identical stream (asserted by
 ``benchmarks/run.py bench_theory`` and the net test-suite).
 """
@@ -40,12 +43,14 @@ class StreamingServer:
         num_segments: int,
         k: int = 10,
         reorder_capacity: int | None = None,
+        final_merge: bool = False,
     ) -> None:
         if num_segments <= 0:
             raise ValueError("num_segments must be positive")
         self.num_segments = num_segments
         self.k = k
         self.reorder_capacity = reorder_capacity
+        self.final_merge = final_merge
         S = num_segments
         self._pending: list[dict[int, np.ndarray]] = [{} for _ in range(S)]
         self._next_seq = [0] * S
@@ -136,9 +141,12 @@ class StreamingServer:
             if remaining:
                 outs.append(merge_runs(remaining))
             passes.append(merge_passes(self._run_count[sid], self.k))
-        out = (
-            np.concatenate(outs) if outs else np.zeros(0, dtype=np.int64)
-        )
+        if not outs:
+            out = np.zeros(0, dtype=np.int64)
+        elif self.final_merge:
+            out = merge_runs(outs)
+        else:
+            out = np.concatenate(outs)
         assert out.size == self._ingested
         return out, passes
 

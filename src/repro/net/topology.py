@@ -5,9 +5,9 @@ work (Cheetah, switch-as-parallel-computer pipelines) shows the interesting
 regimes are *fabrics*: leaves partially sort their shard, spines merge the
 already-friendlier streams.  Every hop here is a :class:`SwitchHop` running
 MergeMarathon; all hops in a fabric share one set of key ranges dictated by
-the :class:`ControlPlane` (the paper's division-free data plane), which is
-what makes per-segment multisets invariant across topologies — each hop only
-permutes *within* a segment, never across.
+the control plane (:mod:`repro.net.control` — the paper's division-free data
+plane), which is what makes per-segment multisets invariant across
+topologies — each hop only permutes *within* a segment, never across.
 
 Two hop engines, identical wire behaviour (property-tested):
 
@@ -26,43 +26,10 @@ import dataclasses
 import numpy as np
 
 from ..core.marathon import blockwise_sort, marathon_flat
-from ..core.partition import quantile_ranges, set_ranges
 from ..core.runs import run_lengths
 from ..core.switchsim import Switch
+from .control import ControlPlane  # noqa: F401  (re-export: pre-PR-2 home)
 from .packet import DEFAULT_PAYLOAD, Packet, depacketize, merge_round_robin
-
-
-# ---------------------------------------------------------------------------
-# Control plane
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class ControlPlane:
-    """Computes the key ranges every hop in the fabric uses.
-
-    ``mode="width"`` is the paper's Alg. 2 (equal-width, comparison-only);
-    ``mode="quantile"`` is the beyond-paper balanced splitter variant, fed by
-    a bounded sample of the data (what the server would sniff from the first
-    packets).
-    """
-
-    mode: str = "width"
-    sample_size: int = 4096
-    seed: int = 0
-
-    def ranges(
-        self, values: np.ndarray, num_segments: int, max_value: int
-    ) -> np.ndarray:
-        if self.mode == "width":
-            return set_ranges(max_value, num_segments)
-        if self.mode == "quantile":
-            values = np.asarray(values)
-            if values.size > self.sample_size:
-                rng = np.random.default_rng(self.seed)
-                values = rng.choice(values, size=self.sample_size, replace=False)
-            return quantile_ranges(values, num_segments, max_value)
-        raise ValueError(f"unknown control-plane mode {self.mode!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,268 @@
+"""Adaptive control plane: sampling, drift handoff, and the epoch invariants.
+
+The satellite contract (ISSUE 2): ``range_mode="sampled"`` under drifting and
+degenerate traffic (all-equal keys, a single segment, drift mid-stream) must
+still deliver per-(epoch, segment) multisets matching the single-switch
+reference, and the server's output must equal ``np.sort(input)`` — the epoch
+handoff may cost balance, never correctness.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import load_imbalance, quantile_ranges, set_ranges
+from repro.data import SCENARIOS, adversarial_skew, drifting, scenario_max_value
+from repro.net import (
+    RANGE_MODES,
+    AdaptiveControlPlane,
+    ReservoirSampler,
+    run_pipeline,
+)
+
+MAXV = scenario_max_value("drifting")
+
+
+def _feed(plane, values, payload=64):
+    """Drive observe() packet-by-packet; install every proposal. Returns fire count."""
+    fires = 0
+    for i in range(0, values.size, payload):
+        if plane.observe(values[i : i + payload]):
+            plane.install(plane.propose())
+            fires += 1
+    return fires
+
+
+# -- reservoir -----------------------------------------------------------
+
+
+def test_reservoir_bounded_deterministic_and_contained():
+    vals = np.random.default_rng(0).integers(0, 1000, 50_000)
+    a, b = ReservoirSampler(256, seed=7), ReservoirSampler(256, seed=7)
+    for r in (a, b):
+        for i in range(0, vals.size, 64):
+            r.offer(vals[i : i + 64])
+    np.testing.assert_array_equal(a.snapshot(), b.snapshot())
+    snap = a.snapshot()
+    assert snap.size == 256 and a.seen == vals.size
+    assert np.isin(snap, vals).all()
+
+
+def test_reservoir_tracks_the_whole_prefix():
+    """Steady-state replacement keeps late keys represented (not fill-only)."""
+    r = ReservoirSampler(128, seed=0)
+    r.offer(np.zeros(10_000, dtype=np.int64))
+    r.offer(np.ones(10_000, dtype=np.int64))
+    frac_late = r.snapshot().mean()
+    assert 0.2 < frac_late < 0.8  # ~uniform over the prefix → ~0.5
+
+
+# -- drift detection -----------------------------------------------------
+
+
+def test_warmup_handoff_fires_once_on_stationary_traffic():
+    vals = np.random.default_rng(1).integers(0, MAXV + 1, 40_000)
+    plane = AdaptiveControlPlane(8, MAXV, warmup=2048, seed=0)
+    plane.bootstrap_ranges()
+    assert _feed(plane, vals) == 1  # warmup handoff only, no drift thrash
+    assert plane.epoch == 2
+
+
+def test_drift_fires_and_rebalances():
+    vals = drifting(60_000, seed=0, phases=3)
+    plane = AdaptiveControlPlane(
+        8, MAXV, warmup=2048, check_every=2048, max_epochs=8, seed=0
+    )
+    plane.bootstrap_ranges()
+    assert _feed(plane, vals) >= 2  # warmup + at least one drift handoff
+    # the final ranges fit the final phase
+    assert load_imbalance(plane.recent(), plane.installed) < 2.0
+
+
+def test_max_epochs_caps_handoffs():
+    vals = drifting(80_000, seed=0, phases=8)
+    plane = AdaptiveControlPlane(
+        8, MAXV, warmup=1024, check_every=1024, max_epochs=3, seed=0
+    )
+    plane.bootstrap_ranges()
+    _feed(plane, vals)
+    assert plane.epoch == 3
+
+
+def test_proposals_are_valid_partitions():
+    vals = adversarial_skew(20_000, seed=0)
+    plane = AdaptiveControlPlane(16, MAXV, warmup=1024, seed=0)
+    plane.bootstrap_ranges()
+    _feed(plane, vals)
+    r = plane.installed
+    assert r.shape == (16, 2)
+    assert r[0, 0] == 0 and r[-1, 1] == MAXV + 1
+    np.testing.assert_array_equal(r[1:, 0], r[:-1, 1])
+
+
+def test_load_imbalance_helper():
+    r = set_ranges(99, 4)
+    assert load_imbalance(np.arange(100), r) == 1.0
+    assert load_imbalance(np.zeros(50, dtype=np.int64), r) == 4.0
+    assert load_imbalance(np.zeros(0), r) == 1.0
+
+
+# -- pipeline range modes: correctness under drift/degeneracy ------------
+
+TOPO_CASES = [
+    ("single", {}),
+    ("leaf_spine", {"num_leaves": 3}),
+    ("tree", {"branching": 2, "height": 3}),
+]
+
+DEGENERATE = {
+    "drift": lambda: drifting(20_000, seed=2, phases=4),
+    "all_equal": lambda: np.full(6_000, 7_777, dtype=np.int64),
+    "duplicate_heavy": lambda: SCENARIOS["duplicate_heavy"](10_000, seed=1),
+}
+
+
+def _kw(segs=8):
+    return dict(
+        num_segments=segs,
+        segment_length=16,
+        max_value=MAXV,
+        num_flows=1,  # temporal order reaches the switch (drift stays drift)
+        payload_size=32,
+    )
+
+
+@pytest.mark.parametrize("case", sorted(DEGENERATE))
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+def test_sampled_mode_matches_single_switch_reference(case, topo, topo_kw):
+    vals = DEGENERATE[case]()
+    adaptive_kw = dict(warmup=1024, check_every=1024, seed=0)
+    res = run_pipeline(
+        vals,
+        topology=topo,
+        range_mode="sampled",
+        adaptive=AdaptiveControlPlane(8, MAXV, **adaptive_kw),
+        verify=True,
+        **_kw(),
+        **topo_kw,
+    )
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+    ref = run_pipeline(
+        vals,
+        topology="single",
+        range_mode="sampled",
+        adaptive=AdaptiveControlPlane(8, MAXV, **adaptive_kw),
+        **_kw(),
+    )
+    assert res.num_epochs == ref.num_epochs
+    assert len(res.segment_multisets) == len(ref.segment_multisets)
+    for got, want in zip(res.segment_multisets, ref.segment_multisets):
+        np.testing.assert_array_equal(np.sort(got), np.sort(want))
+
+
+@pytest.mark.parametrize("mode", RANGE_MODES)
+def test_all_range_modes_sort_single_segment_and_all_equal(mode):
+    # num_segments=1: every partitioner degenerates to a passthrough
+    vals = drifting(8_000, seed=3)
+    res = run_pipeline(
+        vals, topology="single", range_mode=mode, verify=True, **_kw(segs=1)
+    )
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+    # all-equal keys: max_value defaults to the single key value
+    eq = np.full(4_000, 9, dtype=np.int64)
+    res = run_pipeline(
+        eq,
+        topology="single",
+        range_mode=mode,
+        num_segments=4,
+        segment_length=8,
+        num_flows=2,
+        payload_size=32,
+        verify=True,
+    )
+    np.testing.assert_array_equal(res.output, eq)
+
+
+def _weighted_imbalance(res, skip_warmup=True):
+    """Arrival-weighted mean hop imbalance, optionally past the bootstrap."""
+    hops = [h for h in res.hop_stats if not (skip_warmup and h.name.startswith("e0:"))]
+    total = sum(h.arrivals for h in hops)
+    return sum(h.load_imbalance * h.arrivals for h in hops) / total
+
+
+def test_drift_repartition_fires_in_pipeline_and_helps():
+    """Mid-stream re-partitioning keeps post-warmup load balanced; ranges
+    frozen at the warmup handoff (``max_epochs=2``) go stale as the
+    distribution marches on."""
+    vals = drifting(40_000, seed=0, phases=4)
+    common = _kw()
+    adaptive_kw = dict(warmup=2048, check_every=2048)
+    sampled = run_pipeline(
+        vals,
+        topology="single",
+        range_mode="sampled",
+        adaptive=AdaptiveControlPlane(8, MAXV, max_epochs=8, **adaptive_kw),
+        verify=True,
+        **common,
+    )
+    assert sampled.num_epochs >= 3  # warmup handoff + mid-stream drift
+    assert len(sampled.ranges_history) == sampled.num_epochs
+    stale = run_pipeline(
+        vals,
+        topology="single",
+        range_mode="sampled",
+        adaptive=AdaptiveControlPlane(8, MAXV, max_epochs=2, **adaptive_kw),
+        verify=True,
+        **common,
+    )
+    assert stale.num_epochs == 2
+    assert _weighted_imbalance(sampled) < 0.6 * _weighted_imbalance(stale)
+
+
+def test_sampled_beats_static_balance_on_adversarial_skew():
+    vals = adversarial_skew(30_000, seed=0)
+    common = _kw(segs=16)
+    sampled = run_pipeline(
+        vals, topology="single", range_mode="sampled", verify=True, **common
+    )
+    static = run_pipeline(
+        vals, topology="single", range_mode="static", verify=True, **common
+    )
+    oracle = run_pipeline(
+        vals, topology="single", range_mode="oracle", verify=True, **common
+    )
+    # static: ~hot_mass of keys in the top segment
+    post_warmup = sampled.hop_stats[-1].load_imbalance
+    assert static.hop_stats[-1].load_imbalance > 8.0
+    assert post_warmup < static.hop_stats[-1].load_imbalance / 2
+    assert oracle.hop_stats[-1].load_imbalance < 4.0
+
+
+def test_sampled_with_jitter_and_reorder_buffer():
+    vals = drifting(16_000, seed=5, phases=3)
+    res = run_pipeline(
+        vals,
+        topology="leaf_spine",
+        num_leaves=2,
+        range_mode="sampled",
+        adaptive=AdaptiveControlPlane(8, MAXV, warmup=1024, check_every=1024),
+        jitter_window=5,
+        reorder_capacity=64,
+        verify=True,
+        **_kw(),
+    )
+    assert res.num_epochs >= 2
+    assert 0 < res.max_reorder_depth <= 64
+
+
+def test_range_mode_arg_validation():
+    vals = np.arange(100)
+    with pytest.raises(ValueError, match="unknown range_mode"):
+        run_pipeline(vals, range_mode="bogus")
+    with pytest.raises(ValueError, match="not both"):
+        from repro.net import ControlPlane
+
+        run_pipeline(vals, range_mode="static", control=ControlPlane())
+    with pytest.raises(ValueError, match="sampled"):
+        run_pipeline(
+            vals, range_mode="static", adaptive=AdaptiveControlPlane(4, 99)
+        )

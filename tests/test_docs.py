@@ -1,0 +1,79 @@
+"""Docs stay wired to the code: docstring presence + doc-link integrity.
+
+The ISSUE 2 anti-rot contract: every public module in ``repro.core``,
+``repro.net``, and ``repro.data`` carries a substantive module docstring;
+``docs/ARCHITECTURE.md`` and ``docs/PAPER_MAP.md`` exist, are linked from
+the README, and every repo path PAPER_MAP cites actually exists.
+"""
+
+import importlib
+import pkgutil
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+DOC_PACKAGES = ("repro.core", "repro.net", "repro.data")
+
+
+def _public_modules():
+    out = []
+    for pkgname in DOC_PACKAGES:
+        pkg = importlib.import_module(pkgname)
+        out.append(pkgname)
+        for info in pkgutil.iter_modules(pkg.__path__):
+            if not info.name.startswith("_"):
+                out.append(f"{pkgname}.{info.name}")
+    return out
+
+
+@pytest.mark.parametrize("modname", _public_modules())
+def test_public_modules_have_docstrings(modname):
+    mod = importlib.import_module(modname)
+    doc = (mod.__doc__ or "").strip()
+    assert len(doc) >= 80, (
+        f"{modname} needs a substantive module docstring "
+        f"(got {len(doc)} chars) — see docs/ARCHITECTURE.md for the bar"
+    )
+
+
+def test_architecture_and_paper_map_exist_and_are_substantive():
+    for name in ("ARCHITECTURE.md", "PAPER_MAP.md"):
+        path = REPO / "docs" / name
+        assert path.is_file(), f"docs/{name} missing"
+        assert len(path.read_text()) > 2000, f"docs/{name} is a stub"
+
+
+def test_readme_links_the_docs_and_the_artifact():
+    readme = (REPO / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/PAPER_MAP.md" in readme
+    assert "BENCH_net.json" in readme  # "Reproducing the numbers" section
+    assert "scripts/ci.sh" in readme
+
+
+def test_paper_map_cites_only_existing_paths():
+    text = (REPO / "docs" / "PAPER_MAP.md").read_text()
+    cited = set(
+        re.findall(r"`((?:src/repro|tests|benchmarks|docs)/[\w/.]+?\.(?:py|md|sh))`", text)
+    ) | set(re.findall(r"\(((?:docs/)?\w+\.md)\)", text))
+    assert cited, "PAPER_MAP.md cites no files — regex or doc rotted"
+    missing = sorted(
+        p for p in cited
+        if not ((REPO / p).is_file() or (REPO / "docs" / p).is_file())
+    )
+    assert not missing, f"PAPER_MAP.md cites nonexistent paths: {missing}"
+
+
+def test_paper_map_covers_the_dataplane_modules():
+    """Every repro.net/repro.core module is mentioned in the paper map."""
+    text = (REPO / "docs" / "PAPER_MAP.md").read_text()
+    for pkgname in ("repro.core", "repro.net"):
+        pkg = importlib.import_module(pkgname)
+        for info in pkgutil.iter_modules(pkg.__path__):
+            if info.name.startswith("_"):
+                continue
+            rel = f"src/{pkgname.replace('.', '/')}/{info.name}.py"
+            assert rel in text, f"PAPER_MAP.md does not mention {rel}"

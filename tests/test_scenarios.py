@@ -1,0 +1,76 @@
+"""Scenario generators: domain, determinism, and each scenario's defining axis."""
+
+import numpy as np
+import pytest
+
+from repro.core.runs import RunStats
+from repro.data import (
+    SCENARIO_DOMAIN,
+    SCENARIOS,
+    adversarial_skew,
+    drifting,
+    duplicate_heavy,
+    near_sorted_outliers,
+    scenario_max_value,
+    sortedness_dial,
+)
+
+N = 50_000
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_domain_and_determinism(name):
+    gen = SCENARIOS[name]
+    a = gen(N, seed=3)
+    b = gen(N, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int64
+    assert a.size == N
+    assert a.min() >= 0
+    assert a.max() <= scenario_max_value(name)
+
+
+def test_sortedness_dial_monotone_run_length():
+    """Higher sortedness ⇒ longer natural runs (the axis the dial controls)."""
+    lens = [
+        RunStats.of(sortedness_dial(N, s, seed=1)).mean_len
+        for s in (0.0, 0.5, 0.9, 1.0)
+    ]
+    assert lens == sorted(lens)
+    assert lens[-1] == N  # fully sorted: one run
+    assert lens[0] < 3.0  # uniform shuffle: i.i.d.-like runs
+
+
+def test_sortedness_dial_preserves_distribution():
+    """The dial moves disorder, not mass: same multiset at every setting."""
+    a = sortedness_dial(N, 1.0, seed=2)
+    b = sortedness_dial(N, 0.3, seed=2)
+    np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def test_adversarial_skew_concentrates_at_domain_top():
+    vals = adversarial_skew(N, seed=0, hot_keys=4, hot_mass=0.95)
+    top, counts = np.unique(vals, return_counts=True)
+    hot = top[np.argsort(counts)[-4:]]
+    assert (hot > SCENARIO_DOMAIN - SCENARIO_DOMAIN // 64 - 2).all()
+    assert counts.max() / N > 0.1  # single hot key carries real mass
+
+
+def test_duplicate_heavy_cardinality():
+    assert np.unique(duplicate_heavy(N, uniques=8)).size <= 8
+    assert np.unique(duplicate_heavy(N, uniques=1)).size == 1
+
+
+def test_drifting_phases_march_upward():
+    vals = drifting(N, seed=0, phases=4)
+    quarter = N // 4
+    means = [vals[i * quarter : (i + 1) * quarter].mean() for i in range(4)]
+    assert means == sorted(means)
+    assert means[-1] - means[0] > SCENARIO_DOMAIN / 2  # real drift, not noise
+
+
+def test_near_sorted_outliers_keeps_long_runs():
+    vals = near_sorted_outliers(N, seed=0, outlier_frac=0.01)
+    stats = RunStats.of(vals)
+    assert stats.mean_len > 20  # long runs survive the outliers
+    assert stats.mean_len < N  # but the stream is no longer one run
