@@ -1,11 +1,11 @@
 """BENCH_*.json artifact schema: write, validate, and gate bench results.
 
 Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
-trajectory across PRs.  The schema (version 1) is hand-validated here — no
+trajectory across PRs.  The schema (version 2) is hand-validated here — no
 external dependency — and documented in README "Reproducing the numbers":
 
     {
-      "schema_version": 1,
+      "schema_version": 2,
       "bench": "net",
       "config":  {"n", "repeats", "segments", "length", "payload", "k",
                   "quick": bool},
@@ -20,14 +20,24 @@ external dependency — and documented in README "Reproducing the numbers":
          "hops": int, "epochs": int,
          "load_imbalance": float,  # arrival-weighted mean across hops
          "mean_run_len": float},   # arrival-weighted mean across hops
-      ]
+      ],
+      "hop_throughput": {       # per-engine single-hop microbench (v2)
+        "config": {"segments", "length", "payload", "n", "trace",
+                   "repeats"},
+        "rows": [{"engine": str,        # "fused" | "segment" | "faithful"
+                  "seconds": float,     # min over repeats
+                  "keys_per_sec": float}],
+        "speedup_fused_vs_segment": float,
+      }
     }
 
-CLI — validate an artifact, and optionally gate on the ISSUE 2 acceptance
-bar (sampled ranges within ``--min-sampled-ratio`` of the oracle-quantile
-reduction on the skewed traces):
+CLI — validate an artifact, and optionally gate on the acceptance bars:
+sampled ranges within ``--min-sampled-ratio`` of the oracle-quantile
+reduction on the skewed traces (ISSUE 2), and the fused batched hop engine
+at least ``--min-hop-speedup``× the per-segment numpy path (ISSUE 3):
 
-    python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8
+    python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \\
+        --min-hop-speedup 3.0
 """
 
 from __future__ import annotations
@@ -40,7 +50,7 @@ try:
 except ImportError:  # pragma: no cover - python -m benchmarks.emit
     from benchmarks import _bootstrap  # noqa: F401
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 _CONFIG_FIELDS = {
     "n": int,
@@ -69,6 +79,23 @@ _ROW_FIELDS = {
 }
 
 _RANGE_MODES = {"oracle", "sampled", "static"}
+
+_HOP_CONFIG_FIELDS = {
+    "segments": int,
+    "length": int,
+    "payload": int,
+    "n": int,
+    "trace": str,
+    "repeats": int,
+}
+
+_HOP_ROW_FIELDS = {
+    "engine": str,
+    "seconds": float,
+    "keys_per_sec": float,
+}
+
+_HOP_ENGINES = {"fused", "segment", "faithful"}
 
 
 def _check_type(path: str, value, want: type) -> None:
@@ -126,15 +153,55 @@ def validate_net_bench(doc: dict) -> None:
             raise ValueError(f"$.results[{i}].load_imbalance: < 1.0")
         if row["reduction"] > 1.0 or row["pass_reduction"] > 1.0:
             raise ValueError(f"$.results[{i}]: reduction > 1.0")
+    hop = doc.get("hop_throughput")
+    _check_type("$.hop_throughput", hop, dict)
+    _check_type("$.hop_throughput.config", hop.get("config"), dict)
+    for key, want in _HOP_CONFIG_FIELDS.items():
+        if key not in hop["config"]:
+            raise ValueError(f"$.hop_throughput.config.{key}: missing")
+        _check_type(f"$.hop_throughput.config.{key}", hop["config"][key], want)
+    _check_type("$.hop_throughput.rows", hop.get("rows"), list)
+    if not hop["rows"]:
+        raise ValueError("$.hop_throughput.rows: empty")
+    for i, row in enumerate(hop["rows"]):
+        _check_type(f"$.hop_throughput.rows[{i}]", row, dict)
+        for key, want in _HOP_ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.hop_throughput.rows[{i}].{key}: missing")
+            _check_type(f"$.hop_throughput.rows[{i}].{key}", row[key], want)
+        if row["engine"] not in _HOP_ENGINES:
+            raise ValueError(
+                f"$.hop_throughput.rows[{i}].engine: {row['engine']!r} not "
+                f"in {sorted(_HOP_ENGINES)}"
+            )
+        if row["seconds"] <= 0 or row["keys_per_sec"] <= 0:
+            raise ValueError(
+                f"$.hop_throughput.rows[{i}]: non-positive timing"
+            )
+    _check_type(
+        "$.hop_throughput.speedup_fused_vs_segment",
+        hop.get("speedup_fused_vs_segment"),
+        float,
+    )
+    if hop["speedup_fused_vs_segment"] <= 0:
+        raise ValueError("$.hop_throughput.speedup_fused_vs_segment: <= 0")
 
 
-def write_net_bench(path: str, config: dict, results: list[dict]) -> dict:
+def hop_speedup(doc: dict) -> float:
+    """The artifact's fused-vs-per-segment hop-throughput ratio."""
+    return float(doc["hop_throughput"]["speedup_fused_vs_segment"])
+
+
+def write_net_bench(
+    path: str, config: dict, results: list[dict], hop_throughput: dict
+) -> dict:
     """Assemble, validate, and write a net-bench artifact; return the doc."""
     doc = {
         "schema_version": SCHEMA_VERSION,
         "bench": "net",
         "config": config,
         "results": results,
+        "hop_throughput": hop_throughput,
     }
     validate_net_bench(doc)
     with open(path, "w") as fh:
@@ -182,12 +249,26 @@ def main() -> None:
         "--traces", default="network,memory",
         help="comma-separated traces the gate applies to",
     )
+    ap.add_argument(
+        "--min-hop-speedup", type=float, default=None,
+        help="gate: fused hop engine must be at least this many times "
+        "faster than the per-segment numpy path (ISSUE 3 acceptance: 3.0)",
+    )
     args = ap.parse_args()
     with open(args.artifact) as fh:
         doc = json.load(fh)
     validate_net_bench(doc)
     print(f"{args.artifact}: schema v{doc['schema_version']} OK "
           f"({len(doc['results'])} rows)")
+    if args.min_hop_speedup is not None:
+        speedup = hop_speedup(doc)
+        status = "OK" if speedup >= args.min_hop_speedup else "FAIL"
+        print(f"  hop throughput fused/segment: {speedup:.2f}x {status}")
+        if speedup < args.min_hop_speedup:
+            raise SystemExit(
+                f"fused hop engine is only {speedup:.2f}x the per-segment "
+                f"path (need {args.min_hop_speedup}x)"
+            )
     if args.min_sampled_ratio is not None:
         ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))
         for trace, ratio in ratios.items():

@@ -20,8 +20,14 @@ The ``single``/``static`` cell is the paper's Fig. 12-14 setup and should
 land within noise of ``benchmarks/run.py``'s reduction for the same
 (segments, length) — printed side by side as ``batch_reduction``.
 
+Every run also records the **hop-throughput microbench** (schema v2): one
+switch hop over a ≥1M-key trace, keys/sec per hop engine — the fused
+batched engine vs the pre-fusion per-segment numpy path (byte-identical
+wire output, property-tested) — plus their speedup ratio, which
+``benchmarks/emit.py --min-hop-speedup`` gates in CI.
+
 Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
-            [--faithful-check] [--out BENCH_net.json]
+            [--faithful-check] [--hop-n N] [--out BENCH_net.json]
 """
 
 from __future__ import annotations
@@ -42,8 +48,17 @@ except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
     from emit import write_net_bench
 
 from repro.core import marathon_streams, merge_sort, server_sort
+from repro.core.partition import set_ranges
 from repro.data import SCENARIOS, TRACES, scenario_max_value, trace_max_value
-from repro.net import RANGE_MODES, plain_stream_sort, run_pipeline
+from repro.net import (
+    RANGE_MODES,
+    HopSpec,
+    interleave_batch,
+    plain_stream_sort,
+    run_hop,
+    run_pipeline,
+    split_flows,
+)
 
 K = 10
 TOPOLOGIES = [
@@ -54,6 +69,53 @@ TOPOLOGIES = [
 # Scenario rows (beyond-paper workloads) added with --scenarios; kept to the
 # two the control plane differentiates most to bound runtime.
 BENCH_SCENARIOS = ("adversarial_skew", "drifting")
+
+# Hop-throughput microbench geometry: one switch hop over a large trace at
+# the repo's default wire payload (64 keys/packet) on a wide, 64-pipeline
+# switch — the regime the fused engine exists for.  Engines are the
+# byte-identical production paths ("fused") and the pre-fusion per-segment
+# numpy loops ("segment"); "faithful" is element-at-a-time Python and would
+# take minutes at this size.
+HOP_BENCH = {"segments": 64, "length": 64, "payload": 64}
+BENCH_HOP_ENGINES = ("fused", "segment")
+
+
+def hop_throughput(n: int, repeats: int) -> dict:
+    """Keys/sec through one switch hop, per engine, on the random trace."""
+    cfg = dict(HOP_BENCH, n=n, trace="random", repeats=repeats)
+    trace = TRACES["random"](n)
+    maxv = trace_max_value("random")
+    batch = interleave_batch(
+        split_flows(trace, 8, cfg["payload"]), "round_robin"
+    )
+    spec = HopSpec(
+        cfg["segments"],
+        cfg["length"],
+        maxv,
+        set_ranges(maxv, cfg["segments"]),
+        payload_size=cfg["payload"],
+    )
+    rows = []
+    by_engine = {}
+    for engine in BENCH_HOP_ENGINES:
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out, _ = run_hop(batch, spec, "hop", engine)
+            times.append(time.perf_counter() - t0)
+        np.testing.assert_array_equal(
+            np.sort(out.values), np.sort(trace)
+        )
+        secs = float(np.min(times))
+        by_engine[engine] = secs
+        rows.append(
+            {"engine": engine, "seconds": secs, "keys_per_sec": n / secs}
+        )
+    return {
+        "config": cfg,
+        "rows": rows,
+        "speedup_fused_vs_segment": by_engine["segment"] / by_engine["fused"],
+    }
 
 
 def _best(fn, repeats: int):
@@ -101,6 +163,15 @@ def main() -> None:
         "--faithful-check",
         action="store_true",
         help="also run the element-at-a-time switch on a small slice",
+    )
+    ap.add_argument(
+        "--hop-n", type=int, default=1_000_000,
+        help="trace size for the per-engine hop-throughput microbench "
+        "(>= 1M keys; not reduced by --quick)",
+    )
+    ap.add_argument(
+        "--hop-repeats", type=int, default=5,
+        help="repeats for the hop-throughput microbench (min-time wins)",
     )
     args = ap.parse_args()
     n, repeats = (100_000, 2) if args.quick else (args.n, args.repeats)
@@ -207,6 +278,19 @@ def main() -> None:
                 f"ok_n={small.size};passes={max(rf.passes)}",
             )
 
+    hop = hop_throughput(args.hop_n, args.hop_repeats)
+    for r in hop["rows"]:
+        emit(
+            f"hop_{r['engine']}_random",
+            r["seconds"] * 1e6,
+            f"keys_per_sec={r['keys_per_sec']:.0f};n={hop['config']['n']}",
+        )
+    print(
+        f"# hop speedup fused vs segment: "
+        f"{hop['speedup_fused_vs_segment']:.2f}x",
+        flush=True,
+    )
+
     if args.out:
         config = {
             "n": n,
@@ -217,7 +301,7 @@ def main() -> None:
             "k": K,
             "quick": bool(args.quick),
         }
-        write_net_bench(args.out, config, rows)
+        write_net_bench(args.out, config, rows, hop_throughput=hop)
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 
 

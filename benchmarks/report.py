@@ -1,6 +1,15 @@
-"""Render the roofline table from dry-run JSON (EXPERIMENTS.md §Roofline).
+"""Render benchmark artifacts as tables.
+
+Two artifact kinds, detected by shape:
+
+* dry-run JSON (a list of mesh results) → the roofline table
+  (EXPERIMENTS.md §Roofline);
+* ``BENCH_net.json`` (a dict with ``bench: "net"``) → the dataplane matrix
+  (reduction per topology × trace × range-mode) plus the per-engine
+  hop-throughput microbench (keys/sec, fused vs per-segment speedup).
 
     PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
+    PYTHONPATH=src:. python -m benchmarks.report BENCH_net.json
 """
 
 from __future__ import annotations
@@ -98,9 +107,57 @@ def render(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def render_net(doc: dict) -> str:
+    """The dataplane matrix + hop-throughput section of a BENCH_net.json."""
+    cfg = doc["config"]
+    out = [
+        f"## net bench (n={cfg['n']}, {cfg['segments']}x{cfg['length']} "
+        f"switch, payload {cfg['payload']}, k={cfg['k']})",
+        "",
+        "| topology | trace | ranges | reduction | passes | pass_red |"
+        " epochs | imbalance |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in doc["results"]:
+        out.append(
+            f"| {r['topology']} | {r['trace']} | {r['range_mode']} "
+            f"| {r['reduction']:.3f} | {r['passes']} "
+            f"| {r['pass_reduction']:.3f} | {r['epochs']} "
+            f"| {r['load_imbalance']:.2f} |"
+        )
+    hop = doc["hop_throughput"]
+    hc = hop["config"]
+    out += [
+        "",
+        f"## hop throughput ({hc['trace']} trace, n={hc['n']}, "
+        f"{hc['segments']}x{hc['length']} switch, payload {hc['payload']})",
+        "",
+        "| engine | seconds | keys/sec |",
+        "|---|---|---|",
+    ]
+    for r in hop["rows"]:
+        out.append(
+            f"| {r['engine']} | {r['seconds']:.3f} "
+            f"| {r['keys_per_sec']:,.0f} |"
+        )
+    out.append(
+        f"\nfused vs per-segment speedup: "
+        f"{hop['speedup_fused_vs_segment']:.2f}x"
+    )
+    return "\n".join(out)
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_singlepod.json"
     results = json.load(open(path))
+    if isinstance(results, dict) and results.get("bench") == "net":
+        try:
+            from benchmarks.emit import validate_net_bench
+        except ImportError:  # run as a plain script: benchmarks/ is sys.path[0]
+            from emit import validate_net_bench
+        validate_net_bench(results)  # clean schema error beats a KeyError
+        print(render_net(results))
+        return
     rows = rows_from(results)
     print(render(rows))
     ok = [r for r in rows if r["status"] == "ok"]

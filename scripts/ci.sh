@@ -5,20 +5,24 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== tier-1 tests =="
-# Two pre-existing train-convergence thresholds miss by <0.001 on this
-# container's jax/CPU numerics (seed issue, tracked in ROADMAP); everything
-# else must pass.
-python -m pytest -x -q \
-    --deselect tests/test_train.py::test_loss_decreases_on_learnable_data \
-    --deselect tests/test_train.py::test_compressed_training_converges
+python -m pytest -x -q
 
 echo "== batch benchmark smoke (benchmarks/run.py --quick) =="
 python benchmarks/run.py --quick
 
 echo "== dataplane benchmark smoke (benchmarks/net_bench.py --quick) =="
+# --quick shrinks the matrix trace to 100k values; the hop-throughput
+# microbench still runs the fused batched engine vs the per-segment path
+# on a full 1M-key trace (the ISSUE 3 acceptance workload).
 python benchmarks/net_bench.py --quick --faithful-check --out BENCH_net.json
 
-echo "== BENCH_net.json schema + sampled-vs-oracle gate (benchmarks/emit.py) =="
-python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8
+echo "== BENCH_net.json schema + gates (benchmarks/emit.py) =="
+# sampled ranges >= 0.8x oracle reduction (ISSUE 2); fused hop engine
+# >= 3x the per-segment numpy path (ISSUE 3).
+python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \
+    --min-hop-speedup 3.0
+
+echo "== benchmark report render (benchmarks/report.py) =="
+python benchmarks/report.py BENCH_net.json
 
 echo "CI OK"

@@ -8,14 +8,22 @@
 * :mod:`repro.core.distributed` — the switch fabric at pod scale (shard_map).
 """
 
-from .marathon import blockwise_sort, marathon_flat, marathon_streams
+from .marathon import (
+    MarathonEmission,
+    blockwise_sort,
+    marathon_emission,
+    marathon_flat,
+    marathon_streams,
+)
 from .mergesort import merge_sort, merge_sort_reference, merge_two, server_sort
 from .partition import load_imbalance, quantile_ranges, segment_of, set_ranges
 from .runs import RunStats, merge_passes, run_lengths, run_starts
 from .switchsim import Segment, Switch
 
 __all__ = [
+    "MarathonEmission",
     "blockwise_sort",
+    "marathon_emission",
     "marathon_flat",
     "marathon_streams",
     "merge_sort",

@@ -20,6 +20,13 @@ Consequences used throughout the framework:
 
 * The vectorized oracle is ``np.sort`` over reshaped blocks — O(N log L)
   with perfect SIMD, no per-element control flow.
+* The whole switch is one *fused* pass (:func:`marathon_emission`): route
+  every arrival, rank it within its segment, sort **all** segments' blocks
+  as the rows of a single padded matrix, and reconstruct the exact emission
+  interleave with gathers — a handful of array ops for any number of
+  segments, no per-segment Python iteration.  The same row matrix is what
+  the Pallas backend sorts in one device call per hop
+  (:mod:`repro.net.engine`).
 * The Pallas VMEM-tile bitonic sorter (kernels/bitonic.py) computes the
   *exact* MergeMarathon stream when the tile equals the segment length: the
   paper's y compare-swap pipeline stages become the network's log²(L)
@@ -33,6 +40,10 @@ from __future__ import annotations
 import numpy as np
 
 from .partition import segment_of, set_ranges
+
+# Padding key for the ragged tail rows of the fused block matrix; sorts to
+# the row tail and is sliced off before emission.
+_PAD = np.iinfo(np.int64).max
 
 
 def blockwise_sort(values: np.ndarray, block: int) -> np.ndarray:
@@ -48,6 +59,186 @@ def blockwise_sort(values: np.ndarray, block: int) -> np.ndarray:
     head = np.sort(values[:nfull].reshape(-1, block), axis=1).reshape(-1)
     tail = np.sort(values[nfull:])
     return np.concatenate([head, tail])
+
+
+def default_row_sort(mat: np.ndarray, row_len: np.ndarray) -> np.ndarray:
+    """Sort each row of the fused block matrix (numpy reference).
+
+    ``row_len`` (count of real keys per row; the rest is tail padding) is
+    part of the row-sorter contract so backends can distinguish real keys
+    from the padding sentinel without value comparisons — numpy sorts pads
+    like any other maximal key and ignores it.
+    """
+    del row_len
+    return np.sort(mat, axis=1)
+
+
+def rank_within_segment(
+    seg: np.ndarray, num_segments: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Group arrivals by segment, keeping arrival order within each.
+
+    Returns ``(order, counts, starts, ranks)``: ``order`` is the stable
+    grouping permutation, ``counts[s]``/``starts[s]`` the segment's arrival
+    count and offset in grouped order, and ``ranks[t]`` the 0-based rank of
+    arrival ``t`` among its segment's arrivals — the vectorized form of
+    "this is the r-th value this pipeline has seen".
+    """
+    n = seg.size
+    # Stable grouping: int16 segment ids take numpy's O(n) radix path; the
+    # composite-key quicksort covers (implausibly) wide switches.
+    if num_segments <= np.iinfo(np.int16).max:
+        order = np.argsort(seg.astype(np.int16), kind="stable")
+    else:
+        order = np.argsort(seg * max(n, 1) + np.arange(n, dtype=np.int64))
+    counts = (
+        np.bincount(seg, minlength=num_segments)
+        if n
+        else np.zeros(num_segments, dtype=np.int64)
+    ).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
+    ranks = np.empty(n, dtype=np.int64)
+    ranks[order] = np.arange(n, dtype=np.int64) - np.repeat(starts, counts)
+    return order, counts, starts, ranks
+
+
+def block_matrix(
+    grouped: np.ndarray, counts: np.ndarray, block: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Lay every segment's consecutive ``block``-chunks out as matrix rows.
+
+    ``grouped`` is the arrival stream grouped by segment (``values[order]``);
+    row ``r`` holds one segment's ``b``-th block, short tail rows padded with
+    the dtype max.  Returns ``(mat, row_len)`` with ``row_len`` the count of
+    real keys per row — rows are ordered (segment, block), so the valid
+    prefixes of the sorted rows concatenate back into the per-segment
+    blockwise-sorted streams.
+    """
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    nblk = -(-counts // block)  # ceil; 0 for empty segments
+    total = int(nblk.sum())
+    if total == 0:
+        return (
+            np.zeros((0, block), dtype=grouped.dtype),
+            np.zeros(0, dtype=np.int64),
+        )
+    row_seg = np.repeat(np.arange(counts.size, dtype=np.int64), nblk)
+    blk_starts = np.concatenate([[0], np.cumsum(nblk)[:-1]])
+    row_blk = (
+        np.arange(total, dtype=np.int64) - np.repeat(blk_starts, nblk)
+    )
+    row_off = row_blk * block
+    row_len = np.minimum(counts[row_seg] - row_off, block)
+    idx = (starts[row_seg] + row_off)[:, None] + np.arange(block)[None, :]
+    valid = np.arange(block)[None, :] < row_len[:, None]
+    mat = np.where(valid, grouped[np.minimum(idx, max(grouped.size - 1, 0))], _PAD)
+    return mat, row_len
+
+
+class MarathonEmission:
+    """The fused pass over one hop's arrival stream, with its internals.
+
+    The eager state is the minimum the hop engine consumes: the per-segment
+    blockwise ``streams`` (grouped by segment — each segment's slice *is*
+    its emitted stream in emission order), the grouping arrays, and
+    ``slots`` — for every emission event, in wire order, the index of its
+    key within ``streams``.  The familiar flat views (``values``,
+    ``segment_ids``, ``positions``) are derived gathers, materialized only
+    when a caller (``marathon_flat``, the faithful cross-checks) asks.
+    """
+
+    def __init__(
+        self,
+        streams: np.ndarray,
+        slots: np.ndarray,
+        emit_seg: np.ndarray,
+        flush_sids: np.ndarray,
+        order: np.ndarray,
+        counts: np.ndarray,
+        starts: np.ndarray,
+        ranks: np.ndarray,
+    ) -> None:
+        self.streams = streams  # per-segment blockwise streams, concatenated
+        self.slots = slots  # emission order → index into ``streams``
+        self._emit_seg = emit_seg  # segment of each per-arrival emission
+        self._flush_sids = flush_sids  # segment of each flush emission
+        self.order = order  # stable arrival→grouped permutation
+        self.counts = counts  # per-segment arrival counts
+        self.starts = starts  # per-segment offsets into ``streams``
+        self.ranks = ranks  # per-arrival rank within its segment
+
+    @property
+    def values(self) -> np.ndarray:
+        """Emission-ordered keys (the faithful simulator's wire stream)."""
+        return self.streams[self.slots]
+
+    @property
+    def segment_ids(self) -> np.ndarray:
+        """Emission-ordered port numbers."""
+        return np.concatenate([self._emit_seg, self._flush_sids])
+
+    @property
+    def positions(self) -> np.ndarray:
+        """Per-emission position within its segment's emitted stream."""
+        return self.slots - self.starts[self.segment_ids]
+
+
+def marathon_emission(
+    values: np.ndarray,
+    num_segments: int,
+    segment_length: int,
+    max_value: int,
+    ranges: np.ndarray | None = None,
+    row_sort=None,
+) -> MarathonEmission:
+    """One fused, loop-free pass of the whole switch over ``values``.
+
+    Route → rank-within-segment → blockwise-sort **all** segments' blocks as
+    the rows of one padded matrix (``row_sort``, default ``np.sort``; the
+    Pallas backend sorts the same matrix in a single device call) →
+    reconstruct the emission interleave: arrival with per-segment rank
+    ``r >= L`` emits element ``r - L`` of its segment's stream, then the
+    flush appends each segment's last ``min(n_s, L)`` stream elements.
+    """
+    values = np.asarray(values, dtype=np.int64)
+    if ranges is None:
+        ranges = set_ranges(max_value, num_segments)
+    if row_sort is None:
+        row_sort = default_row_sort
+    L = segment_length
+    seg = segment_of(values, ranges)
+    order, counts, starts, ranks = rank_within_segment(seg, num_segments)
+
+    mat, row_len = block_matrix(values[order], counts, L)
+    streams = row_sort(mat, row_len)[
+        np.arange(L)[None, :] < row_len[:, None]
+    ] if mat.size else np.zeros(0, dtype=np.int64)
+
+    # Per-arrival emissions, in arrival order: arrival with rank r >= L
+    # emits its segment's stream element r - L.
+    emit_mask = ranks >= L
+    emit_slot = (starts[seg] + ranks - L)[emit_mask]
+    # Flush: segment by segment, the stream tail not yet emitted (at most
+    # L elements per segment — the flush arrays stay tiny).
+    n_emitted = np.maximum(counts - L, 0)
+    tail_len = counts - n_emitted  # = min(counts, L)
+    flush_sids = np.repeat(np.arange(num_segments, dtype=np.int64), tail_len)
+    tail_starts = np.concatenate([[0], np.cumsum(tail_len)[:-1]])
+    tail_off = (
+        np.arange(int(tail_len.sum()), dtype=np.int64)
+        - np.repeat(tail_starts, tail_len)
+    )
+    flush_slot = starts[flush_sids] + n_emitted[flush_sids] + tail_off
+    return MarathonEmission(
+        streams=streams,
+        slots=np.concatenate([emit_slot, flush_slot]),
+        emit_seg=seg[emit_mask],
+        flush_sids=flush_sids,
+        order=order,
+        counts=counts,
+        starts=starts,
+        ranks=ranks,
+    )
 
 
 def marathon_streams(
@@ -85,19 +276,39 @@ def marathon_flat(
     max_value: int,
     ranges: np.ndarray | None = None,
     block_sort=None,
+    row_sort=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Emission-ordered (value, segment_id) stream, matching the faithful
     simulator's wire order exactly.
 
-    The t-th arrival to segment ``s`` (t ≥ L) triggers emission of element
-    ``t - L`` of ``s``'s blockwise-sorted stream; the flush appends the rest
-    segment-by-segment.  We reconstruct that interleave vectorially.
+    The default path is the fused :func:`marathon_emission` — no per-segment
+    Python loop.  Passing an explicit per-segment ``block_sort`` callable
+    selects the legacy segment-at-a-time path (kept as the benchmark
+    baseline and as an independent cross-check of the fused engine).
     """
+    if block_sort is not None:
+        return _marathon_flat_persegment(
+            values, num_segments, segment_length, max_value, ranges, block_sort
+        )
+    em = marathon_emission(
+        values, num_segments, segment_length, max_value,
+        ranges=ranges, row_sort=row_sort,
+    )
+    return em.values, em.segment_ids
+
+
+def _marathon_flat_persegment(
+    values: np.ndarray,
+    num_segments: int,
+    segment_length: int,
+    max_value: int,
+    ranges: np.ndarray | None,
+    block_sort,
+) -> tuple[np.ndarray, np.ndarray]:
+    """The pre-fusion reference: one Python iteration per segment."""
     values = np.asarray(values, dtype=np.int64)
     if ranges is None:
         ranges = set_ranges(max_value, num_segments)
-    if block_sort is None:
-        block_sort = blockwise_sort
     seg = segment_of(values, ranges)
     L = segment_length
 
@@ -105,16 +316,8 @@ def marathon_flat(
     for s in range(num_segments):
         streams.append(block_sort(values[seg == s], L))
 
-    # Vectorized rank-within-segment for every arrival.
-    order = np.argsort(seg, kind="stable")
-    ranks = np.empty(len(values), dtype=np.int64)
-    boundaries = np.searchsorted(seg[order], np.arange(num_segments))
-    pos_in_seg = np.arange(len(values)) - np.repeat(
-        boundaries, np.diff(np.concatenate([boundaries, [len(values)]]))
-    )
-    ranks[order] = pos_in_seg
-    # Arrival t (per-segment rank r >= L) emits element r - L of the
-    # segment's blockwise-sorted stream.
+    order, counts, starts, ranks = rank_within_segment(seg, num_segments)
+    del order, starts
     emit_mask = ranks >= L
     emit_sids = seg[emit_mask]
     emit_idx = ranks[emit_mask] - L
@@ -125,7 +328,7 @@ def marathon_flat(
     flush_v = []
     flush_s = []
     for s in range(num_segments):
-        n_emitted = max(int((seg == s).sum()) - L, 0)
+        n_emitted = max(int(counts[s]) - L, 0)
         tail = streams[s][n_emitted:]
         flush_v.append(tail)
         flush_s.append(np.full(tail.size, s, dtype=np.int64))

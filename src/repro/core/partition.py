@@ -45,7 +45,9 @@ def segment_of(values: np.ndarray, ranges: np.ndarray) -> np.ndarray:
     """
     bounds = ranges[:, 1]  # exclusive upper bounds, ascending
     seg = np.searchsorted(bounds, values, side="right")
-    if np.any((values < ranges[0, 0]) | (seg >= len(ranges))):
+    if values.size and (
+        int(values.min()) < int(ranges[0, 0]) or int(seg.max()) >= len(ranges)
+    ):
         raise ValueError("value outside the switch domain")
     return seg.astype(np.int64)
 

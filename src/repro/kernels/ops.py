@@ -60,6 +60,32 @@ def _row_tile(rows: int, target: int = 8) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_rows_padded(x: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Row sort for an arbitrary row count: the fused hop engine's one
+    device call per switch hop.
+
+    Pads the row dimension up to a multiple of 8 with dtype-max rows so the
+    grid always tiles 8 rows per kernel invocation (``sort_rows`` would fall
+    to 1-row tiles whenever the row count is prime), sorts, and slices the
+    padding back off.  Column count must be a power of two (the bitonic
+    contract); ragged *columns* are the caller's padding, done once per hop.
+    """
+    rows, b = x.shape
+    if rows == 0:
+        return x
+    pad = (-rows) % 8
+    if pad:
+        fill = jnp.full((pad, b), jnp.iinfo(x.dtype).max, x.dtype)
+        x = jnp.concatenate([x, fill], axis=0)
+    out = bitonic.sort_tiles(
+        x,
+        rows_per_tile=8,
+        interpret=_interpret_default(interpret),
+    )
+    return out[:rows]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def sort_rows(x: jax.Array, interpret: bool | None = None) -> jax.Array:
     """Sort each row of (rows, B); B power of two."""
     return bitonic.sort_tiles(

@@ -1,13 +1,17 @@
 """repro.net — the in-network sort dataplane (paper Figs. 1–5).
 
 Models the path the data actually takes: storage servers emit fixed-size
-packets (:mod:`packet`), an arrival model interleaves concurrent flows
-(:mod:`flow`), one or more programmable switches partially sort in flight
-(:mod:`topology`) under ranges dictated by the control plane
-(:mod:`control` — static equal-width, oracle quantile, or adaptive sampled
-with mid-stream re-partitioning), and a streaming compute server overlaps
-its k-way merge with arrival (:mod:`server`).  :mod:`pipeline` wires it end
-to end.
+packets (:mod:`packet`) carried as columnar :class:`~repro.net.wire.WireBatch`
+streams (:mod:`wire` — struct-of-arrays, one row per key), an arrival model
+interleaves concurrent flows (:mod:`flow`), one or more programmable switches
+partially sort in flight — fabrics are declarative hop-graphs
+(:mod:`topology`) whose hops run one of three property-tested-identical
+engines (:mod:`engine`: fused batched, per-segment legacy, faithful Alg. 3) —
+under ranges dictated by the control plane (:mod:`control` — static
+equal-width, oracle quantile, or adaptive sampled with epoched mid-stream
+re-partitioning on batch columns), and a streaming compute server overlaps
+its k-way merge with arrival, ingesting batches directly (:mod:`server`).
+:mod:`pipeline` wires it end to end.
 """
 
 from .control import (
@@ -16,7 +20,17 @@ from .control import (
     ControlPlane,
     ReservoirSampler,
 )
-from .flow import INTERLEAVES, Flow, interleave, split_flows
+from .engine import (
+    ENGINES,
+    HOP_ENGINES,
+    HopSpec,
+    HopStats,
+    emission_to_wire,
+    fused_hop,
+    pallas_row_sort,
+    run_hop,
+)
+from .flow import INTERLEAVES, Flow, interleave, interleave_batch, split_flows
 from .packet import (
     DEFAULT_PAYLOAD,
     UNTAGGED,
@@ -28,6 +42,7 @@ from .packet import (
 from .pipeline import (
     PipelineResult,
     jitter_delivery,
+    jitter_delivery_batch,
     plain_stream_sort,
     run_pipeline,
 )
@@ -35,11 +50,26 @@ from .server import StreamingServer, stream_sort
 from .topology import (
     TOPOLOGIES,
     AggregationTree,
-    HopStats,
+    HopGraph,
+    HopNode,
     LeafSpine,
     SingleSwitch,
     SwitchHop,
+    leaf_spine_graph,
     make_topology,
+    run_graph,
+    single_graph,
+    tree_graph,
+)
+from .wire import (
+    WireBatch,
+    concat_batches,
+    merge_round_robin_batches,
+    packetize_batch,
+    ragged_arange,
+    ragged_gather,
+    segment_streams_batch,
+    split_by_flow,
 )
 
 __all__ = [
@@ -47,9 +77,18 @@ __all__ = [
     "AdaptiveControlPlane",
     "ControlPlane",
     "ReservoirSampler",
+    "ENGINES",
+    "HOP_ENGINES",
+    "HopSpec",
+    "HopStats",
+    "emission_to_wire",
+    "fused_hop",
+    "pallas_row_sort",
+    "run_hop",
     "INTERLEAVES",
     "Flow",
     "interleave",
+    "interleave_batch",
     "split_flows",
     "DEFAULT_PAYLOAD",
     "UNTAGGED",
@@ -59,15 +98,29 @@ __all__ = [
     "segment_streams",
     "PipelineResult",
     "jitter_delivery",
+    "jitter_delivery_batch",
     "plain_stream_sort",
     "run_pipeline",
     "StreamingServer",
     "stream_sort",
     "TOPOLOGIES",
     "AggregationTree",
-    "HopStats",
+    "HopGraph",
+    "HopNode",
     "LeafSpine",
     "SingleSwitch",
     "SwitchHop",
+    "leaf_spine_graph",
     "make_topology",
+    "run_graph",
+    "single_graph",
+    "tree_graph",
+    "WireBatch",
+    "concat_batches",
+    "merge_round_robin_batches",
+    "packetize_batch",
+    "ragged_arange",
+    "ragged_gather",
+    "segment_streams_batch",
+    "split_by_flow",
 ]

@@ -256,3 +256,32 @@ class AdaptiveControlPlane:
         if sample.size == 0:
             return set_ranges(self.max_value, self.num_segments)
         return quantile_ranges(sample, self.num_segments, self.max_value)
+
+    def split_epochs(self, batch) -> list[tuple[np.ndarray, "object"]]:
+        """Partition an arrival :class:`~repro.net.wire.WireBatch` into
+        epochs on its columns.
+
+        Drives the observe/propose/install lifecycle one payload at a time
+        (handoff decisions are control-path work at packet granularity —
+        the paper's switch reprograms between packets, never inside one),
+        but the data path stays columnar: each epoch is a zero-copy column
+        slice ``[epoch start, last packet of the epoch]``, closed *after*
+        the payload that triggered the handoff, exactly as the per-packet
+        pipeline did.  Returns ``[(ranges, sub-batch), ...]`` with at least
+        one entry; empty epochs are dropped (keeping the first if all are).
+        """
+        n = len(batch)
+        bounds = np.concatenate([batch.packet_starts(), [n]]).astype(np.int64)
+        cur_ranges = self.bootstrap_ranges()
+        epochs: list[tuple[np.ndarray, object]] = []
+        epoch_start = 0
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            if self.observe(batch.values[a:b]):
+                nxt = self.propose()
+                self.install(nxt)
+                epochs.append((cur_ranges, batch.slice_keys(epoch_start, int(b))))
+                cur_ranges = nxt
+                epoch_start = int(b)
+        epochs.append((cur_ranges, batch.slice_keys(epoch_start, n)))
+        nonempty = [(r, sub) for r, sub in epochs if len(sub)]
+        return nonempty or epochs[:1]

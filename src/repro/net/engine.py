@@ -1,0 +1,436 @@
+"""Fused batched hop engine: one vectorized pass per switch hop.
+
+The paper's switch partially sorts at line rate because every pipeline
+segment works in parallel on whatever arrives; the pre-fusion simulator
+instead looped Python-side over segments three separate times (block sort,
+stats, re-packetization) and, on the Pallas backend, paid one host↔device
+round-trip *per segment*.  This module is the array-native replacement: a
+hop consumes a :class:`~repro.net.wire.WireBatch` and produces the next
+hop's batch in a handful of numpy ops over **all** segments at once —
+
+1. **route**: ``segment_of`` over the value column (the parse-stage cascade);
+2. **rank**: each arrival's per-segment rank, one stable argsort;
+3. **block sort**: every segment's L-blocks laid out as rows of one padded
+   matrix and sorted together — ``np.sort(axis=1)`` or a *single* Pallas
+   bitonic device call per hop (:func:`pallas_row_sort`, padding and
+   slicing done once, with the numpy fallback rules of the per-segment path
+   preserved: non-power-of-two block, int32 overflow, negative keys);
+4. **emission order**: the exact faithful wire interleave reconstructed by
+   gathers (:func:`repro.core.marathon.marathon_emission`);
+5. **packetization**: ship-ordered output packets as column arithmetic —
+   a packet ships when its last key is emitted (:func:`emission_to_wire`).
+
+Three engines share the wire contract and are property-tested byte-identical
+(``tests/test_wire_order.py``): ``fused`` (this module), ``segment`` (the
+pre-fusion per-segment loops, kept as the benchmark baseline), and
+``faithful`` (element-at-a-time Alg. 3 via :class:`repro.core.switchsim.Switch`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.marathon import (
+    MarathonEmission,
+    blockwise_sort,
+    marathon_emission,
+)
+from ..core.switchsim import Switch
+from .packet import DEFAULT_PAYLOAD, Packet
+from .wire import WireBatch, empty_batch, ragged_arange, ragged_gather
+
+#: Engine registry: how a hop turns an arrival batch into a wire batch.
+ENGINES = ("fused", "segment", "faithful")
+
+
+# ---------------------------------------------------------------------------
+# Hop configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HopSpec:
+    """Everything a hop needs besides its arrival stream."""
+
+    num_segments: int
+    segment_length: int
+    max_value: int
+    ranges: np.ndarray = dataclasses.field(compare=False, default=None)
+    payload_size: int = DEFAULT_PAYLOAD
+    backend: str = "numpy"  # block-sort backend: "numpy" | "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Per-hop observability (vectorized — no per-segment Python loop)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HopStats:
+    """Per-hop observability (paper §6.3 run statistics, per hop)."""
+
+    name: str
+    arrivals: int
+    # arrivals routed to each segment (compare=False: ndarray __eq__)
+    segment_loads: np.ndarray = dataclasses.field(compare=False)
+    # peak segment load relative to the ideal uniform share (total/segments);
+    # 1.0 = perfectly balanced, S = everything on one of S segments
+    load_imbalance: float
+    emitted_runs: int  # total maximal runs across emitted sub-streams
+    mean_run_len: float
+    recirculations: int  # emitting flush passes (≤ 2 per segment, Alg. 3)
+
+    @classmethod
+    def collect(
+        cls,
+        name: str,
+        values: np.ndarray,
+        sids: np.ndarray,
+        num_segments: int,
+        segment_length: int,
+    ) -> "HopStats":
+        """Stats of an emission-ordered ``(values, sids)`` stream.
+
+        One stable argsort groups the stream by segment (emission order is
+        preserved within each); runs, run lengths, and flush passes then
+        fall out of boolean reductions over the grouped stream.
+        """
+        order = np.argsort(sids, kind="stable")
+        grouped = values[order]
+        counts = (
+            np.bincount(sids, minlength=num_segments)
+            if sids.size
+            else np.zeros(num_segments, dtype=np.int64)
+        )
+        return cls._from_grouped(name, grouped, counts, segment_length)
+
+    @classmethod
+    def _from_grouped(
+        cls,
+        name: str,
+        grouped: np.ndarray,
+        counts: np.ndarray,
+        segment_length: int,
+    ) -> "HopStats":
+        """Stats when the emitted stream is already grouped by segment."""
+        counts = np.asarray(counts, dtype=np.int64)
+        total = int(counts.sum())
+        imbalance = float(counts.max() / counts.mean()) if total else 1.0
+        # A run break is a descent *within* a segment's emitted stream.
+        seg_of_pos = np.repeat(np.arange(counts.size), counts)
+        desc = (grouped[1:] < grouped[:-1]) & (seg_of_pos[1:] == seg_of_pos[:-1])
+        runs = int((counts > 0).sum()) + int(desc.sum())
+        # Flush passes that emit values: one for a partially-filled segment
+        # (single young run), two for a full one — unless the younger run is
+        # empty (arrivals a multiple of L).
+        L = segment_length
+        recirc = int(
+            np.where(
+                counts == 0,
+                0,
+                np.where((counts <= L) | (counts % L == 0), 1, 2),
+            ).sum()
+        )
+        return cls(
+            name=name,
+            arrivals=total,
+            segment_loads=counts,
+            load_imbalance=imbalance,
+            emitted_runs=runs,
+            mean_run_len=(total / runs) if runs else 0.0,
+            recirculations=recirc,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pallas block sorter: one device call per hop
+# ---------------------------------------------------------------------------
+
+
+def pallas_row_sort(mat: np.ndarray, row_len: np.ndarray) -> np.ndarray:
+    """Sort the fused block matrix on the bitonic TPU kernel — one call.
+
+    The per-segment predecessor padded, shipped, sorted, and sliced once
+    *per segment per hop*; here the whole hop's blocks are already rows of
+    one matrix, so the host↔device round-trip happens exactly once.  The
+    fallback rules of the per-segment path are preserved: a block width
+    that is not a power of two, keys at/above int32 max, or negative keys
+    drop to the numpy row sort.  ``row_len`` tells real keys apart from the
+    tail padding *positionally*, so even a real key equal to the int64-max
+    pad sentinel is range-checked (and falls back) rather than mistaken for
+    padding; pads become the int32 max inside the kernel and still sort to
+    the row tails, which the caller slices off.
+    """
+    rows, block = mat.shape
+    if rows == 0 or block <= 1 or block & (block - 1):
+        return np.sort(mat, axis=1)
+    real = np.arange(block)[None, :] < np.asarray(row_len)[:, None]
+    masked = mat[real]
+    if masked.size and (
+        int(masked.min()) < 0 or int(masked.max()) >= np.iinfo(np.int32).max
+    ):
+        return np.sort(mat, axis=1)
+    from ..kernels import ops  # deferred: jax import is heavy
+
+    x32 = np.where(real, mat, np.iinfo(np.int32).max).astype(np.int32)
+    return np.asarray(ops.sort_rows_padded(x32)).astype(np.int64)
+
+
+ROW_SORTERS = {"numpy": None, "pallas": pallas_row_sort}
+
+
+# ---------------------------------------------------------------------------
+# Emission → wire: vectorized re-packetization
+# ---------------------------------------------------------------------------
+
+
+def _wire_from_grouped(
+    grouped: np.ndarray,
+    eidx: np.ndarray,
+    counts: np.ndarray,
+    payload_size: int,
+    epoch: int,
+) -> WireBatch:
+    """Ship-order packetization over the segment-grouped emitted stream.
+
+    ``grouped`` holds each segment's emitted keys contiguously in emission
+    order; ``eidx[slot]`` is the wire emission index of the key at ``slot``.
+    Each segment's keys fill ``payload_size`` packets tagged with the
+    segment id (port number) and a per-segment ``seq``; a packet ships at
+    the emission index of its **last** key.  Within a segment keys ship in
+    emission order, so the wire is a permutation of *packet slices* of
+    ``grouped`` — only the (few thousand) packets are sorted by their
+    (unique) ship index; the (possibly millions of) keys move in one ragged
+    gather.  O(n + packets·log packets).
+    """
+    n = int(grouped.size)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    P = payload_size
+    npk = -(-counts // P)
+    pkt_sid = np.repeat(np.arange(counts.size, dtype=np.int64), npk)
+    pkt_j = ragged_arange(npk)
+    pkt_off = pkt_j * P
+    pkt_sz = np.minimum(P, counts[pkt_sid] - pkt_off)
+    ship = eidx[starts[pkt_sid] + pkt_off + pkt_sz - 1]
+    porder = np.argsort(ship)
+    sz = pkt_sz[porder]
+    idx = ragged_gather((starts[pkt_sid] + pkt_off)[porder], sz)
+    return WireBatch(
+        grouped[idx],
+        np.zeros(n, dtype=np.int64),
+        np.repeat(pkt_j[porder], sz),
+        np.repeat(pkt_sid[porder], sz),
+        epoch=epoch,
+    )
+
+
+def emission_to_wire(
+    values: np.ndarray,
+    sids: np.ndarray,
+    num_segments: int,
+    payload_size: int,
+    epoch: int = 0,
+) -> WireBatch:
+    """Packetize an emission-ordered ``(values, sids)`` stream (the faithful
+    simulator's output shape) into ship-ordered wire columns.
+
+    One stable grouping argsort recovers the segment-grouped stream; for a
+    grouping permutation, the slot→emission-index map *is* the permutation.
+    """
+    n = int(values.size)
+    if n == 0:
+        return empty_batch(epoch)
+    counts = np.bincount(sids, minlength=num_segments)
+    eidx = np.argsort(sids * n + np.arange(n, dtype=np.int64))
+    return _wire_from_grouped(
+        values[eidx], eidx, counts, payload_size, epoch
+    )
+
+
+# ---------------------------------------------------------------------------
+# The three hop engines
+# ---------------------------------------------------------------------------
+
+
+def fused_hop(
+    batch: WireBatch, spec: HopSpec, name: str
+) -> tuple[WireBatch, HopStats]:
+    """The batched engine: route → rank → block-sort → emit → packetize,
+    every stage over all segments at once."""
+    em: MarathonEmission = marathon_emission(
+        batch.values,
+        spec.num_segments,
+        spec.segment_length,
+        spec.max_value,
+        ranges=spec.ranges,
+        row_sort=ROW_SORTERS[spec.backend],
+    )
+    # The emitted stream grouped by segment IS the blockwise stream array —
+    # stats come straight off the fused pass's internals.
+    stats = HopStats._from_grouped(
+        name, em.streams, em.counts, spec.segment_length
+    )
+    if len(batch) == 0:
+        return empty_batch(batch.epoch), stats
+    # One scatter recovers the slot → emission-index map from the fused
+    # pass; the wire is then packet slices of the stream array.
+    eidx = np.empty(len(batch), dtype=np.int64)
+    eidx[em.slots] = np.arange(len(batch), dtype=np.int64)
+    out = _wire_from_grouped(
+        em.streams, eidx, em.counts, spec.payload_size, batch.epoch
+    )
+    return out, stats
+
+
+def segment_hop(
+    batch: WireBatch, spec: HopSpec, name: str
+) -> tuple[WireBatch, HopStats]:
+    """The pre-fusion dataplane, preserved verbatim as the baseline.
+
+    This is what the fused engine replaced and what the
+    ``BENCH_net.json`` hop-throughput rows compare against, so it keeps
+    *all* the costs of the per-object wire: the hop consumes and produces
+    ``list[Packet]`` (converted at this boundary), loops Python-side over
+    segments in the block sort (``blockwise_sort`` / the per-segment Pallas
+    round-trip) and in the run statistics, and re-packetizes packet by
+    packet.  Byte-identical wire output, property-tested.
+    """
+    from ..core.marathon import _marathon_flat_persegment
+    from ..core.runs import run_lengths
+
+    packets = batch.to_packets()
+    stream = (
+        np.concatenate([p.payload for p in packets])
+        if packets
+        else np.zeros(0, dtype=np.int64)
+    )
+    block_sort = (
+        _pallas_block_sort if spec.backend == "pallas" else blockwise_sort
+    )
+    values, sids = _marathon_flat_persegment(
+        stream,
+        spec.num_segments,
+        spec.segment_length,
+        spec.max_value,
+        spec.ranges,
+        block_sort,
+    )
+    # -- per-segment stats loop (pre-fusion HopStats.collect) -----------
+    S, L = spec.num_segments, spec.segment_length
+    loads = (
+        np.bincount(sids, minlength=S)
+        if sids.size
+        else np.zeros(S, dtype=np.int64)
+    )
+    imbalance = float(loads.max() / loads.mean()) if loads.sum() else 1.0
+    runs = 0
+    total_len = 0
+    recirc = 0
+    for s in range(S):
+        sub = values[sids == s]
+        if not sub.size:
+            continue
+        lens = run_lengths(sub)
+        runs += int(lens.size)
+        total_len += int(sub.size)
+        n_s = int(sub.size)
+        if n_s <= L:
+            recirc += 1
+        else:
+            recirc += 1 if (n_s % L) == 0 else 2
+    stats = HopStats(
+        name=name,
+        arrivals=int(values.size),
+        segment_loads=loads,
+        load_imbalance=imbalance,
+        emitted_runs=runs,
+        mean_run_len=(total_len / runs) if runs else 0.0,
+        recirculations=recirc,
+    )
+    # -- per-packet repacketization (pre-fusion SwitchHop._repacketize) -
+    out: list[tuple[int, Packet]] = []
+    for s in range(S):
+        pos = np.nonzero(sids == s)[0]
+        if not pos.size:
+            continue
+        sub = values[pos]
+        for seq, i in enumerate(range(0, sub.size, spec.payload_size)):
+            chunk = sub[i : i + spec.payload_size]
+            ship_at = int(pos[i + chunk.size - 1])  # wire idx of last key
+            out.append((ship_at, Packet(chunk, 0, seq, segment_id=s)))
+    out.sort(key=lambda t: t[0])  # ship order; wire indices are unique
+    return (
+        WireBatch.from_packets([p for _, p in out], epoch=batch.epoch),
+        stats,
+    )
+
+
+def faithful_hop(
+    batch: WireBatch, spec: HopSpec, name: str
+) -> tuple[WireBatch, HopStats]:
+    """Element-at-a-time Alg. 3 reference (``core.switchsim.Switch``)."""
+    sw = Switch(
+        spec.num_segments,
+        spec.segment_length,
+        spec.max_value,
+        ranges=spec.ranges,
+    )
+    values, sids = sw.apply(batch.values)
+    stats = HopStats.collect(
+        name, values, sids, spec.num_segments, spec.segment_length
+    )
+    out = emission_to_wire(
+        values, sids, spec.num_segments, spec.payload_size, epoch=batch.epoch
+    )
+    return out, stats
+
+
+def _pallas_block_sort(values: np.ndarray, block: int) -> np.ndarray:
+    """Per-segment MergeMarathon emission on the bitonic TPU kernel
+    (legacy: one host↔device round-trip per segment — the fused path's
+    :func:`pallas_row_sort` replaces this with one call per hop).
+
+    Pads the ragged tail with the dtype max (pads sort to the tail of the
+    final block and are sliced off — identical to the numpy semantics of
+    sorting the short tail separately).  Falls back to numpy when the block
+    is not a power of two or the keys exceed int32.
+    """
+    values = np.asarray(values, dtype=np.int64)
+    n = values.size
+    if (
+        n == 0
+        or block <= 1
+        or block & (block - 1)
+        or values.max(initial=0) >= np.iinfo(np.int32).max
+        or values.min(initial=0) < 0
+    ):
+        return blockwise_sort(values, block)
+    from ..kernels import ops  # deferred: jax import is heavy
+
+    m = -(-n // block) * block
+    pad = np.full(m - n, np.iinfo(np.int32).max, dtype=np.int32)
+    x = np.concatenate([values.astype(np.int32), pad])
+    out = np.asarray(ops.blockwise_sort(x, block))
+    return out[:n].astype(np.int64)
+
+
+HOP_ENGINES = {
+    "fused": fused_hop,
+    "segment": segment_hop,
+    "faithful": faithful_hop,
+}
+
+
+def run_hop(
+    batch: WireBatch, spec: HopSpec, name: str, engine: str = "fused"
+) -> tuple[WireBatch, HopStats]:
+    """Dispatch one hop through the named engine."""
+    try:
+        fn = HOP_ENGINES[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown hop engine {engine!r}; options: {sorted(HOP_ENGINES)}"
+        ) from None
+    return fn(batch, spec, name)

@@ -15,6 +15,14 @@ must be able to replay different, reproducible interleaves:
 
 All interleaves are seeded and deterministic: same (flows, mode, seed) ⇒ same
 packet order, which is what makes the equivalence test matrix reproducible.
+
+Every arrival model is expressed as a *packet schedule* — the sequence of
+``(flow index, packet index)`` link grants — computed once per run.  The
+schedule costs O(number of packets); materializing the wire is then either a
+columnar gather into one :class:`~repro.net.wire.WireBatch`
+(:func:`interleave_batch`, the dataplane's path) or a list of
+:class:`~repro.net.packet.Packet` objects (:func:`interleave`, the boundary
+view) — both orders byte-identical by construction.
 """
 
 from __future__ import annotations
@@ -23,7 +31,8 @@ import dataclasses
 
 import numpy as np
 
-from .packet import DEFAULT_PAYLOAD, Packet, merge_round_robin, packetize
+from .packet import DEFAULT_PAYLOAD, UNTAGGED, Packet, packetize
+from .wire import WireBatch, ragged_arange, ragged_gather
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +42,17 @@ class Flow:
     flow_id: int
     values: np.ndarray = dataclasses.field(compare=False)
     payload_size: int = DEFAULT_PAYLOAD
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self, "values", np.asarray(self.values, dtype=np.int64)
+        )
+        if self.payload_size <= 0:
+            raise ValueError("payload_size must be positive")
+
+    @property
+    def num_packets(self) -> int:
+        return -(-int(self.values.size) // self.payload_size)
 
     def packets(self) -> list[Packet]:
         return packetize(
@@ -56,51 +76,157 @@ def split_flows(
     return [Flow(f, shard, payload_size) for f, shard in enumerate(shards)]
 
 
+# ---------------------------------------------------------------------------
+# Packet schedules — (flow index, packet index) link-grant sequences
+# ---------------------------------------------------------------------------
+
+
+def _schedule_round_robin(
+    counts: np.ndarray, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Turn-major fair order: packet ``t`` of every live flow, flows in
+    index order — vectorized as a lexsort by (turn, flow)."""
+    del seed  # deterministic regardless; kept for a uniform signature
+    flows = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+    pkts = ragged_arange(counts)
+    order = np.lexsort((flows, pkts))
+    return flows[order], pkts[order]
+
+
+def _schedule_bursty(
+    counts: np.ndarray, seed: int = 0, mean_burst: int = 4
+) -> tuple[np.ndarray, np.ndarray]:
+    """Geometric bursts: a flow holds the link for ~``mean_burst`` packets."""
+    rng = np.random.default_rng(seed)
+    heads = [0] * counts.size
+    live = [i for i, c in enumerate(counts) if c]
+    grants: list[tuple[int, int, int]] = []  # (flow, first packet, take)
+    while live:
+        i = live[int(rng.integers(len(live)))]
+        burst = 1 + int(rng.geometric(1.0 / max(mean_burst, 1)))
+        take = min(burst, int(counts[i]) - heads[i])
+        grants.append((i, heads[i], take))
+        heads[i] += take
+        if heads[i] >= counts[i]:
+            live.remove(i)
+    if not grants:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    takes = np.asarray([g[2] for g in grants], dtype=np.int64)
+    flows = np.repeat([g[0] for g in grants], takes)
+    pkts = np.repeat([g[1] for g in grants], takes) + ragged_arange(takes)
+    return flows, pkts
+
+
+def _schedule_weighted_fair(
+    counts: np.ndarray, seed: int = 0, weights: list[float] | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Weighted fair queueing: draw the next transmitting flow by weight."""
+    rng = np.random.default_rng(seed)
+    if weights is None:
+        # heterogeneous defaults: flow i twice the weight of flow i+1
+        weights = [2.0 ** (-i) for i in range(counts.size)]
+    w = np.asarray(weights, dtype=np.float64)
+    heads = [0] * counts.size
+    live = [i for i, c in enumerate(counts) if c]
+    flows: list[int] = []
+    pkts: list[int] = []
+    while live:
+        wl = w[live] / w[live].sum()
+        i = live[int(rng.choice(len(live), p=wl))]
+        flows.append(i)
+        pkts.append(heads[i])
+        heads[i] += 1
+        if heads[i] >= counts[i]:
+            live.remove(i)
+    return (
+        np.asarray(flows, dtype=np.int64),
+        np.asarray(pkts, dtype=np.int64),
+    )
+
+
+_SCHEDULES = {
+    "round_robin": _schedule_round_robin,
+    "bursty": _schedule_bursty,
+    "weighted_fair": _schedule_weighted_fair,
+}
+
+
+def _packet_counts(flows: list[Flow]) -> np.ndarray:
+    return np.asarray([f.num_packets for f in flows], dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Materializing a schedule
+# ---------------------------------------------------------------------------
+
+
+def interleave_batch(
+    flows: list[Flow], mode: str = "round_robin", seed: int = 0, **kw
+) -> WireBatch:
+    """Merge all flows into one arrival-ordered wire batch (columnar).
+
+    One gather: the schedule's packet grants expand to per-key source
+    indices into the concatenation of the flows' shards.
+    """
+    try:
+        schedule = _SCHEDULES[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown interleave {mode!r}; options: {sorted(_SCHEDULES)}"
+        ) from None
+    counts = _packet_counts(flows)
+    F, J = schedule(counts, seed=seed, **kw)
+    sizes = np.asarray([f.values.size for f in flows], dtype=np.int64)
+    payloads = np.asarray([f.payload_size for f in flows], dtype=np.int64)
+    ids = np.asarray([f.flow_id for f in flows], dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    pkt_sizes = np.minimum(payloads[F], sizes[F] - J * payloads[F])
+    src = ragged_gather(offsets[F] + J * payloads[F], pkt_sizes)
+    all_values = (
+        np.concatenate([f.values for f in flows])
+        if flows
+        else np.zeros(0, dtype=np.int64)
+    )
+    n = src.size
+    return WireBatch(
+        all_values[src],
+        np.repeat(ids[F], pkt_sizes),
+        np.repeat(J, pkt_sizes),
+        np.full(n, UNTAGGED, dtype=np.int64),
+    )
+
+
+def interleave(
+    flows: list[Flow], mode: str = "round_robin", seed: int = 0, **kw
+) -> list[Packet]:
+    """Merge all flows into one arrival-ordered packet stream (list view)."""
+    try:
+        schedule = _SCHEDULES[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown interleave {mode!r}; options: {sorted(_SCHEDULES)}"
+        ) from None
+    F, J = schedule(_packet_counts(flows), seed=seed, **kw)
+    per_flow = [f.packets() for f in flows]
+    return [per_flow[f][j] for f, j in zip(F, J)]
+
+
 def round_robin(flows: list[Flow], seed: int = 0) -> list[Packet]:
     """One packet per flow per turn until all flows drain."""
-    del seed  # deterministic regardless; kept for a uniform signature
-    return merge_round_robin([f.packets() for f in flows])
+    return interleave(flows, "round_robin", seed=seed)
 
 
 def bursty(flows: list[Flow], seed: int = 0, mean_burst: int = 4) -> list[Packet]:
     """Geometric bursts: a flow holds the link for ~``mean_burst`` packets."""
-    rng = np.random.default_rng(seed)
-    queues = [f.packets() for f in flows]
-    heads = [0] * len(queues)
-    out: list[Packet] = []
-    live = [i for i, q in enumerate(queues) if q]
-    while live:
-        i = live[int(rng.integers(len(live)))]
-        burst = 1 + int(rng.geometric(1.0 / max(mean_burst, 1)))
-        take = min(burst, len(queues[i]) - heads[i])
-        out.extend(queues[i][heads[i] : heads[i] + take])
-        heads[i] += take
-        if heads[i] >= len(queues[i]):
-            live.remove(i)
-    return out
+    return interleave(flows, "bursty", seed=seed, mean_burst=mean_burst)
 
 
 def weighted_fair(
     flows: list[Flow], seed: int = 0, weights: list[float] | None = None
 ) -> list[Packet]:
     """Weighted fair queueing: draw the next transmitting flow by weight."""
-    rng = np.random.default_rng(seed)
-    queues = [f.packets() for f in flows]
-    heads = [0] * len(queues)
-    if weights is None:
-        # heterogeneous defaults: flow i twice the weight of flow i+1
-        weights = [2.0 ** (-i) for i in range(len(flows))]
-    w = np.asarray(weights, dtype=np.float64)
-    out: list[Packet] = []
-    live = [i for i, q in enumerate(queues) if q]
-    while live:
-        wl = w[live] / w[live].sum()
-        i = live[int(rng.choice(len(live), p=wl))]
-        out.append(queues[i][heads[i]])
-        heads[i] += 1
-        if heads[i] >= len(queues[i]):
-            live.remove(i)
-    return out
+    return interleave(flows, "weighted_fair", seed=seed, weights=weights)
 
 
 INTERLEAVES = {
@@ -108,16 +234,3 @@ INTERLEAVES = {
     "bursty": bursty,
     "weighted_fair": weighted_fair,
 }
-
-
-def interleave(
-    flows: list[Flow], mode: str = "round_robin", seed: int = 0, **kw
-) -> list[Packet]:
-    """Merge all flows into one arrival-ordered packet stream."""
-    try:
-        fn = INTERLEAVES[mode]
-    except KeyError:
-        raise ValueError(
-            f"unknown interleave {mode!r}; options: {sorted(INTERLEAVES)}"
-        ) from None
-    return fn(flows, seed=seed, **kw)

@@ -6,6 +6,16 @@ ingress link, a switch topology runs MergeMarathon at every hop, an optional
 delivery model jitters packet order (bounded displacement — real networks
 reorder), and the streaming server recovers the global sort.
 
+The datapath is columnar end to end: flows emit one
+:class:`~repro.net.wire.WireBatch`, the hop-graph scheduler
+(:func:`repro.net.topology.run_graph`) moves batches between hops, epoch
+handoff slices and re-tags columns, and the server ingests the delivered
+batch directly — per-object :class:`~repro.net.packet.Packet` lists exist
+only at the boundary for the faithful reference and the packet-level tests.
+``engine`` selects the hop implementation (``"fused"`` batched, ``"segment"``
+pre-fusion per-segment loops, ``"faithful"`` element-at-a-time Alg. 3) —
+all three are property-tested byte-identical on the wire.
+
 Ranges come from the control plane in one of three ``range_mode`` settings
 (:mod:`repro.net.control`): ``"static"`` equal-width (paper Alg. 2),
 ``"oracle"`` full-data quantile splitters, or ``"sampled"`` — the adaptive
@@ -18,9 +28,9 @@ the per-(epoch, segment) outputs instead of concatenating
 correctness.
 
 The load-bearing invariant, checked by ``verify=True`` and the test matrix:
-for any topology × interleave × delivery × range mode, the server's output
-equals ``np.sort(input)``, and the per-(epoch, segment) delivered multisets
-equal the single-switch reference.
+for any topology × interleave × delivery × range mode × engine, the server's
+output equals ``np.sort(input)``, and the per-(epoch, segment) delivered
+multisets equal the single-switch reference.
 """
 
 from __future__ import annotations
@@ -32,10 +42,18 @@ import numpy as np
 
 from ..core.partition import quantile_ranges, set_ranges
 from .control import RANGE_MODES, AdaptiveControlPlane, ControlPlane
-from .flow import interleave, split_flows
-from .packet import DEFAULT_PAYLOAD, Packet, packetize, segment_streams
+from .engine import HopStats
+from .flow import interleave_batch, split_flows
+from .packet import DEFAULT_PAYLOAD, Packet
 from .server import StreamingServer
-from .topology import HopStats, make_topology
+from .topology import make_topology
+from .wire import (
+    WireBatch,
+    concat_batches,
+    packetize_batch,
+    ragged_gather,
+    segment_streams_batch,
+)
 
 
 @dataclasses.dataclass(eq=False)  # ndarray fields: generated __eq__ would raise
@@ -50,6 +68,8 @@ class PipelineResult:
     range_mode: str = "width"
     num_epochs: int = 1
     ranges_history: list[np.ndarray] = dataclasses.field(default_factory=list)
+    engine: str = "fused"
+    delivered: WireBatch | None = None  # the wire as the server saw it
 
 
 def jitter_delivery(
@@ -70,6 +90,21 @@ def jitter_delivery(
     return [packets[i] for i in np.argsort(pri, kind="stable")]
 
 
+def jitter_delivery_batch(
+    batch: WireBatch, window: int, seed: int = 0
+) -> WireBatch:
+    """Columnar :func:`jitter_delivery`: the same per-packet priorities,
+    applied as one packet-granular gather of the key columns."""
+    if window <= 0:
+        return batch
+    starts = batch.packet_starts()
+    rng = np.random.default_rng(seed)
+    pri = np.arange(starts.size) + rng.random(starts.size) * window
+    order = np.argsort(pri, kind="stable")
+    sizes = np.diff(np.concatenate([starts, [len(batch)]]))
+    return batch.take(ragged_gather(starts[order], sizes[order]))
+
+
 def run_pipeline(
     values: np.ndarray,
     *,
@@ -86,6 +121,7 @@ def run_pipeline(
     seed: int = 0,
     faithful: bool = False,
     backend: str = "numpy",
+    engine: str | None = None,
     k: int = 10,
     jitter_window: int = 0,
     reorder_capacity: int | None = None,
@@ -99,6 +135,8 @@ def run_pipeline(
     default equal-width :class:`ControlPlane`.  ``adaptive`` optionally
     supplies a pre-configured :class:`AdaptiveControlPlane` for
     ``range_mode="sampled"``; it is consumed by the run (single-use).
+    ``engine`` picks the hop implementation; unset it derives from
+    ``faithful``/the default fused path.
     """
     values = np.asarray(values, dtype=np.int64)
     if max_value is None:
@@ -112,11 +150,16 @@ def run_pipeline(
             raise ValueError("pass either control= or range_mode=, not both")
     if adaptive is not None and range_mode != "sampled":
         raise ValueError('adaptive= requires range_mode="sampled"')
+    if faithful and engine is not None and engine != "faithful":
+        raise ValueError(
+            f"faithful=True conflicts with engine={engine!r}; pass one"
+        )
+    engine = engine or ("faithful" if faithful else "fused")
 
     flows = split_flows(values, num_flows, payload_size)
-    arrivals = interleave(flows, interleave_mode, seed=seed)
+    arrivals = interleave_batch(flows, interleave_mode, seed=seed)
 
-    def _run_topology(ranges: np.ndarray, packets: list[Packet]):
+    def _run_topology(ranges: np.ndarray, batch: WireBatch):
         topo = make_topology(
             topology,
             num_segments=num_segments,
@@ -125,41 +168,28 @@ def run_pipeline(
             ranges=ranges,
             faithful=faithful,
             backend=backend,
+            engine=engine,
             payload_size=payload_size,
             **topo_kw,
         )
-        return topo.run(packets)
+        return topo.run_batch(batch)
 
     if range_mode == "sampled":
         plane = adaptive or AdaptiveControlPlane(
             num_segments, max_value, seed=seed
         )
-        epochs: list[tuple[np.ndarray, list[Packet]]] = [
-            (plane.bootstrap_ranges(), [])
-        ]
-        for p in arrivals:
-            epochs[-1][1].append(p)
-            if plane.observe(p.payload):
-                nxt = plane.propose()
-                plane.install(nxt)
-                epochs.append((nxt, []))
-        nonempty = [(r, pk) for r, pk in epochs if pk]
-        epochs = nonempty or epochs[:1]
-        delivered: list[Packet] = []
+        epochs = plane.split_epochs(arrivals)
+        delivered_epochs: list[WireBatch] = []
         hop_stats: list[HopStats] = []
         ranges_history: list[np.ndarray] = []
-        for e, (ranges_e, pkts) in enumerate(epochs):
-            out, stats = _run_topology(ranges_e, pkts)
-            delivered.extend(
-                dataclasses.replace(
-                    p, segment_id=p.segment_id + e * num_segments
-                )
-                for p in out
-            )
+        for e, (ranges_e, sub) in enumerate(epochs):
+            out, stats = _run_topology(ranges_e, sub)
+            delivered_epochs.append(out.with_epoch(e, num_segments))
             hop_stats.extend(
                 dataclasses.replace(st, name=f"e{e}:{st.name}") for st in stats
             )
             ranges_history.append(ranges_e)
+        delivered = concat_batches(delivered_epochs)
         eff_segments = num_segments * len(epochs)
         final_merge = len(epochs) > 1
         mode_str = "sampled"
@@ -180,15 +210,14 @@ def run_pipeline(
         final_merge = False
 
     if jitter_window:
-        delivered = jitter_delivery(delivered, jitter_window, seed=seed + 1)
+        delivered = jitter_delivery_batch(delivered, jitter_window, seed=seed + 1)
 
     server = StreamingServer(
         eff_segments, k=k, reorder_capacity=reorder_capacity,
         final_merge=final_merge,
     )
     t0 = time.perf_counter()
-    for p in delivered:
-        server.ingest(p)
+    server.ingest_batch(delivered)
     out, passes = server.finish()
     server_seconds = time.perf_counter() - t0
 
@@ -198,7 +227,7 @@ def run_pipeline(
     # Reorder-buffer-corrected per-segment streams, for multiset invariants.
     # (jitter permutes packets; segment_streams gives raw arrival order,
     # which is fine — invariants are multiset-level.)
-    seg_ms = segment_streams(delivered, eff_segments)
+    seg_ms = segment_streams_batch(delivered, eff_segments)
     return PipelineResult(
         output=out,
         passes=passes,
@@ -210,6 +239,8 @@ def run_pipeline(
         range_mode=mode_str,
         num_epochs=len(ranges_history),
         ranges_history=ranges_history,
+        engine=engine,
+        delivered=delivered,
     )
 
 
@@ -222,10 +253,9 @@ def plain_stream_sort(
     (one segment, no port numbers to demux by).  Returns
     ``(sorted, passes, server_seconds)``."""
     values = np.asarray(values, dtype=np.int64)
-    pkts = packetize(values, payload_size, segment_id=0)
+    batch = packetize_batch(values, payload_size, segment_id=0)
     server = StreamingServer(1, k=k)
     t0 = time.perf_counter()
-    for p in pkts:
-        server.ingest(p)
+    server.ingest_batch(batch)
     out, passes = server.finish()
     return out, passes, time.perf_counter() - t0

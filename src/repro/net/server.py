@@ -16,6 +16,11 @@ as they land.  :class:`StreamingServer` keeps, per segment (port number):
   k-sets Alg. 1's passes form, executed as soon as their inputs exist, so
   merge work overlaps with arrival instead of following it).
 
+Ingestion speaks both wire formats: per-object packets (:meth:`ingest`) and
+columnar :class:`~repro.net.wire.WireBatch` streams (:meth:`ingest_batch`),
+whose fast path feeds each in-order segment's keys through the vectorized
+run detector in one call — the NIC demux as a mask, not a packet loop.
+
 ``finish()`` returns the same ``(sorted, per-segment passes)`` contract as
 :func:`repro.core.mergesort.server_sort`, so benchmarks can swap one for the
 other.  With ``final_merge=True`` the per-segment outputs are k-way merged
@@ -33,6 +38,7 @@ import numpy as np
 from ..core.mergesort import merge_runs
 from ..core.runs import merge_passes, run_starts
 from .packet import Packet
+from .wire import ragged_gather
 
 
 class StreamingServer:
@@ -63,15 +69,17 @@ class StreamingServer:
 
     # -- ingestion ------------------------------------------------------
     def ingest(self, packet: Packet) -> None:
-        sid = packet.segment_id
+        self._ingest_payload(packet.segment_id, packet.seq, packet.payload)
+
+    def _ingest_payload(self, sid: int, seq: int, payload: np.ndarray) -> None:
         if not 0 <= sid < self.num_segments:
             raise ValueError(f"packet with invalid segment id {sid}")
         buf = self._pending[sid]
-        if packet.seq < self._next_seq[sid] or packet.seq in buf:
+        if seq < self._next_seq[sid] or seq in buf:
             raise ValueError(
-                f"duplicate packet seg={sid} seq={packet.seq}"
+                f"duplicate packet seg={sid} seq={seq}"
             )
-        buf[packet.seq] = packet.payload
+        buf[seq] = payload
         depth = len(buf)
         self.max_reorder_depth = max(self.max_reorder_depth, depth)
         if self.reorder_capacity is not None and depth > self.reorder_capacity:
@@ -83,6 +91,67 @@ class StreamingServer:
             arr = buf.pop(self._next_seq[sid])
             self._next_seq[sid] += 1
             self._feed(sid, arr)
+
+    def ingest_batch(self, batch) -> None:
+        """Consume a columnar :class:`~repro.net.wire.WireBatch` directly.
+
+        The common case — every segment's packets arrive in sequence order —
+        never touches per-packet Python state: each segment's keys are
+        gathered with one mask and run through the vectorized run detector
+        in a single ``_feed``.  Segments that *did* see reordering (or that
+        resume around an earlier partial ingest) fall back to the per-packet
+        reorder buffer, packet by packet, byte-identical to :meth:`ingest`.
+        """
+        n = len(batch)
+        if n == 0:
+            return
+        starts = batch.packet_starts()
+        bounds = np.concatenate([starts, [n]])
+        sizes = np.diff(bounds)
+        sids_p = batch.segment_id[starts]
+        seqs_p = batch.seq[starts]
+        if sids_p.min() < 0 or sids_p.max() >= self.num_segments:
+            bad = int(sids_p.min()) if sids_p.min() < 0 else int(sids_p.max())
+            raise ValueError(f"packet with invalid segment id {bad}")
+        # All grouping below works on per-packet arrays (a few thousand
+        # entries), never on per-key columns: the only O(n) work is one
+        # ragged gather per in-order segment, over that segment's keys.
+        slow: list[int] = []
+        for s in np.unique(sids_p):
+            s = int(s)
+            pmask = sids_p == s
+            seqs = seqs_p[pmask]
+            # A zero-capacity reorder buffer rejects even in-order packets
+            # (per-packet ingest holds each packet at depth 1 before
+            # draining) — route through the slow path so it raises the same
+            # overflow error.
+            in_order = (
+                (self.reorder_capacity is None or self.reorder_capacity >= 1)
+                and not self._pending[s]
+                and np.array_equal(
+                    seqs,
+                    np.arange(
+                        self._next_seq[s], self._next_seq[s] + seqs.size
+                    ),
+                )
+            )
+            if not in_order:
+                slow.append(s)
+                continue
+            # The reorder buffer would have held exactly one packet at a
+            # time; keep the observability high-water mark consistent.
+            self.max_reorder_depth = max(self.max_reorder_depth, 1)
+            self._next_seq[s] += int(seqs.size)
+            self._feed(
+                s, batch.values[ragged_gather(starts[pmask], sizes[pmask])]
+            )
+        slow_set = set(slow)
+        if slow_set:
+            for s, a, b in zip(sids_p, bounds[:-1], bounds[1:]):
+                if int(s) in slow_set:
+                    self._ingest_payload(
+                        int(s), int(batch.seq[a]), batch.values[a:b]
+                    )
 
     def _feed(self, sid: int, arr: np.ndarray) -> None:
         """Continue natural-run detection over one in-order payload."""

@@ -1,22 +1,34 @@
-"""Composable switch topologies: single switch, leaf–spine, k-ary trees.
+"""Switch fabrics as declarative hop-graphs run by a tiny scheduler.
 
 The paper evaluates one switch between storage and compute (Fig. 1); related
 work (Cheetah, switch-as-parallel-computer pipelines) shows the interesting
 regimes are *fabrics*: leaves partially sort their shard, spines merge the
-already-friendlier streams.  Every hop here is a :class:`SwitchHop` running
-MergeMarathon; all hops in a fabric share one set of key ranges dictated by
-the control plane (:mod:`repro.net.control` — the paper's division-free data
-plane), which is what makes per-segment multisets invariant across
-topologies — each hop only permutes *within* a segment, never across.
+already-friendlier streams.  A fabric here is data, not control flow: a
+:class:`HopGraph` lists :class:`HopNode` entries in topological order — each
+either an ingress node fed by a group of storage flows (``flow_id %
+num_groups``) or an interior node fed by the round-robin merge of its
+parents' outputs — and :func:`run_graph` executes the nodes with one of the
+hop engines from :mod:`repro.net.engine` over columnar
+:class:`~repro.net.wire.WireBatch` streams.  All hops in a fabric share one
+set of key ranges dictated by the control plane (:mod:`repro.net.control` —
+the paper's division-free data plane), which is what makes per-segment
+multisets invariant across topologies — each hop only permutes *within* a
+segment, never across.
 
-Two hop engines, identical wire behaviour (property-tested):
+The engines, identical wire behaviour (property-tested byte-for-byte in
+``tests/test_wire_order.py``):
 
-* ``faithful=True``  — :class:`repro.core.switchsim.Switch`, element at a
-  time, every SegmentInsertValue case exercised as written in Alg. 3.
-* ``faithful=False`` — :func:`repro.core.marathon.marathon_flat`, vectorized
-  reconstruction of the exact emission order; ``backend="pallas"`` plugs the
-  bitonic TPU kernel (:mod:`repro.kernels.ops`) in as the per-segment block
-  sorter.
+* ``"faithful"`` — :class:`repro.core.switchsim.Switch`, element at a time,
+  every SegmentInsertValue case exercised as written in Alg. 3.
+* ``"fused"``    — the batched engine (:func:`repro.net.engine.fused_hop`):
+  all segments routed, ranked, block-sorted, and re-packetized in one
+  vectorized pass; ``backend="pallas"`` sorts the hop's block matrix on the
+  bitonic TPU kernel in a single device call.
+* ``"segment"``  — the pre-fusion per-segment numpy loops, kept as the
+  benchmark baseline (``BENCH_net.json`` hop-throughput rows).
+
+:class:`SwitchHop` remains as the thin `list[Packet]` boundary view over
+:func:`repro.net.engine.run_hop` for callers that still speak packets.
 """
 
 from __future__ import annotations
@@ -25,111 +37,29 @@ import dataclasses
 
 import numpy as np
 
-from ..core.marathon import blockwise_sort, marathon_flat
-from ..core.runs import run_lengths
-from ..core.switchsim import Switch
 from .control import ControlPlane  # noqa: F401  (re-export: pre-PR-2 home)
-from .packet import DEFAULT_PAYLOAD, Packet, depacketize, merge_round_robin
+from .engine import HopSpec, HopStats, run_hop
+from .packet import DEFAULT_PAYLOAD, Packet
+from .wire import (
+    WireBatch,
+    merge_round_robin_batches,
+    split_by_flow,
+)
 
 
 # ---------------------------------------------------------------------------
-# One hop
+# One hop (Packet boundary view)
 # ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class HopStats:
-    """Per-hop observability (paper §6.3 run statistics, per hop)."""
-
-    name: str
-    arrivals: int
-    # arrivals routed to each segment (compare=False: ndarray __eq__)
-    segment_loads: np.ndarray = dataclasses.field(compare=False)
-    # peak segment load relative to the ideal uniform share (total/segments);
-    # 1.0 = perfectly balanced, S = everything on one of S segments
-    load_imbalance: float
-    emitted_runs: int  # total maximal runs across emitted sub-streams
-    mean_run_len: float
-    recirculations: int  # emitting flush passes (≤ 2 per segment, Alg. 3)
-
-    @classmethod
-    def collect(
-        cls,
-        name: str,
-        values: np.ndarray,
-        sids: np.ndarray,
-        num_segments: int,
-        segment_length: int,
-    ) -> "HopStats":
-        loads = np.bincount(sids, minlength=num_segments) if sids.size else (
-            np.zeros(num_segments, dtype=np.int64)
-        )
-        imbalance = (
-            float(loads.max() / loads.mean()) if loads.sum() else 1.0
-        )
-        runs = 0
-        total_len = 0
-        recirc = 0
-        L = segment_length
-        for s in range(num_segments):
-            sub = values[sids == s]
-            if not sub.size:
-                continue
-            lens = run_lengths(sub)
-            runs += int(lens.size)
-            total_len += int(sub.size)
-            # Flush passes that emit values: one for a partially-filled
-            # segment (single young run), two for a full one — unless the
-            # younger run is empty (arrivals a multiple of L).
-            n_s = int(sub.size)
-            if n_s <= L:
-                recirc += 1
-            else:
-                recirc += 1 if (n_s % L) == 0 else 2
-        return cls(
-            name=name,
-            arrivals=int(values.size),
-            segment_loads=loads,
-            load_imbalance=imbalance,
-            emitted_runs=runs,
-            mean_run_len=(total_len / runs) if runs else 0.0,
-            recirculations=recirc,
-        )
-
-
-def _pallas_block_sort(values: np.ndarray, block: int) -> np.ndarray:
-    """Per-segment MergeMarathon emission on the bitonic TPU kernel.
-
-    Pads the ragged tail with the dtype max (pads sort to the tail of the
-    final block and are sliced off — identical to the numpy semantics of
-    sorting the short tail separately).  Falls back to numpy when the block
-    is not a power of two or the keys exceed int32.
-    """
-    values = np.asarray(values, dtype=np.int64)
-    n = values.size
-    if (
-        n == 0
-        or block <= 1
-        or block & (block - 1)
-        or values.max(initial=0) >= np.iinfo(np.int32).max
-        or values.min(initial=0) < 0
-    ):
-        return blockwise_sort(values, block)
-    from ..kernels import ops  # deferred: jax import is heavy
-
-    m = -(-n // block) * block
-    pad = np.full(m - n, np.iinfo(np.int32).max, dtype=np.int32)
-    x = np.concatenate([values.astype(np.int32), pad])
-    out = np.asarray(ops.blockwise_sort(x, block))
-    return out[:n].astype(np.int64)
-
-
-BLOCK_SORTERS = {"numpy": blockwise_sort, "pallas": _pallas_block_sort}
 
 
 @dataclasses.dataclass
 class SwitchHop:
-    """One programmable switch in the fabric."""
+    """One programmable switch, addressed with packet lists.
+
+    The dataplane proper moves :class:`~repro.net.wire.WireBatch` columns;
+    this wrapper converts at the boundary so the faithful reference and the
+    packet-level tests keep their wire format.
+    """
 
     name: str
     num_segments: int
@@ -139,58 +69,199 @@ class SwitchHop:
     faithful: bool = False
     backend: str = "numpy"
     payload_size: int = DEFAULT_PAYLOAD
+    engine: str | None = None  # None → "faithful" if faithful else "fused"
 
-    def process(self, packets: list[Packet]) -> tuple[list[Packet], HopStats]:
-        """Run the arrival stream through MergeMarathon; re-packetize.
+    def _spec(self) -> HopSpec:
+        return HopSpec(
+            self.num_segments,
+            self.segment_length,
+            self.max_value,
+            self.ranges,
+            payload_size=self.payload_size,
+            backend=self.backend,
+        )
 
-        Output packets are tagged with their segment id (port number) and a
+    def _engine(self) -> str:
+        return self.engine or ("faithful" if self.faithful else "fused")
+
+    def process_batch(self, batch: WireBatch) -> tuple[WireBatch, HopStats]:
+        """Run the arrival batch through MergeMarathon; re-packetize.
+
+        Output keys are tagged with their segment id (port number) and a
         per-segment ``seq``; packet order follows the wire: a packet ships
         when its last value is emitted.
         """
-        stream = depacketize(packets)
-        if self.faithful:
-            sw = Switch(
-                self.num_segments,
-                self.segment_length,
-                self.max_value,
-                ranges=self.ranges,
-            )
-            values, sids = sw.apply(stream)
-        else:
-            values, sids = marathon_flat(
-                stream,
-                self.num_segments,
-                self.segment_length,
-                self.max_value,
-                ranges=self.ranges,
-                block_sort=BLOCK_SORTERS[self.backend],
-            )
-        stats = HopStats.collect(
-            self.name, values, sids, self.num_segments, self.segment_length
-        )
-        return self._repacketize(values, sids), stats
+        return run_hop(batch, self._spec(), self.name, self._engine())
 
-    def _repacketize(
-        self, values: np.ndarray, sids: np.ndarray
-    ) -> list[Packet]:
-        out: list[tuple[int, Packet]] = []
-        for s in range(self.num_segments):
-            pos = np.nonzero(sids == s)[0]
-            if not pos.size:
-                continue
-            sub = values[pos]
-            for seq, i in enumerate(range(0, sub.size, self.payload_size)):
-                chunk = sub[i : i + self.payload_size]
-                ship_at = int(pos[i + chunk.size - 1])  # wire idx of last key
-                out.append(
-                    (ship_at, Packet(chunk, 0, seq, segment_id=s))
-                )
-        out.sort(key=lambda t: t[0])  # ship order; wire indices are unique
-        return [p for _, p in out]
+    def process(self, packets: list[Packet]) -> tuple[list[Packet], HopStats]:
+        """Packet-list boundary view of :meth:`process_batch`."""
+        out, stats = self.process_batch(WireBatch.from_packets(packets))
+        return out.to_packets(), stats
 
 
 # ---------------------------------------------------------------------------
-# Topologies
+# Declarative fabrics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HopNode:
+    """One switch in a fabric: an ingress group XOR a tuple of parents."""
+
+    name: str
+    parents: tuple[int, ...] = ()  # upstream node indices; () = ingress node
+    group: int = 0  # ingress group: storage flows with flow_id % G == group
+
+
+@dataclasses.dataclass(frozen=True)
+class HopGraph:
+    """A fabric: nodes in topological order; the last node is the egress."""
+
+    nodes: tuple[HopNode, ...]
+    num_groups: int = 1  # ingress fan-out (flow_id % num_groups)
+
+    def __post_init__(self) -> None:
+        if not self.nodes:
+            raise ValueError("a fabric needs at least one hop")
+        consumed: set[int] = set()
+        for i, node in enumerate(self.nodes):
+            if any(p >= i or p < 0 for p in node.parents):
+                raise ValueError(
+                    f"node {node.name!r} has a non-topological parent"
+                )
+            if not node.parents:
+                if not 0 <= node.group < self.num_groups:
+                    raise ValueError(
+                        f"node {node.name!r} ingress group out of range"
+                    )
+                if node.group in consumed:
+                    # Two hops reading one ingress group would duplicate
+                    # its keys — the dual of the silent-drop checks below.
+                    raise ValueError(
+                        f"ingress group {node.group} consumed by more than "
+                        f"one hop"
+                    )
+                consumed.add(node.group)
+        missing = set(range(self.num_groups)) - consumed
+        if missing:
+            # An unconsumed ingress group would silently drop its flows'
+            # keys at the fabric boundary.
+            raise ValueError(
+                f"ingress groups {sorted(missing)} feed no hop; every group "
+                f"in [0, {self.num_groups}) needs an ingress node"
+            )
+        all_parents = [p for node in self.nodes for p in node.parents]
+        wired = set(all_parents)
+        if len(all_parents) != len(wired):
+            dupes = sorted(
+                {self.nodes[p].name for p in wired
+                 if all_parents.count(p) > 1}
+            )
+            raise ValueError(
+                f"hops {dupes} feed more than one downstream hop; an uplink "
+                f"has exactly one consumer"
+            )
+        orphans = [
+            node.name
+            for i, node in enumerate(self.nodes[:-1])
+            if i not in wired
+        ]
+        if orphans:
+            # Same failure mode one layer up: a hop whose uplink nothing
+            # consumes would silently drop its keys before the egress.
+            raise ValueError(
+                f"hops {orphans} feed no downstream hop; every node but the "
+                f"egress (the last) needs a consumer"
+            )
+
+
+def run_graph(
+    graph: HopGraph,
+    batch: WireBatch,
+    spec: HopSpec,
+    engine: str = "fused",
+) -> tuple[WireBatch, list[HopStats]]:
+    """Execute a fabric over an arrival batch.
+
+    Ingress nodes consume their flow group's sub-stream; interior nodes
+    consume the fair round-robin interleave of their parents' uplinks (the
+    same link-scheduling order the packet path used).  Returns the egress
+    node's wire batch plus per-hop stats in node order.
+    """
+    ingress = split_by_flow(batch, graph.num_groups)
+    outs: list[WireBatch] = []
+    stats: list[HopStats] = []
+    for i, node in enumerate(graph.nodes):
+        if node.parents:
+            inp = merge_round_robin_batches([outs[p] for p in node.parents])
+        else:
+            inp = ingress[node.group]
+        out, st = run_hop(inp, spec, node.name, engine)
+        # Stamp the emitting hop into flow_id (its documented meaning).
+        # Hop engines emit flow 0; distinct tags per node keep packet
+        # headers unique when sibling uplinks interleave at the next hop,
+        # so batch packet boundaries stay recoverable after the merge.
+        out = WireBatch(
+            out.values,
+            np.full(len(out), i, dtype=np.int64),
+            out.seq,
+            out.segment_id,
+            epoch=out.epoch,
+        )
+        outs.append(out)
+        stats.append(st)
+    return outs[-1], stats
+
+
+def single_graph() -> HopGraph:
+    """Fig. 1: storage → one switch → compute."""
+    return HopGraph((HopNode("switch"),), num_groups=1)
+
+
+def leaf_spine_graph(num_leaves: int) -> HopGraph:
+    """Each leaf partially sorts its storage servers' shard; the spine
+    merges the leaf streams (which arrive as ≥L-length runs per segment)."""
+    if num_leaves < 1:
+        raise ValueError("num_leaves must be >= 1")
+    leaves = tuple(
+        HopNode(f"leaf{i}", group=i) for i in range(num_leaves)
+    )
+    spine = HopNode("spine", parents=tuple(range(num_leaves)))
+    return HopGraph(leaves + (spine,), num_groups=num_leaves)
+
+
+def tree_graph(branching: int, height: int) -> HopGraph:
+    """k-ary reduction tree, ``height`` levels deep.
+
+    ``branching ** (height - 1)`` leaves; each internal node merges its
+    children's round-robin-interleaved output streams.  ``height=1``
+    degenerates to the single switch.
+    """
+    if branching < 1 or height < 1:
+        raise ValueError("branching and height must be >= 1")
+    num_leaves = branching ** (height - 1)
+    nodes: list[HopNode] = []
+    prev: list[int] = []
+    for level in range(height):
+        width = branching ** (height - 1 - level)
+        cur: list[int] = []
+        for nd in range(width):
+            if level == 0:
+                nodes.append(HopNode(f"l0n{nd}", group=nd))
+            else:
+                nodes.append(
+                    HopNode(
+                        f"l{level}n{nd}",
+                        parents=tuple(prev[nd * branching : (nd + 1) * branching]),
+                    )
+                )
+            cur.append(len(nodes) - 1)
+        prev = cur
+    return HopGraph(tuple(nodes), num_groups=num_leaves)
+
+
+# ---------------------------------------------------------------------------
+# Topology façade (constructor-compatible with the pre-graph API)
 # ---------------------------------------------------------------------------
 
 
@@ -203,90 +274,59 @@ class _TopoBase:
     faithful: bool = False
     backend: str = "numpy"
     payload_size: int = DEFAULT_PAYLOAD
+    engine: str | None = None  # None → "faithful" if faithful else "fused"
 
-    def _hop(self, name: str) -> SwitchHop:
-        return SwitchHop(
-            name,
+    def graph(self) -> HopGraph:
+        raise NotImplementedError
+
+    def _spec(self) -> HopSpec:
+        return HopSpec(
             self.num_segments,
             self.segment_length,
             self.max_value,
             self.ranges,
-            faithful=self.faithful,
-            backend=self.backend,
             payload_size=self.payload_size,
+            backend=self.backend,
         )
 
+    def _engine(self) -> str:
+        return self.engine or ("faithful" if self.faithful else "fused")
+
+    def run_batch(self, batch: WireBatch) -> tuple[WireBatch, list[HopStats]]:
+        return run_graph(self.graph(), batch, self._spec(), self._engine())
+
     def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
-        raise NotImplementedError
+        out, stats = self.run_batch(WireBatch.from_packets(packets))
+        return out.to_packets(), stats
 
 
 @dataclasses.dataclass
 class SingleSwitch(_TopoBase):
     """Fig. 1: storage → one switch → compute."""
 
-    def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
-        out, stats = self._hop("switch").process(packets)
-        return out, [stats]
+    def graph(self) -> HopGraph:
+        return single_graph()
 
 
 @dataclasses.dataclass
 class LeafSpine(_TopoBase):
-    """Each leaf partially sorts its storage servers' shard; the spine
-    merges the leaf streams (which arrive as ≥L-length runs per segment)."""
+    """Leaves partially sort their shard; the spine merges the uplinks."""
 
     num_leaves: int = 2
 
-    def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
-        if self.num_leaves < 1:
-            raise ValueError("num_leaves must be >= 1")
-        per_leaf: list[list[Packet]] = [[] for _ in range(self.num_leaves)]
-        for p in packets:  # storage server f is cabled to leaf f mod K
-            per_leaf[p.flow_id % self.num_leaves].append(p)
-        stats: list[HopStats] = []
-        uplinks: list[list[Packet]] = []
-        for leaf, pkts in enumerate(per_leaf):
-            out, st = self._hop(f"leaf{leaf}").process(pkts)
-            uplinks.append(out)
-            stats.append(st)
-        spine_in = merge_round_robin(uplinks)
-        out, st = self._hop("spine").process(spine_in)
-        stats.append(st)
-        return out, stats
+    def graph(self) -> HopGraph:
+        return leaf_spine_graph(self.num_leaves)
 
 
 @dataclasses.dataclass
 class AggregationTree(_TopoBase):
-    """k-ary reduction tree of switches, ``height`` levels deep.
-
-    ``branching ** (height - 1)`` leaves; each internal node merges its
-    children's round-robin-interleaved output streams.  ``height=1``
-    degenerates to the single switch.
-    """
+    """k-ary reduction tree of switches, ``height`` levels deep."""
 
     branching: int = 2
     height: int = 2
 
-    def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
-        if self.branching < 1 or self.height < 1:
-            raise ValueError("branching and height must be >= 1")
-        num_leaves = self.branching ** (self.height - 1)
-        groups: list[list[Packet]] = [[] for _ in range(num_leaves)]
-        for p in packets:
-            groups[p.flow_id % num_leaves].append(p)
-        stats: list[HopStats] = []
-        for level in range(self.height):
-            outs: list[list[Packet]] = []
-            for node, pkts in enumerate(groups):
-                out, st = self._hop(f"l{level}n{node}").process(pkts)
-                outs.append(out)
-                stats.append(st)
-            if level == self.height - 1:
-                return outs[0], stats
-            groups = [
-                merge_round_robin(outs[g : g + self.branching])
-                for g in range(0, len(outs), self.branching)
-            ]
-        raise AssertionError("unreachable")
+    def graph(self) -> HopGraph:
+        return tree_graph(self.branching, self.height)
 
 
 TOPOLOGIES = {

@@ -1,10 +1,17 @@
 """Wire-order equivalence on the paper's traces — no hypothesis needed.
 
-``marathon_flat`` claims to reproduce the faithful simulator's exact
-``(values, segment_ids)`` emission order — not just per-segment streams.
-These tests pin that on seeded slices of all three synthetic evaluation
-traces across switch geometries, so the property holds on the *actual*
-distributions the benchmarks run, not only on fuzzed inputs.
+Two equivalence layers, both byte-exact (ISSUE 3 tentpole):
+
+1. ``marathon_flat`` reproduces the faithful simulator's exact
+   ``(values, segment_ids)`` emission order — not just per-segment streams —
+   pinned on seeded slices of all three synthetic evaluation traces across
+   switch geometries, so the property holds on the *actual* distributions
+   the benchmarks run, not only on fuzzed inputs.
+2. The three hop engines (``faithful`` element-at-a-time Alg. 3, ``segment``
+   pre-fusion per-segment loops, ``fused`` batched) deliver byte-identical
+   wire streams — values, per-segment sequence numbers, and port tags —
+   through the full pipeline across every topology × trace × range-mode
+   combination, including multi-epoch adaptive runs.
 """
 
 import numpy as np
@@ -12,8 +19,17 @@ import pytest
 
 from repro.core import Switch, marathon_flat, quantile_ranges
 from repro.data import TRACES, trace_max_value
+from repro.net import run_pipeline
 
 GEOMETRIES = [(1, 4), (4, 8), (8, 32), (16, 7)]  # (segments, length)
+
+TOPO_CASES = [
+    ("single", {}),
+    ("leaf_spine", {"num_leaves": 3}),
+    ("tree", {"branching": 2, "height": 3}),
+]
+RANGE_MODES = ("static", "oracle", "sampled")
+ENGINES = ("faithful", "segment", "fused")
 
 
 @pytest.mark.parametrize("trace_name", sorted(TRACES))
@@ -41,6 +57,19 @@ def test_flat_matches_faithful_with_dictated_ranges(trace_name):
     np.testing.assert_array_equal(ref_s, got_s)
 
 
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+def test_flat_matches_persegment_reference(trace_name):
+    """The fused default equals the legacy per-segment block-sort path."""
+    from repro.core.marathon import blockwise_sort
+
+    vals = TRACES[trace_name](1300, seed=23)
+    maxv = trace_max_value(trace_name)
+    fv, fs = marathon_flat(vals, 8, 16, maxv)
+    pv, ps = marathon_flat(vals, 8, 16, maxv, block_sort=blockwise_sort)
+    np.testing.assert_array_equal(fv, pv)
+    np.testing.assert_array_equal(fs, ps)
+
+
 def test_wire_order_is_permutation_with_tags():
     vals = TRACES["network"](800, seed=3)
     maxv = trace_max_value("network")
@@ -48,3 +77,50 @@ def test_wire_order_is_permutation_with_tags():
     assert out_v.size == vals.size == out_s.size
     np.testing.assert_array_equal(np.sort(out_v), np.sort(vals))
     assert out_s.min() >= 0 and out_s.max() < 4
+
+
+# -- engine equivalence through the full fabric --------------------------
+
+
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+@pytest.mark.parametrize("mode", RANGE_MODES)
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+def test_engines_byte_identical_on_the_wire(trace_name, mode, topo, topo_kw):
+    """faithful == segment == fused delivered wire, column for column.
+
+    ``delivered`` is the stream exactly as the server saw it — key values,
+    per-segment sequence numbers, and (virtual, epoch-shifted) port tags —
+    so equality here is equality of every byte on the wire, not merely of
+    sorted outputs or per-segment multisets.
+    """
+    vals = TRACES[trace_name](2000, seed=29)
+    results = {}
+    for engine in ENGINES:
+        res = run_pipeline(
+            vals,
+            topology=topo,
+            engine=engine,
+            num_segments=8,
+            segment_length=16,
+            max_value=trace_max_value(trace_name),
+            num_flows=4,
+            payload_size=32,
+            range_mode=mode,
+            verify=True,
+            **topo_kw,
+        )
+        assert res.engine == engine
+        results[engine] = res
+    ref = results["faithful"]
+    for engine in ("segment", "fused"):
+        got = results[engine]
+        assert got.num_epochs == ref.num_epochs
+        for col in ("values", "flow_id", "seq", "segment_id"):
+            np.testing.assert_array_equal(
+                getattr(ref.delivered, col),
+                getattr(got.delivered, col),
+                err_msg=f"{engine} diverges from faithful on {col}",
+            )
+        np.testing.assert_array_equal(ref.output, got.output)
+        assert ref.passes == got.passes
+        assert ref.hop_stats == got.hop_stats
