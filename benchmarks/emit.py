@@ -1,14 +1,14 @@
 """BENCH_*.json artifact schema: write, validate, and gate bench results.
 
 Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
-trajectory across PRs.  The schema (version 2) is hand-validated here — no
+trajectory across PRs.  The schema (version 3) is hand-validated here — no
 external dependency — and documented in README "Reproducing the numbers":
 
     {
-      "schema_version": 2,
+      "schema_version": 3,
       "bench": "net",
       "config":  {"n", "repeats", "segments", "length", "payload", "k",
-                  "quick": bool},
+                  "quick": bool, "seed": int},
       "results": [            # one row per topology × trace × range_mode
         {"topology": str, "trace": str, "range_mode": str,
          "plain_seconds": float,   # switchless streaming-server baseline
@@ -28,16 +28,27 @@ external dependency — and documented in README "Reproducing the numbers":
                   "seconds": float,     # min over repeats
                   "keys_per_sec": float}],
         "speedup_fused_vs_segment": float,
+      },
+      "server_scaling": {       # egress server-pool makespan sweep (v3)
+        "config": {"segments", "length", "payload", "n", "trace",
+                   "range_mode", "repeats"},
+        "rows": [{"num_servers": int,
+                  "server_seconds": float,   # makespan: slowest server +
+                  "merge_seconds": float,    #   distributed merge
+                  "server_imbalance": float}],
+        "speedup_s4_vs_s1": float,
       }
     }
 
 CLI — validate an artifact, and optionally gate on the acceptance bars:
 sampled ranges within ``--min-sampled-ratio`` of the oracle-quantile
-reduction on the skewed traces (ISSUE 2), and the fused batched hop engine
-at least ``--min-hop-speedup``× the per-segment numpy path (ISSUE 3):
+reduction on the skewed traces (ISSUE 2), the fused batched hop engine at
+least ``--min-hop-speedup``× the per-segment numpy path (ISSUE 3), and the
+4-server egress pool at least ``--min-server-scaling``× the single server
+on the 1M-key makespan (ISSUE 4):
 
     python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \\
-        --min-hop-speedup 3.0
+        --min-hop-speedup 3.0 --min-server-scaling 1.0
 """
 
 from __future__ import annotations
@@ -50,7 +61,7 @@ try:
 except ImportError:  # pragma: no cover - python -m benchmarks.emit
     from benchmarks import _bootstrap  # noqa: F401
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 _CONFIG_FIELDS = {
     "n": int,
@@ -60,6 +71,7 @@ _CONFIG_FIELDS = {
     "payload": int,
     "k": int,
     "quick": bool,
+    "seed": int,
 }
 
 _ROW_FIELDS = {
@@ -96,6 +108,23 @@ _HOP_ROW_FIELDS = {
 }
 
 _HOP_ENGINES = {"fused", "segment", "faithful"}
+
+_SCALING_CONFIG_FIELDS = {
+    "segments": int,
+    "length": int,
+    "payload": int,
+    "n": int,
+    "trace": str,
+    "range_mode": str,
+    "repeats": int,
+}
+
+_SCALING_ROW_FIELDS = {
+    "num_servers": int,
+    "server_seconds": float,
+    "merge_seconds": float,
+    "server_imbalance": float,
+}
 
 
 def _check_type(path: str, value, want: type) -> None:
@@ -185,6 +214,42 @@ def validate_net_bench(doc: dict) -> None:
     )
     if hop["speedup_fused_vs_segment"] <= 0:
         raise ValueError("$.hop_throughput.speedup_fused_vs_segment: <= 0")
+    scaling = doc.get("server_scaling")
+    _check_type("$.server_scaling", scaling, dict)
+    _check_type("$.server_scaling.config", scaling.get("config"), dict)
+    for key, want in _SCALING_CONFIG_FIELDS.items():
+        if key not in scaling["config"]:
+            raise ValueError(f"$.server_scaling.config.{key}: missing")
+        _check_type(f"$.server_scaling.config.{key}", scaling["config"][key], want)
+    if scaling["config"]["range_mode"] not in _RANGE_MODES:
+        raise ValueError(
+            f"$.server_scaling.config.range_mode: "
+            f"{scaling['config']['range_mode']!r} not in {sorted(_RANGE_MODES)}"
+        )
+    _check_type("$.server_scaling.rows", scaling.get("rows"), list)
+    if not scaling["rows"]:
+        raise ValueError("$.server_scaling.rows: empty")
+    for i, row in enumerate(scaling["rows"]):
+        _check_type(f"$.server_scaling.rows[{i}]", row, dict)
+        for key, want in _SCALING_ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.server_scaling.rows[{i}].{key}: missing")
+            _check_type(f"$.server_scaling.rows[{i}].{key}", row[key], want)
+        if row["num_servers"] < 1:
+            raise ValueError(f"$.server_scaling.rows[{i}].num_servers: < 1")
+        if row["server_seconds"] <= 0 or row["merge_seconds"] < 0:
+            raise ValueError(f"$.server_scaling.rows[{i}]: bad timing")
+        if row["server_imbalance"] < 1.0:
+            raise ValueError(
+                f"$.server_scaling.rows[{i}].server_imbalance: < 1.0"
+            )
+    _check_type(
+        "$.server_scaling.speedup_s4_vs_s1",
+        scaling.get("speedup_s4_vs_s1"),
+        float,
+    )
+    if scaling["speedup_s4_vs_s1"] <= 0:
+        raise ValueError("$.server_scaling.speedup_s4_vs_s1: <= 0")
 
 
 def hop_speedup(doc: dict) -> float:
@@ -192,8 +257,14 @@ def hop_speedup(doc: dict) -> float:
     return float(doc["hop_throughput"]["speedup_fused_vs_segment"])
 
 
+def server_scaling_speedup(doc: dict) -> float:
+    """The artifact's 4-server-pool-vs-single-server makespan ratio."""
+    return float(doc["server_scaling"]["speedup_s4_vs_s1"])
+
+
 def write_net_bench(
-    path: str, config: dict, results: list[dict], hop_throughput: dict
+    path: str, config: dict, results: list[dict], hop_throughput: dict,
+    server_scaling: dict,
 ) -> dict:
     """Assemble, validate, and write a net-bench artifact; return the doc."""
     doc = {
@@ -202,6 +273,7 @@ def write_net_bench(
         "config": config,
         "results": results,
         "hop_throughput": hop_throughput,
+        "server_scaling": server_scaling,
     }
     validate_net_bench(doc)
     with open(path, "w") as fh:
@@ -254,6 +326,12 @@ def main() -> None:
         help="gate: fused hop engine must be at least this many times "
         "faster than the per-segment numpy path (ISSUE 3 acceptance: 3.0)",
     )
+    ap.add_argument(
+        "--min-server-scaling", type=float, default=None,
+        help="gate: the 4-server egress pool's makespan must be at least "
+        "this many times faster than the single server on the 1M-key "
+        "trace (ISSUE 4 acceptance: 1.0, i.e. strictly faster)",
+    )
     args = ap.parse_args()
     with open(args.artifact) as fh:
         doc = json.load(fh)
@@ -268,6 +346,16 @@ def main() -> None:
             raise SystemExit(
                 f"fused hop engine is only {speedup:.2f}x the per-segment "
                 f"path (need {args.min_hop_speedup}x)"
+            )
+    if args.min_server_scaling is not None:
+        scaling = server_scaling_speedup(doc)
+        ok = scaling > args.min_server_scaling
+        status = "OK" if ok else "FAIL"
+        print(f"  pool makespan S=4 vs S=1: {scaling:.2f}x {status}")
+        if not ok:
+            raise SystemExit(
+                f"4-server pool makespan is only {scaling:.2f}x the single "
+                f"server (need > {args.min_server_scaling}x)"
             )
     if args.min_sampled_ratio is not None:
         ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))

@@ -24,10 +24,18 @@ Every run also records the **hop-throughput microbench** (schema v2): one
 switch hop over a ≥1M-key trace, keys/sec per hop engine — the fused
 batched engine vs the pre-fusion per-segment numpy path (byte-identical
 wire output, property-tested) — plus their speedup ratio, which
-``benchmarks/emit.py --min-hop-speedup`` gates in CI.
+``benchmarks/emit.py --min-hop-speedup`` gates in CI; and the **egress
+server-pool scaling sweep** (schema v3): the 1M-key trace drained by
+``S ∈ {1, 2, 4}`` range-sharded streaming servers
+(:class:`repro.net.egress.ServerPool`), reporting the pool makespan
+(slowest server + distributed merge) per S — ``--min-server-scaling``
+gates S=4 beating S=1.  All RNG (trace synthesis, interleave, control
+plane) derives from ``--seed``, so an artifact reproduces across
+invocations.
 
 Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
-            [--faithful-check] [--hop-n N] [--out BENCH_net.json]
+            [--faithful-check] [--hop-n N] [--scaling-n N] [--seed S]
+            [--out BENCH_net.json]
 """
 
 from __future__ import annotations
@@ -79,11 +87,19 @@ BENCH_SCENARIOS = ("adversarial_skew", "drifting")
 HOP_BENCH = {"segments": 64, "length": 64, "payload": 64}
 BENCH_HOP_ENGINES = ("fused", "segment")
 
+# Egress server-pool scaling sweep (schema v3 `server_scaling`): the same
+# 1M-key trace through the single switch, drained by S range-sharded
+# streaming servers; the reported time is the pool *makespan* (slowest
+# server + distributed merge).  CI gates S=4 beating S=1.
+SCALING_SERVERS = (1, 2, 4)
+SCALING_BENCH = {"segments": 16, "length": 64, "payload": 256,
+                 "trace": "random", "range_mode": "oracle"}
 
-def hop_throughput(n: int, repeats: int) -> dict:
+
+def hop_throughput(n: int, repeats: int, seed: int = 0) -> dict:
     """Keys/sec through one switch hop, per engine, on the random trace."""
     cfg = dict(HOP_BENCH, n=n, trace="random", repeats=repeats)
-    trace = TRACES["random"](n)
+    trace = TRACES["random"](n, seed=seed)
     maxv = trace_max_value("random")
     batch = interleave_batch(
         split_flows(trace, 8, cfg["payload"]), "round_robin"
@@ -115,6 +131,59 @@ def hop_throughput(n: int, repeats: int) -> dict:
         "config": cfg,
         "rows": rows,
         "speedup_fused_vs_segment": by_engine["segment"] / by_engine["fused"],
+    }
+
+
+def server_scaling(n: int, repeats: int, seed: int = 0) -> dict:
+    """Pool makespan at S ∈ {1, 2, 4} egress servers on the 1M-key trace.
+
+    Every run is verified byte-identical to ``np.sort`` (and therefore to
+    every other S — int64 keys have no identity beyond their value), so the
+    sweep measures exactly the scale-out claim: each server sorts only its
+    contiguous range shard, the distributed merge concatenates.
+    """
+    cfg = dict(SCALING_BENCH, n=n, repeats=repeats)
+    trace = TRACES[cfg["trace"]](n, seed=seed)
+    maxv = trace_max_value(cfg["trace"])
+    expected = np.sort(trace)
+    rows = []
+    by_s: dict[int, float] = {}
+    for S in SCALING_SERVERS:
+        # (makespan, merge) are kept per repeat so the emitted row's fields
+        # all describe the same (fastest) run; imbalance is deterministic.
+        samples = []
+        for _ in range(repeats):
+            res = run_pipeline(
+                trace,
+                topology="single",
+                num_segments=cfg["segments"],
+                segment_length=cfg["length"],
+                max_value=maxv,
+                payload_size=cfg["payload"],
+                num_flows=8,
+                k=K,
+                range_mode=cfg["range_mode"],
+                num_servers=S,
+                seed=seed,
+            )
+            samples.append(
+                (float(res.server_seconds), float(res.pool_merge_seconds))
+            )
+        np.testing.assert_array_equal(res.output, expected)
+        secs, merge = min(samples)
+        by_s[S] = secs
+        rows.append(
+            {
+                "num_servers": S,
+                "server_seconds": secs,
+                "merge_seconds": merge,
+                "server_imbalance": float(res.server_imbalance),
+            }
+        )
+    return {
+        "config": cfg,
+        "rows": rows,
+        "speedup_s4_vs_s1": by_s[1] / by_s[4],
     }
 
 
@@ -173,6 +242,21 @@ def main() -> None:
         "--hop-repeats", type=int, default=5,
         help="repeats for the hop-throughput microbench (min-time wins)",
     )
+    ap.add_argument(
+        "--scaling-n", type=int, default=1_000_000,
+        help="trace size for the egress server-pool scaling sweep "
+        "(>= 1M keys; not reduced by --quick)",
+    )
+    ap.add_argument(
+        "--scaling-repeats", type=int, default=2,
+        help="repeats for the server-pool scaling sweep (min-time wins)",
+    )
+    ap.add_argument(
+        "--seed", type=int, default=0,
+        help="base RNG seed: trace synthesis (offset per workload), flow "
+        "interleave, and control-plane sampling all derive from it, so a "
+        "BENCH_net.json is reproducible across invocations",
+    )
     args = ap.parse_args()
     n, repeats = (100_000, 2) if args.quick else (args.n, args.repeats)
     segs, length = args.segments, args.length
@@ -185,13 +269,17 @@ def main() -> None:
         f"length={length} payload={args.payload} k={K}",
         flush=True,
     )
+    # Seed every generator explicitly (offset per workload so traces stay
+    # decorrelated): a rerun with the same --seed reproduces the artifact.
     workloads: list[tuple[str, np.ndarray, int]] = [
-        (name, gen(n), trace_max_value(name)) for name, gen in TRACES.items()
+        (name, gen(n, seed=args.seed + i), trace_max_value(name))
+        for i, (name, gen) in enumerate(TRACES.items())
     ]
     if args.scenarios:
         workloads += [
-            (name, SCENARIOS[name](n), scenario_max_value(name))
-            for name in BENCH_SCENARIOS
+            (name, SCENARIOS[name](n, seed=args.seed + 100 + i),
+             scenario_max_value(name))
+            for i, name in enumerate(BENCH_SCENARIOS)
         ]
 
     rows: list[dict] = []
@@ -226,6 +314,7 @@ def main() -> None:
                         num_flows=8,
                         k=K,
                         range_mode=mode,
+                        seed=args.seed,
                         **topo_kw,
                     )
                     server_times.append(res.server_seconds)
@@ -278,7 +367,7 @@ def main() -> None:
                 f"ok_n={small.size};passes={max(rf.passes)}",
             )
 
-    hop = hop_throughput(args.hop_n, args.hop_repeats)
+    hop = hop_throughput(args.hop_n, args.hop_repeats, seed=args.seed)
     for r in hop["rows"]:
         emit(
             f"hop_{r['engine']}_random",
@@ -291,6 +380,23 @@ def main() -> None:
         flush=True,
     )
 
+    scaling = server_scaling(
+        args.scaling_n, args.scaling_repeats, seed=args.seed
+    )
+    for r in scaling["rows"]:
+        emit(
+            f"pool_scaling_s{r['num_servers']}_{scaling['config']['trace']}",
+            r["server_seconds"] * 1e6,
+            f"merge_us={r['merge_seconds'] * 1e6:.1f};"
+            f"imbalance={r['server_imbalance']:.2f};"
+            f"n={scaling['config']['n']}",
+        )
+    print(
+        f"# pool makespan speedup S=4 vs S=1: "
+        f"{scaling['speedup_s4_vs_s1']:.2f}x",
+        flush=True,
+    )
+
     if args.out:
         config = {
             "n": n,
@@ -300,8 +406,12 @@ def main() -> None:
             "payload": args.payload,
             "k": K,
             "quick": bool(args.quick),
+            "seed": int(args.seed),
         }
-        write_net_bench(args.out, config, rows, hop_throughput=hop)
+        write_net_bench(
+            args.out, config, rows, hop_throughput=hop,
+            server_scaling=scaling,
+        )
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 
 

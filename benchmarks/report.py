@@ -6,7 +6,8 @@ Two artifact kinds, detected by shape:
   (EXPERIMENTS.md §Roofline);
 * ``BENCH_net.json`` (a dict with ``bench: "net"``) → the dataplane matrix
   (reduction per topology × trace × range-mode) plus the per-engine
-  hop-throughput microbench (keys/sec, fused vs per-segment speedup).
+  hop-throughput microbench (keys/sec, fused vs per-segment speedup) and
+  the egress server-pool scaling sweep (makespan per pool size).
 
     PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
     PYTHONPATH=src:. python -m benchmarks.report BENCH_net.json
@@ -143,6 +144,25 @@ def render_net(doc: dict) -> str:
     out.append(
         f"\nfused vs per-segment speedup: "
         f"{hop['speedup_fused_vs_segment']:.2f}x"
+    )
+    scaling = doc["server_scaling"]
+    sc = scaling["config"]
+    out += [
+        "",
+        f"## server scaling ({sc['trace']} trace, n={sc['n']}, "
+        f"{sc['segments']}x{sc['length']} switch, {sc['range_mode']} ranges)",
+        "",
+        "| servers | makespan s | merge s | imbalance |",
+        "|---|---|---|---|",
+    ]
+    for r in scaling["rows"]:
+        out.append(
+            f"| {r['num_servers']} | {r['server_seconds']:.3f} "
+            f"| {r['merge_seconds']:.4f} | {r['server_imbalance']:.2f} |"
+        )
+    out.append(
+        f"\npool makespan speedup S=4 vs S=1: "
+        f"{scaling['speedup_s4_vs_s1']:.2f}x"
     )
     return "\n".join(out)
 

@@ -139,3 +139,109 @@ def gather_sorted(padded: np.ndarray, valid: np.ndarray) -> np.ndarray:
     return np.concatenate(
         [np.asarray(padded[d, : int(valid[d])]) for d in range(padded.shape[0])]
     )
+
+
+# ---------------------------------------------------------------------------
+# Egress server-pool merge (repro.net.egress.ServerPool)
+# ---------------------------------------------------------------------------
+
+
+def pool_concat_sharded(
+    outs: list[np.ndarray], mesh: Mesh, axis_name: str = "server"
+) -> np.ndarray:
+    """Distributed concatenation of per-server sorted range shards.
+
+    Server ``s``'s shard is padded to the pool-wide capacity with the
+    dtype-max sentinel and placed on device ``s`` of a one-axis mesh; one
+    tiled ``all_gather`` inside ``shard_map`` moves every shard to every
+    device — the paper's "concatenate" executed as the collective the pod
+    fabric would use — and the host compacts by the true shard lengths
+    (:func:`gather_sorted`), so sentinel collisions with real keys are
+    harmless.
+    """
+    num_servers = mesh.shape[axis_name]
+    if len(outs) != num_servers:
+        raise ValueError(
+            f"{len(outs)} shards for a {num_servers}-device {axis_name!r} axis"
+        )
+    valid = np.array([o.size for o in outs], dtype=np.int64)
+    cap = int(valid.max())
+    if cap == 0:
+        return np.zeros(0, dtype=np.int64)
+    padded = np.full((num_servers, cap), np.iinfo(np.int64).max, dtype=np.int64)
+    for s, o in enumerate(outs):
+        padded[s, : o.size] = o
+    fn = _pool_gather(mesh, axis_name)
+    gathered = np.asarray(
+        jax.device_get(
+            fn(jax.device_put(padded, NamedSharding(mesh, P(axis_name, None))))
+        )
+    )
+    return gather_sorted(gathered, valid)
+
+
+# The jitted gather is cached per mesh so repeated merges hit the jit cache
+# (a fresh closure per call would retrace inside the pool's timed merge
+# span); jit itself re-specializes when the shard capacity changes.
+_POOL_GATHER_CACHE: dict = {}
+
+
+def _pool_gather(mesh: Mesh, axis_name: str):
+    key = (mesh, axis_name)
+    fn = _POOL_GATHER_CACHE.get(key)
+    if fn is None:
+
+        def body(xl: jax.Array) -> jax.Array:
+            return jax.lax.all_gather(xl, axis_name, axis=0, tiled=True)
+
+        fn = jax.jit(
+            shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P(axis_name, None),),
+                out_specs=P(None, None),
+                # all_gather output IS replicated over the axis; the static
+                # checker can't always prove it (see sharding.fsdp_gather)
+                check_vma=False,
+            )
+        )
+        _POOL_GATHER_CACHE[key] = fn
+    return fn
+
+
+def pool_concat(
+    outs: list[np.ndarray],
+    *,
+    disjoint: bool,
+    backend: str = "numpy",
+    mesh: Mesh | None = None,
+    axis_name: str = "server",
+) -> np.ndarray:
+    """Merge per-server egress-pool outputs into the global sorted stream.
+
+    ``disjoint=True`` (one control-plane epoch: server order is key-range
+    order) concatenates — on the host, or with ``backend="shard_map"`` via
+    :func:`pool_concat_sharded` over ``mesh`` (built on demand from
+    :func:`repro.distributed.sharding.pool_mesh`; pure-numpy fallback when
+    the platform exposes fewer devices than servers).  ``disjoint=False``
+    (epoched re-partitioning: server ranges overlap) k-way merges the
+    sorted server streams — inherently sequential, always on the host.
+    """
+    outs = [np.asarray(o, dtype=np.int64) for o in outs]
+    if not outs:
+        return np.zeros(0, dtype=np.int64)
+    if len(outs) == 1:
+        return outs[0]
+    if not disjoint:
+        from .mergesort import merge_runs
+
+        nonempty = [o for o in outs if o.size]
+        return merge_runs(nonempty) if nonempty else np.zeros(0, dtype=np.int64)
+    if backend == "shard_map":
+        if mesh is None:
+            from ..distributed.sharding import pool_mesh
+
+            mesh = pool_mesh(len(outs), axis_name)
+        if mesh is not None:
+            return pool_concat_sharded(outs, mesh, axis_name)
+    return np.concatenate(outs)

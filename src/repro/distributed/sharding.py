@@ -113,6 +113,19 @@ def fsdp_gather(ctx: ShardCtx, tree, spec_tree):
     return jax.tree.map(gather_leaf, tree, spec_tree)
 
 
+def pool_mesh(num_servers: int, axis_name: str = "server"):
+    """One-axis mesh for the egress server pool's distributed merge
+    (:func:`repro.core.distributed.pool_concat_sharded`): device ``s`` plays
+    compute server ``s``.  Returns ``None`` when the pool is trivial or the
+    platform exposes fewer devices than servers — on CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=S`` (scripts/ci.sh
+    does) so the shard_map path runs; callers fall back to numpy otherwise.
+    """
+    if num_servers < 2 or len(jax.devices()) < num_servers:
+        return None
+    return make_mesh((num_servers,), (axis_name,))
+
+
 def local_ctx() -> ShardCtx:
     """1-device (1,1) mesh for unit/smoke tests — same code paths (shard_map,
     psum, all_to_all) as the production mesh, trivially sized."""

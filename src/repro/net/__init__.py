@@ -10,7 +10,9 @@ engines (:mod:`engine`: fused batched, per-segment legacy, faithful Alg. 3) —
 under ranges dictated by the control plane (:mod:`control` — static
 equal-width, oracle quantile, or adaptive sampled with epoched mid-stream
 re-partitioning on batch columns), and a streaming compute server overlaps
-its k-way merge with arrival, ingesting batches directly (:mod:`server`).
+its k-way merge with arrival, ingesting batches directly (:mod:`server`) —
+or a segment-affinity pool of them (:mod:`egress` — each server sorts only
+its range shard; a distributed merge concatenates the shard outputs).
 :mod:`pipeline` wires it end to end.
 """
 
@@ -20,6 +22,7 @@ from .control import (
     ControlPlane,
     ReservoirSampler,
 )
+from .egress import ServerPool, segment_affinity
 from .engine import (
     ENGINES,
     HOP_ENGINES,
@@ -77,6 +80,8 @@ __all__ = [
     "AdaptiveControlPlane",
     "ControlPlane",
     "ReservoirSampler",
+    "ServerPool",
+    "segment_affinity",
     "ENGINES",
     "HOP_ENGINES",
     "HopSpec",

@@ -257,6 +257,24 @@ class AdaptiveControlPlane:
             return set_ranges(self.max_value, self.num_segments)
         return quantile_ranges(sample, self.num_segments, self.max_value)
 
+    def pool_affinity(self, num_servers: int) -> np.ndarray:
+        """Virtual-segment→server map for the epochs installed so far.
+
+        Epoch handoff re-shards the fresh epoch's virtual segment ids onto
+        the *same* contiguous affinity blocks
+        (:func:`repro.net.egress.segment_affinity`), so a pool server keeps
+        its key-range lane across re-partitions — only the range boundaries
+        move, never the segment→server wiring.  Length is
+        ``num_segments * max(epoch, 1)``, matching the virtual id space the
+        delivered wire carries after :meth:`split_epochs`.
+        """
+        from .egress import segment_affinity
+
+        return np.tile(
+            segment_affinity(self.num_segments, num_servers),
+            max(self.epoch, 1),
+        )
+
     def split_epochs(self, batch) -> list[tuple[np.ndarray, "object"]]:
         """Partition an arrival :class:`~repro.net.wire.WireBatch` into
         epochs on its columns.

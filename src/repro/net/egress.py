@@ -1,0 +1,243 @@
+"""Sharded egress: a segment-affinity pool of streaming compute servers.
+
+The paper's scale argument (§5) is that once the switch has installed
+contiguous key ranges, the server side can "sort each range separately and
+then concatenate" — which means the egress need not be *one* server at all.
+:class:`ServerPool` realizes that claim: the fabric's delivered wire batch
+is demultiplexed by **segment affinity** — every (virtual) segment id maps
+to exactly one of ``S`` independent :class:`~repro.net.server.StreamingServer`
+instances, each running the unmodified bounded-reorder / run-detection /
+k-way-merge-ladder logic on only its range shard — and a distributed merge
+(:func:`repro.core.distributed.pool_concat`) reassembles the global order
+from the per-server outputs.
+
+Affinity is *contiguous in key space*: server ``s`` owns a contiguous block
+of base segments (:func:`segment_affinity`), so within one control-plane
+epoch the per-server outputs hold disjoint ascending key ranges and the
+distributed merge is a pure concatenation in server order — exactly the
+paper's sentence, sharded.  Under the adaptive control plane's epoched
+re-partitioning the virtual segment ids are re-sharded onto the same
+affinity blocks (:meth:`repro.net.control.AdaptiveControlPlane.pool_affinity`)
+— a server keeps its lane across handoffs, but ranges from different epochs
+overlap, so each server k-way merges its own (epoch, segment) outputs
+(``final_merge``) and the pool-level merge becomes a k-way merge of the
+``S`` sorted server streams.  Either way the output equals
+``np.sort(input)`` byte for byte — sharding, like range estimation, can
+cost balance but never correctness.
+
+Timing model: the servers are independent machines, so the pool's
+wall-clock is the *makespan* — the slowest server's ingest+finish time plus
+the distributed merge — even though this process simulates them
+sequentially.  Per-server seconds, key counts, and the peak-over-mean key
+imbalance are exposed for the ``server_scaling`` benchmark section.  The
+demux itself (one mask per server) is the switch egress's port-based
+routing and is charged to neither side.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core.distributed import pool_concat
+from .server import StreamingServer
+from .wire import WireBatch
+
+
+def segment_affinity(num_segments: int, num_servers: int) -> np.ndarray:
+    """Contiguous-block map from base segment id to owning server.
+
+    ``(num_segments,)`` int64 with server ``b * num_servers // num_segments``
+    owning base segment ``b`` — non-decreasing, every server gets a block of
+    ``floor(S_seg/S)`` or ``ceil(S_seg/S)`` consecutive segments, so server
+    order is key-range order and per-epoch concatenation stays sorted.
+    """
+    if num_servers <= 0:
+        raise ValueError("num_servers must be positive")
+    if num_servers > num_segments:
+        raise ValueError(
+            f"num_servers ({num_servers}) exceeds num_segments "
+            f"({num_segments}); a server needs at least one segment"
+        )
+    base = np.arange(num_segments, dtype=np.int64)
+    return base * num_servers // num_segments
+
+
+class ServerPool:
+    """``S`` independent streaming servers behind a segment-affinity demux.
+
+    ``num_segments`` is the *base* (per-epoch) segment count; with
+    ``num_epochs > 1`` the pool addresses ``num_segments * num_epochs``
+    virtual segment ids, re-sharded per epoch onto the same affinity blocks.
+    ``affinity`` optionally dictates the base map (the control plane's
+    :meth:`~repro.net.control.AdaptiveControlPlane.pool_affinity` hands the
+    tiled virtual map back through this); it must be non-decreasing with
+    values in ``[0, num_servers)`` so the disjoint-range concatenation
+    stays sorted.
+
+    ``merge_backend`` selects the distributed merge: ``"numpy"`` (default)
+    or ``"shard_map"`` — per-server shards placed one-per-device on a host
+    ``("server",)`` mesh and concatenated with one collective
+    (:func:`repro.core.distributed.pool_concat_sharded`); when the platform
+    exposes fewer devices than servers it falls back to numpy (run CPU tests
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
+    """
+
+    def __init__(
+        self,
+        num_segments: int,
+        num_servers: int = 1,
+        *,
+        num_epochs: int = 1,
+        k: int = 10,
+        reorder_capacity: int | None = None,
+        affinity: np.ndarray | None = None,
+        merge_backend: str = "numpy",
+    ) -> None:
+        if num_epochs < 1:
+            raise ValueError("num_epochs must be >= 1")
+        if merge_backend not in ("numpy", "shard_map"):
+            raise ValueError(
+                f"unknown merge_backend {merge_backend!r}; "
+                f"options: numpy, shard_map"
+            )
+        base = segment_affinity(num_segments, num_servers)
+        if affinity is not None:
+            affinity = np.asarray(affinity, dtype=np.int64)
+            want = np.tile(base, num_epochs)
+            if affinity.shape != want.shape:
+                raise ValueError(
+                    f"affinity length {affinity.size} != "
+                    f"{num_segments} segments x {num_epochs} epochs"
+                )
+            if affinity.size and (
+                affinity.min() < 0
+                or affinity.max() >= num_servers
+                or np.any(np.diff(affinity.reshape(num_epochs, -1), axis=1) < 0)
+            ):
+                raise ValueError(
+                    "affinity must be non-decreasing within each epoch with "
+                    "values in [0, num_servers) — contiguous key-range "
+                    "blocks are what make server-order concatenation sorted"
+                )
+            self._affinity = affinity
+        else:
+            self._affinity = np.tile(base, num_epochs)
+        self.num_segments = num_segments
+        self.num_servers = num_servers
+        self.num_epochs = num_epochs
+        self.eff_segments = num_segments * num_epochs
+        self.merge_backend = merge_backend
+        # Local segment numbering: server s's virtual segments, ascending,
+        # get local ids 0..count-1 — per epoch that is the base-block order,
+        # so a server's own concatenation is ascending in key space too.
+        counts = np.bincount(self._affinity, minlength=num_servers)
+        local = np.zeros(self.eff_segments, dtype=np.int64)
+        for s in range(num_servers):
+            local[self._affinity == s] = np.arange(counts[s])
+        self._local_of = local
+        self.servers = [
+            StreamingServer(
+                int(counts[s]) if counts[s] else 1,  # idle server: 1 port
+                k=k,
+                reorder_capacity=reorder_capacity,
+                final_merge=num_epochs > 1,
+            )
+            for s in range(num_servers)
+        ]
+        self.per_server_seconds = [0.0] * num_servers
+        self.merge_seconds = 0.0
+
+    # -- ingestion ------------------------------------------------------
+    def ingest_batch(self, batch: WireBatch) -> None:
+        """Demux a delivered wire batch by segment affinity; feed each
+        server its shard with segment ids renumbered into its local space.
+
+        Masking is row-order-preserving and packets are header-contiguous,
+        so every server sees exactly the sub-sequence of the wire its NIC
+        would have received — per-segment seq order, and therefore the
+        reorder-buffer and run-detection behaviour, are unchanged.
+        """
+        if len(batch) == 0:
+            return
+        sids = batch.segment_id
+        if sids.min() < 0 or sids.max() >= self.eff_segments:
+            bad = int(sids.min()) if sids.min() < 0 else int(sids.max())
+            raise ValueError(f"packet with invalid segment id {bad}")
+        if self.num_servers == 1:
+            t0 = time.perf_counter()
+            self.servers[0].ingest_batch(batch)
+            self.per_server_seconds[0] += time.perf_counter() - t0
+            return
+        srv = self._affinity[sids]
+        for s in range(self.num_servers):
+            mask = srv == s
+            if not mask.any():
+                continue
+            sub = batch.take(mask)
+            sub = WireBatch(
+                sub.values,
+                sub.flow_id,
+                sub.seq,
+                self._local_of[sub.segment_id],
+                epoch=sub.epoch,
+            )
+            t0 = time.perf_counter()
+            self.servers[s].ingest_batch(sub)
+            self.per_server_seconds[s] += time.perf_counter() - t0
+
+    # -- completion -----------------------------------------------------
+    def finish(self) -> tuple[np.ndarray, list[int]]:
+        """Drain every server; distributed-merge the shard outputs.
+
+        Returns the same ``(globally sorted stream, passes per virtual
+        segment)`` contract as a single :class:`StreamingServer` — passes
+        are reassembled into virtual-segment order, so the result is
+        byte-identical to the unsharded pipeline's.
+        """
+        outs: list[np.ndarray] = []
+        per_server_passes: list[list[int]] = []
+        for s, server in enumerate(self.servers):
+            t0 = time.perf_counter()
+            out, passes = server.finish()
+            self.per_server_seconds[s] += time.perf_counter() - t0
+            outs.append(out)
+            per_server_passes.append(passes)
+        passes = [
+            per_server_passes[int(self._affinity[v])][int(self._local_of[v])]
+            for v in range(self.eff_segments)
+        ]
+        t0 = time.perf_counter()
+        output = pool_concat(
+            outs,
+            disjoint=self.num_epochs == 1,
+            backend=self.merge_backend,
+        )
+        self.merge_seconds = time.perf_counter() - t0
+        return output, passes
+
+    # -- observability --------------------------------------------------
+    @property
+    def max_reorder_depth(self) -> int:
+        """Worst reorder-buffer occupancy across the pool."""
+        return max(s.max_reorder_depth for s in self.servers)
+
+    @property
+    def server_keys(self) -> list[int]:
+        """Keys ingested per server (the pool's load distribution)."""
+        return [s.keys_ingested for s in self.servers]
+
+    @property
+    def server_imbalance(self) -> float:
+        """Peak-over-mean per-server key load; 1.0 is a perfect shard."""
+        keys = self.server_keys
+        total = sum(keys)
+        if total == 0:
+            return 1.0
+        return max(keys) / (total / self.num_servers)
+
+    @property
+    def makespan_seconds(self) -> float:
+        """The pool's wall-clock: slowest server + distributed merge."""
+        return max(self.per_server_seconds) + self.merge_seconds

@@ -27,10 +27,16 @@ the per-(epoch, segment) outputs instead of concatenating
 (``final_merge``) — so a bad or stale estimate can cost balance, never
 correctness.
 
+The egress is a :class:`~repro.net.egress.ServerPool`: ``num_servers=``
+shards the delivered stream by segment affinity across independent
+streaming servers (each running the bounded-reorder/run-merge logic on only
+its range shard) and a distributed merge reassembles the global order —
+``num_servers=1`` degenerates to the classic single server.
+
 The load-bearing invariant, checked by ``verify=True`` and the test matrix:
-for any topology × interleave × delivery × range mode × engine, the server's
-output equals ``np.sort(input)``, and the per-(epoch, segment) delivered
-multisets equal the single-switch reference.
+for any topology × interleave × delivery × range mode × engine ×
+``num_servers``, the server's output equals ``np.sort(input)``, and the
+per-(epoch, segment) delivered multisets equal the single-switch reference.
 """
 
 from __future__ import annotations
@@ -42,6 +48,7 @@ import numpy as np
 
 from ..core.partition import quantile_ranges, set_ranges
 from .control import RANGE_MODES, AdaptiveControlPlane, ControlPlane
+from .egress import ServerPool
 from .engine import HopStats
 from .flow import interleave_batch, split_flows
 from .packet import DEFAULT_PAYLOAD, Packet
@@ -63,13 +70,18 @@ class PipelineResult:
     hop_stats: list[HopStats]
     segment_multisets: list[np.ndarray]  # delivered per-(epoch, segment) streams
     max_reorder_depth: int
-    server_seconds: float  # time spent in the server (the paper's metric)
+    server_seconds: float  # egress wall-clock: slowest server + pool merge
     n: int
     range_mode: str = "width"
     num_epochs: int = 1
     ranges_history: list[np.ndarray] = dataclasses.field(default_factory=list)
     engine: str = "fused"
     delivered: WireBatch | None = None  # the wire as the server saw it
+    num_servers: int = 1
+    per_server_seconds: list[float] = dataclasses.field(default_factory=list)
+    pool_merge_seconds: float = 0.0
+    server_keys: list[int] = dataclasses.field(default_factory=list)
+    server_imbalance: float = 1.0  # peak-over-mean per-server key load
 
 
 def jitter_delivery(
@@ -125,6 +137,8 @@ def run_pipeline(
     k: int = 10,
     jitter_window: int = 0,
     reorder_capacity: int | None = None,
+    num_servers: int = 1,
+    merge_backend: str = "numpy",
     verify: bool = False,
     **topo_kw,
 ) -> PipelineResult:
@@ -136,7 +150,12 @@ def run_pipeline(
     supplies a pre-configured :class:`AdaptiveControlPlane` for
     ``range_mode="sampled"``; it is consumed by the run (single-use).
     ``engine`` picks the hop implementation; unset it derives from
-    ``faithful``/the default fused path.
+    ``faithful``/the default fused path.  ``num_servers`` shards the egress
+    across a segment-affinity :class:`~repro.net.egress.ServerPool`
+    (``num_servers=1`` is the classic single streaming server); the output
+    is byte-identical for every ``num_servers`` — only the makespan and the
+    per-server load change.  ``merge_backend`` picks the pool's distributed
+    merge (``"numpy"`` or ``"shard_map"`` with numpy fallback).
     """
     values = np.asarray(values, dtype=np.int64)
     if max_value is None:
@@ -191,7 +210,10 @@ def run_pipeline(
             ranges_history.append(ranges_e)
         delivered = concat_batches(delivered_epochs)
         eff_segments = num_segments * len(epochs)
-        final_merge = len(epochs) > 1
+        # Epoch handoff re-shards the virtual ids across the pool (empty
+        # epochs were dropped, so slice the map to the ids actually on the
+        # wire — the tiling is per-epoch, so the prefix is exact).
+        affinity = plane.pool_affinity(num_servers)[:eff_segments]
         mode_str = "sampled"
     else:
         if range_mode == "oracle":
@@ -207,19 +229,22 @@ def run_pipeline(
         delivered, hop_stats = _run_topology(ranges, arrivals)
         ranges_history = [ranges]
         eff_segments = num_segments
-        final_merge = False
+        affinity = None
 
     if jitter_window:
         delivered = jitter_delivery_batch(delivered, jitter_window, seed=seed + 1)
 
-    server = StreamingServer(
-        eff_segments, k=k, reorder_capacity=reorder_capacity,
-        final_merge=final_merge,
+    pool = ServerPool(
+        num_segments,
+        num_servers,
+        num_epochs=eff_segments // num_segments,
+        k=k,
+        reorder_capacity=reorder_capacity,
+        affinity=affinity,
+        merge_backend=merge_backend,
     )
-    t0 = time.perf_counter()
-    server.ingest_batch(delivered)
-    out, passes = server.finish()
-    server_seconds = time.perf_counter() - t0
+    pool.ingest_batch(delivered)
+    out, passes = pool.finish()
 
     if verify:
         np.testing.assert_array_equal(out, np.sort(values))
@@ -233,14 +258,19 @@ def run_pipeline(
         passes=passes,
         hop_stats=hop_stats,
         segment_multisets=seg_ms,
-        max_reorder_depth=server.max_reorder_depth,
-        server_seconds=server_seconds,
+        max_reorder_depth=pool.max_reorder_depth,
+        server_seconds=pool.makespan_seconds,
         n=int(values.size),
         range_mode=mode_str,
         num_epochs=len(ranges_history),
         ranges_history=ranges_history,
         engine=engine,
         delivered=delivered,
+        num_servers=num_servers,
+        per_server_seconds=list(pool.per_server_seconds),
+        pool_merge_seconds=pool.merge_seconds,
+        server_keys=pool.server_keys,
+        server_imbalance=pool.server_imbalance,
     )
 
 

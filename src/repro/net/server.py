@@ -67,6 +67,12 @@ class StreamingServer:
         self._ingested = 0
         self.max_reorder_depth = 0  # observability: worst buffer occupancy
 
+    @property
+    def keys_ingested(self) -> int:
+        """Keys fed past the reorder buffer so far (load observability —
+        the egress pool's per-server share of the stream)."""
+        return self._ingested
+
     # -- ingestion ------------------------------------------------------
     def ingest(self, packet: Packet) -> None:
         self._ingest_payload(packet.segment_id, packet.seq, packet.payload)

@@ -29,6 +29,12 @@ The engines, identical wire behaviour (property-tested byte-for-byte in
 
 :class:`SwitchHop` remains as the thin `list[Packet]` boundary view over
 :func:`repro.net.engine.run_hop` for callers that still speak packets.
+
+The egress node's wire batch is what the compute side consumes — one
+:class:`~repro.net.server.StreamingServer`, or a segment-affinity
+:class:`~repro.net.egress.ServerPool` that shards it across ``S`` servers;
+the fabric itself is identical either way (the pool demux is port-based
+routing on the already-tagged stream, downstream of the last hop).
 """
 
 from __future__ import annotations

@@ -204,6 +204,44 @@ def test_server_ingest_batch_matches_per_packet_ingest(window):
     assert by_packet.max_reorder_depth == by_batch.max_reorder_depth
 
 
+def test_server_ingest_batch_fallback_parity_on_noncontiguous_arrivals():
+    """The vectorized fast path and the per-packet reorder fallback must
+    produce identical ``(sorted, passes)`` (ISSUE 4 satellite).
+
+    The same wire is ingested three ways: one in-order batch (pure fast
+    path), the second half before the first (every segment's seqs are
+    non-contiguous, so every packet takes the per-packet fallback), and a
+    jittered split that makes segments *resume around* buffered packets —
+    the mixed fast/fallback case.
+    """
+    vals = np.sort(np.random.default_rng(8).integers(0, 999, 2000))
+    batch = packetize_batch(vals, 16, segment_id=0)
+    starts = batch.packet_starts()
+    cut = int(starts[starts.size // 2])
+
+    fast = StreamingServer(1, k=4)
+    fast.ingest_batch(batch)
+    ref = fast.finish()
+    assert fast.max_reorder_depth == 1  # never left the fast path
+
+    swapped = StreamingServer(1, k=4)
+    swapped.ingest_batch(batch.slice_keys(cut, len(batch)))
+    swapped.ingest_batch(batch.slice_keys(0, cut))
+    got = swapped.finish()
+    np.testing.assert_array_equal(ref[0], got[0])
+    assert ref[1] == got[1]
+    assert swapped.max_reorder_depth > 1  # the fallback really buffered
+
+    mixed = StreamingServer(1, k=4)
+    jit = jitter_delivery_batch(batch, 9, seed=2)
+    cut_j = int(jit.packet_starts()[jit.num_packets // 2])
+    mixed.ingest_batch(jit.slice_keys(0, cut_j))
+    mixed.ingest_batch(jit.slice_keys(cut_j, len(jit)))
+    got = mixed.finish()
+    np.testing.assert_array_equal(ref[0], got[0])
+    assert ref[1] == got[1]
+
+
 def test_server_ingest_batch_rejects_bad_segment():
     server = StreamingServer(2)
     with pytest.raises(ValueError, match="invalid segment"):

@@ -12,6 +12,10 @@ Two equivalence layers, both byte-exact (ISSUE 3 tentpole):
    wire streams — values, per-segment sequence numbers, and port tags —
    through the full pipeline across every topology × trace × range-mode
    combination, including multi-epoch adaptive runs.
+3. Sharding the egress across a segment-affinity server pool
+   (``num_servers=4``, ISSUE 4) leaves the delivered wire and the
+   ``(output, passes)`` result byte-identical to the single server, over
+   the same topology × trace × range-mode matrix.
 """
 
 import numpy as np
@@ -124,3 +128,44 @@ def test_engines_byte_identical_on_the_wire(trace_name, mode, topo, topo_kw):
         np.testing.assert_array_equal(ref.output, got.output)
         assert ref.passes == got.passes
         assert ref.hop_stats == got.hop_stats
+
+
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+@pytest.mark.parametrize("mode", RANGE_MODES)
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+def test_server_pool_byte_identical_to_single_server(
+    trace_name, mode, topo, topo_kw
+):
+    """Sharding the egress across a 4-server pool changes nothing on the
+    wire or in the result (ISSUE 4 acceptance): the delivered stream is
+    upstream of the pool, and output / per-segment passes / reorder depth
+    are byte-identical to the single streaming server.
+    """
+    vals = TRACES[trace_name](2000, seed=31)
+    results = {}
+    for num_servers in (1, 4):
+        results[num_servers] = run_pipeline(
+            vals,
+            topology=topo,
+            num_segments=8,
+            segment_length=16,
+            max_value=trace_max_value(trace_name),
+            num_flows=4,
+            payload_size=32,
+            range_mode=mode,
+            num_servers=num_servers,
+            verify=True,
+            **topo_kw,
+        )
+    ref, got = results[1], results[4]
+    assert got.num_servers == 4 and got.num_epochs == ref.num_epochs
+    for col in ("values", "flow_id", "seq", "segment_id"):
+        np.testing.assert_array_equal(
+            getattr(ref.delivered, col),
+            getattr(got.delivered, col),
+            err_msg=f"pool perturbed the delivered wire on {col}",
+        )
+    np.testing.assert_array_equal(ref.output, got.output)
+    assert ref.passes == got.passes
+    assert ref.max_reorder_depth == got.max_reorder_depth
+    assert sum(got.server_keys) == vals.size
