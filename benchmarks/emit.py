@@ -1,7 +1,7 @@
 """BENCH_*.json artifact schema: write, validate, and gate bench results.
 
 Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
-trajectory across PRs.  The schema (version 3) is hand-validated here — no
+trajectory across PRs.  The schema (version 4) is hand-validated here — no
 external dependency — and documented in README "Reproducing the numbers":
 
     {
@@ -37,18 +37,28 @@ external dependency — and documented in README "Reproducing the numbers":
                   "merge_seconds": float,    #   distributed merge
                   "server_imbalance": float}],
         "speedup_s4_vs_s1": float,
+      },
+      "server_throughput": {    # server run-merge backend sweep (v4)
+        "config": {"segments", "length", "payload", "n", "trace",
+                   "range_mode", "repeats"},
+        "rows": [{"merge_backend": str,    # "numpy" | "arena"
+                  "server_seconds": float, # ingest+finish, min over repeats
+                  "keys_per_sec": float}],
+        "speedup_arena_vs_numpy": float,
       }
     }
 
 CLI — validate an artifact, and optionally gate on the acceptance bars:
 sampled ranges within ``--min-sampled-ratio`` of the oracle-quantile
 reduction on the skewed traces (ISSUE 2), the fused batched hop engine at
-least ``--min-hop-speedup``× the per-segment numpy path (ISSUE 3), and the
+least ``--min-hop-speedup``× the per-segment numpy path (ISSUE 3), the
 4-server egress pool at least ``--min-server-scaling``× the single server
-on the 1M-key makespan (ISSUE 4):
+on the 1M-key makespan (ISSUE 4), and the run-arena merge engine at least
+``--min-server-speedup``× the numpy ladder on the same trace (ISSUE 5):
 
     python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \\
-        --min-hop-speedup 3.0 --min-server-scaling 1.0
+        --min-hop-speedup 3.0 --min-server-scaling 1.0 \\
+        --min-server-speedup 2.0
 """
 
 from __future__ import annotations
@@ -61,7 +71,7 @@ try:
 except ImportError:  # pragma: no cover - python -m benchmarks.emit
     from benchmarks import _bootstrap  # noqa: F401
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 _CONFIG_FIELDS = {
     "n": int,
@@ -125,6 +135,16 @@ _SCALING_ROW_FIELDS = {
     "merge_seconds": float,
     "server_imbalance": float,
 }
+
+_SERVER_TP_CONFIG_FIELDS = dict(_SCALING_CONFIG_FIELDS)
+
+_SERVER_TP_ROW_FIELDS = {
+    "merge_backend": str,
+    "server_seconds": float,
+    "keys_per_sec": float,
+}
+
+_MERGE_BACKENDS = {"numpy", "arena"}
 
 
 def _check_type(path: str, value, want: type) -> None:
@@ -250,6 +270,43 @@ def validate_net_bench(doc: dict) -> None:
     )
     if scaling["speedup_s4_vs_s1"] <= 0:
         raise ValueError("$.server_scaling.speedup_s4_vs_s1: <= 0")
+    tp = doc.get("server_throughput")
+    _check_type("$.server_throughput", tp, dict)
+    _check_type("$.server_throughput.config", tp.get("config"), dict)
+    for key, want in _SERVER_TP_CONFIG_FIELDS.items():
+        if key not in tp["config"]:
+            raise ValueError(f"$.server_throughput.config.{key}: missing")
+        _check_type(f"$.server_throughput.config.{key}", tp["config"][key], want)
+    if tp["config"]["range_mode"] not in _RANGE_MODES:
+        raise ValueError(
+            f"$.server_throughput.config.range_mode: "
+            f"{tp['config']['range_mode']!r} not in {sorted(_RANGE_MODES)}"
+        )
+    _check_type("$.server_throughput.rows", tp.get("rows"), list)
+    if not tp["rows"]:
+        raise ValueError("$.server_throughput.rows: empty")
+    for i, row in enumerate(tp["rows"]):
+        _check_type(f"$.server_throughput.rows[{i}]", row, dict)
+        for key, want in _SERVER_TP_ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.server_throughput.rows[{i}].{key}: missing")
+            _check_type(f"$.server_throughput.rows[{i}].{key}", row[key], want)
+        if row["merge_backend"] not in _MERGE_BACKENDS:
+            raise ValueError(
+                f"$.server_throughput.rows[{i}].merge_backend: "
+                f"{row['merge_backend']!r} not in {sorted(_MERGE_BACKENDS)}"
+            )
+        if row["server_seconds"] <= 0 or row["keys_per_sec"] <= 0:
+            raise ValueError(
+                f"$.server_throughput.rows[{i}]: non-positive timing"
+            )
+    _check_type(
+        "$.server_throughput.speedup_arena_vs_numpy",
+        tp.get("speedup_arena_vs_numpy"),
+        float,
+    )
+    if tp["speedup_arena_vs_numpy"] <= 0:
+        raise ValueError("$.server_throughput.speedup_arena_vs_numpy: <= 0")
 
 
 def hop_speedup(doc: dict) -> float:
@@ -262,9 +319,14 @@ def server_scaling_speedup(doc: dict) -> float:
     return float(doc["server_scaling"]["speedup_s4_vs_s1"])
 
 
+def server_merge_speedup(doc: dict) -> float:
+    """The artifact's run-arena-vs-numpy-ladder server throughput ratio."""
+    return float(doc["server_throughput"]["speedup_arena_vs_numpy"])
+
+
 def write_net_bench(
     path: str, config: dict, results: list[dict], hop_throughput: dict,
-    server_scaling: dict,
+    server_scaling: dict, server_throughput: dict,
 ) -> dict:
     """Assemble, validate, and write a net-bench artifact; return the doc."""
     doc = {
@@ -274,6 +336,7 @@ def write_net_bench(
         "results": results,
         "hop_throughput": hop_throughput,
         "server_scaling": server_scaling,
+        "server_throughput": server_throughput,
     }
     validate_net_bench(doc)
     with open(path, "w") as fh:
@@ -332,6 +395,12 @@ def main() -> None:
         "this many times faster than the single server on the 1M-key "
         "trace (ISSUE 4 acceptance: 1.0, i.e. strictly faster)",
     )
+    ap.add_argument(
+        "--min-server-speedup", type=float, default=None,
+        help="gate: the run-arena merge engine must be at least this many "
+        "times faster than the numpy ladder on the 1M-key server sweep "
+        "(ISSUE 5 acceptance: 2.0)",
+    )
     args = ap.parse_args()
     with open(args.artifact) as fh:
         doc = json.load(fh)
@@ -356,6 +425,16 @@ def main() -> None:
             raise SystemExit(
                 f"4-server pool makespan is only {scaling:.2f}x the single "
                 f"server (need > {args.min_server_scaling}x)"
+            )
+    if args.min_server_speedup is not None:
+        speedup = server_merge_speedup(doc)
+        ok = speedup >= args.min_server_speedup
+        status = "OK" if ok else "FAIL"
+        print(f"  server merge arena/numpy: {speedup:.2f}x {status}")
+        if not ok:
+            raise SystemExit(
+                f"run-arena merge engine is only {speedup:.2f}x the numpy "
+                f"ladder (need {args.min_server_speedup}x)"
             )
     if args.min_sampled_ratio is not None:
         ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))

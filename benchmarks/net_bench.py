@@ -29,13 +29,17 @@ server-pool scaling sweep** (schema v3): the 1M-key trace drained by
 ``S ∈ {1, 2, 4}`` range-sharded streaming servers
 (:class:`repro.net.egress.ServerPool`), reporting the pool makespan
 (slowest server + distributed merge) per S — ``--min-server-scaling``
-gates S=4 beating S=1.  All RNG (trace synthesis, interleave, control
-plane) derives from ``--seed``, so an artifact reproduces across
-invocations.
+gates S=4 beating S=1; and the **server merge-backend sweep** (schema
+v4): the same delivered 1M-key wire drained once per run-merge engine —
+the eager numpy ladder vs the device-resident run-arena tournament
+(byte-identical ``(output, passes)``) — with their speedup ratio, which
+``--min-server-speedup`` gates in CI.  All RNG (trace synthesis,
+interleave, control plane) derives from ``--seed``, so an artifact
+reproduces across invocations.
 
 Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
-            [--faithful-check] [--hop-n N] [--scaling-n N] [--seed S]
-            [--out BENCH_net.json]
+            [--faithful-check] [--hop-n N] [--scaling-n N] [--server-n N]
+            [--seed S] [--out BENCH_net.json]
 """
 
 from __future__ import annotations
@@ -94,6 +98,14 @@ BENCH_HOP_ENGINES = ("fused", "segment")
 SCALING_SERVERS = (1, 2, 4)
 SCALING_BENCH = {"segments": 16, "length": 64, "payload": 256,
                  "trace": "random", "range_mode": "oracle"}
+
+# Server run-merge engine sweep (schema v4 `server_throughput`): the single
+# streaming server draining the identical delivered 1M-key wire once per
+# merge backend — the eager numpy ladder vs the device-resident run-arena
+# tournament (byte-identical (output, passes), property-tested).  CI gates
+# arena >= 2x the ladder.
+SERVER_BACKENDS = ("numpy", "arena")
+SERVER_BENCH = dict(SCALING_BENCH)
 
 
 def hop_throughput(n: int, repeats: int, seed: int = 0) -> dict:
@@ -187,6 +199,67 @@ def server_scaling(n: int, repeats: int, seed: int = 0) -> dict:
     }
 
 
+def server_throughput(n: int, repeats: int, seed: int = 0) -> dict:
+    """Ingest+finish seconds per merge backend on the same delivered wire.
+
+    The fabric runs once; each backend then drains the identical delivered
+    batch through a fresh :class:`~repro.net.server.StreamingServer`, so the
+    comparison isolates exactly the run-merge engine (reorder buffer and run
+    detection are shared code).  Outputs and pass counts are asserted
+    byte-identical across backends and against ``np.sort``.
+    """
+    from repro.net.server import StreamingServer
+
+    cfg = dict(SERVER_BENCH, n=n, repeats=repeats)
+    trace = TRACES[cfg["trace"]](n, seed=seed)
+    maxv = trace_max_value(cfg["trace"])
+    delivered = run_pipeline(
+        trace,
+        topology="single",
+        num_segments=cfg["segments"],
+        segment_length=cfg["length"],
+        max_value=maxv,
+        payload_size=cfg["payload"],
+        num_flows=8,
+        k=K,
+        range_mode=cfg["range_mode"],
+        seed=seed,
+    ).delivered
+    expected = np.sort(trace)
+    rows = []
+    by_backend: dict[str, float] = {}
+    ref = None
+    for backend in SERVER_BACKENDS:
+        times = []
+        for _ in range(repeats):
+            server = StreamingServer(
+                cfg["segments"], k=K, merge_backend=backend
+            )
+            t0 = time.perf_counter()
+            server.ingest_batch(delivered)
+            out, passes = server.finish()
+            times.append(time.perf_counter() - t0)
+        np.testing.assert_array_equal(out, expected)
+        if ref is None:
+            ref = passes
+        else:
+            assert passes == ref, "merge backends disagree on pass counts"
+        secs = float(np.min(times))
+        by_backend[backend] = secs
+        rows.append(
+            {
+                "merge_backend": backend,
+                "server_seconds": secs,
+                "keys_per_sec": n / secs,
+            }
+        )
+    return {
+        "config": cfg,
+        "rows": rows,
+        "speedup_arena_vs_numpy": by_backend["numpy"] / by_backend["arena"],
+    }
+
+
 def _best(fn, repeats: int):
     """Min-time over repeats (noise-robust) + the last result."""
     times, out = [], None
@@ -250,6 +323,16 @@ def main() -> None:
     ap.add_argument(
         "--scaling-repeats", type=int, default=2,
         help="repeats for the server-pool scaling sweep (min-time wins)",
+    )
+    ap.add_argument(
+        "--server-n", type=int, default=1_000_000,
+        help="trace size for the per-backend server-throughput sweep "
+        "(>= 1M keys; not reduced by --quick)",
+    )
+    ap.add_argument(
+        "--server-repeats", type=int, default=3,
+        help="repeats for the server-throughput sweep (min-time wins; the "
+        "first arena repeat pays the jit compiles, so >= 2 to measure warm)",
     )
     ap.add_argument(
         "--seed", type=int, default=0,
@@ -397,6 +480,22 @@ def main() -> None:
         flush=True,
     )
 
+    server = server_throughput(
+        args.server_n, args.server_repeats, seed=args.seed
+    )
+    for r in server["rows"]:
+        emit(
+            f"server_{r['merge_backend']}_{server['config']['trace']}",
+            r["server_seconds"] * 1e6,
+            f"keys_per_sec={r['keys_per_sec']:.0f};"
+            f"n={server['config']['n']}",
+        )
+    print(
+        f"# server merge speedup arena vs numpy: "
+        f"{server['speedup_arena_vs_numpy']:.2f}x",
+        flush=True,
+    )
+
     if args.out:
         config = {
             "n": n,
@@ -410,7 +509,7 @@ def main() -> None:
         }
         write_net_bench(
             args.out, config, rows, hop_throughput=hop,
-            server_scaling=scaling,
+            server_scaling=scaling, server_throughput=server,
         )
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 

@@ -6,8 +6,9 @@ Two artifact kinds, detected by shape:
   (EXPERIMENTS.md §Roofline);
 * ``BENCH_net.json`` (a dict with ``bench: "net"``) → the dataplane matrix
   (reduction per topology × trace × range-mode) plus the per-engine
-  hop-throughput microbench (keys/sec, fused vs per-segment speedup) and
-  the egress server-pool scaling sweep (makespan per pool size).
+  hop-throughput microbench (keys/sec, fused vs per-segment speedup), the
+  egress server-pool scaling sweep (makespan per pool size), and the
+  server merge-backend sweep (numpy ladder vs run-arena keys/sec).
 
     PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
     PYTHONPATH=src:. python -m benchmarks.report BENCH_net.json
@@ -163,6 +164,25 @@ def render_net(doc: dict) -> str:
     out.append(
         f"\npool makespan speedup S=4 vs S=1: "
         f"{scaling['speedup_s4_vs_s1']:.2f}x"
+    )
+    tp = doc["server_throughput"]
+    tc = tp["config"]
+    out += [
+        "",
+        f"## server merge backends ({tc['trace']} trace, n={tc['n']}, "
+        f"{tc['segments']}x{tc['length']} switch, {tc['range_mode']} ranges)",
+        "",
+        "| merge backend | seconds | keys/sec |",
+        "|---|---|---|",
+    ]
+    for r in tp["rows"]:
+        out.append(
+            f"| {r['merge_backend']} | {r['server_seconds']:.3f} "
+            f"| {r['keys_per_sec']:,.0f} |"
+        )
+    out.append(
+        f"\nserver merge speedup arena vs numpy: "
+        f"{tp['speedup_arena_vs_numpy']:.2f}x"
     )
     return "\n".join(out)
 

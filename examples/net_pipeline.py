@@ -7,11 +7,15 @@ packet arrival and never holds the unsorted stream in memory.
     python examples/net_pipeline.py [--n 400000] [--trace drifting]
         [--topology single|leaf_spine|tree] [--interleave bursty]
         [--jitter 8] [--ranges static|oracle|sampled] [--servers 4]
+        [--merge-backend numpy|arena]
 
 ``--servers S`` shards the egress across a segment-affinity pool of S
 independent streaming servers (the paper's "sort each range separately and
 then concatenate") — byte-identical output, per-server load and makespan
-printed per server.
+printed per server.  ``--merge-backend arena`` swaps every server's eager
+numpy merge ladder for the device-resident run-arena tournament (same
+output and pass counts, different wall-clock — sweep both to see the
+``server_throughput`` bench section live).
 """
 
 import argparse
@@ -21,7 +25,12 @@ import numpy as np
 import _bootstrap  # noqa: F401
 
 from repro.data import SCENARIOS, TRACES, scenario_max_value, trace_max_value
-from repro.net import RANGE_MODES, plain_stream_sort, run_pipeline
+from repro.net import (
+    MERGE_BACKENDS,
+    RANGE_MODES,
+    plain_stream_sort,
+    run_pipeline,
+)
 
 WORKLOADS = {**TRACES, **SCENARIOS}
 
@@ -48,7 +57,19 @@ def main() -> None:
                     help="egress pool size: shard the delivered stream by "
                     "segment affinity across this many independent "
                     "streaming servers (1 = the classic single server)")
+    ap.add_argument("--merge-backend", default="numpy",
+                    choices=list(MERGE_BACKENDS),
+                    help="run-merge engine per server: the eager numpy "
+                    "ladder or the device-resident run-arena tournament "
+                    "(byte-identical output, different wall-clock)")
     args = ap.parse_args()
+
+    if args.merge_backend == "arena":
+        print(
+            "note: the arena backend jit-compiles its merge network on "
+            "first use (one-time, ~seconds); benchmarks/net_bench.py "
+            "reports warm timings"
+        )
 
     trace = WORKLOADS[args.trace](args.n)
     maxv = (
@@ -79,6 +100,7 @@ def main() -> None:
         reorder_capacity=max(64, 4 * args.jitter),
         range_mode=args.ranges,
         num_servers=args.servers,
+        merge_backend=args.merge_backend,
         verify=True,
         **topo_kw,
     )
@@ -89,7 +111,8 @@ def main() -> None:
     print(
         f"{args.topology} fabric ({len(res.hop_stats)} hops, "
         f"{args.interleave} arrivals, jitter {args.jitter}, "
-        f"{res.range_mode} ranges, {res.num_epochs} epoch(s)): "
+        f"{res.range_mode} ranges, {res.num_epochs} epoch(s), "
+        f"{args.merge_backend} merge): "
         f"{egress} {res.server_seconds:.3f}s, max {max(res.passes)} passes "
         f"-> {100 * (1 - res.server_seconds / t_plain):.1f}% faster"
     )

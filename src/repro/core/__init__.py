@@ -15,9 +15,17 @@ from .marathon import (
     marathon_flat,
     marathon_streams,
 )
-from .mergesort import merge_sort, merge_sort_reference, merge_two, server_sort
+from .mergesort import (
+    merge_runs,
+    merge_runs_batched,
+    merge_runs_flat,
+    merge_sort,
+    merge_sort_reference,
+    merge_two,
+    server_sort,
+)
 from .partition import load_imbalance, quantile_ranges, segment_of, set_ranges
-from .runs import RunStats, merge_passes, run_lengths, run_starts
+from .runs import RunArena, RunStats, merge_passes, run_lengths, run_starts
 from .switchsim import Segment, Switch
 
 __all__ = [
@@ -26,10 +34,14 @@ __all__ = [
     "marathon_emission",
     "marathon_flat",
     "marathon_streams",
+    "merge_runs",
+    "merge_runs_batched",
+    "merge_runs_flat",
     "merge_sort",
     "merge_sort_reference",
     "merge_two",
     "server_sort",
+    "RunArena",
     "load_imbalance",
     "quantile_ranges",
     "segment_of",

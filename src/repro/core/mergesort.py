@@ -29,10 +29,13 @@ from .runs import run_starts
 def merge_two(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Vectorized stable merge of two sorted arrays (Fig. 6's inner loop)."""
     n, m = a.size, b.size
-    if n == 0:
-        return b.copy()
-    if m == 0:
-        return a.copy()
+    if n == 0 or m == 0:
+        keep = b if n == 0 else a
+        if a.dtype == b.dtype:
+            # Same dtype: no result_type promotion and no per-round copy —
+            # a contiguous input passes straight through as a view.
+            return np.ascontiguousarray(keep)
+        return keep.astype(np.result_type(a, b))
     out = np.empty(n + m, dtype=np.result_type(a, b))
     # Output position of each b element: elements of a strictly <= go first.
     ib = np.searchsorted(a, b, side="right") + np.arange(m)
@@ -58,6 +61,142 @@ def merge_runs(runs: list[np.ndarray]) -> np.ndarray:
 def _merge_set(arr: np.ndarray, starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
     """Merge the runs arr[starts[i]:ends[i]] (each sorted) into one run."""
     return merge_runs([arr[s:e] for s, e in zip(starts, ends)])
+
+
+# ---------------------------------------------------------------------------
+# Batched device merge: the run-arena engine
+# ---------------------------------------------------------------------------
+
+#: Below this many keys the host ladder wins — one jit dispatch costs more
+#: than the whole merge (and small test inputs never touch the jit cache).
+MIN_DEVICE_KEYS = 4096
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length()
+
+
+def _ragged_gather(starts: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+    """Flat indices of the slices ``[starts[i], starts[i]+sizes[i])``."""
+    sizes = np.asarray(sizes, dtype=np.int64)
+    total = int(sizes.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    rel = np.arange(total, dtype=np.int64) - np.repeat(offs, sizes)
+    return np.repeat(np.asarray(starts, dtype=np.int64), sizes) + rel
+
+
+def _device_dtype(lo: int, hi: int) -> np.dtype | None:
+    """Narrowest device dtype whose *max* can serve as the pad sentinel.
+
+    Mirrors :func:`repro.net.engine.pallas_row_sort`'s overflow rule: a real
+    key at the sentinel would be indistinguishable from padding, so it drops
+    to the numpy ladder rather than lean on multiset arguments.
+    """
+    if 0 <= lo and hi < np.iinfo(np.uint16).max:
+        return np.dtype(np.uint16)
+    if np.iinfo(np.int32).min < lo and hi < np.iinfo(np.int32).max:
+        return np.dtype(np.int32)
+    return None
+
+
+def merge_runs_flat(
+    buf: np.ndarray,
+    starts: np.ndarray,
+    lengths: np.ndarray,
+    *,
+    min_device_keys: int = MIN_DEVICE_KEYS,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Merge the sorted runs ``buf[starts[i]:starts[i]+lengths[i]]`` — the
+    run-arena layout — into one sorted int64 array, on device.
+
+    Runs are bucketed by power-of-two length, each bucket is laid out as one
+    padded ``(P, B)`` matrix (two vectorized ragged gathers — runs are never
+    touched individually) and merged to a single row by
+    :func:`repro.kernels.ops.merge_tournament`; the handful of bucket
+    winners then merge on the host.  Power-of-two P and B are what keep the
+    jit cache to a few compiled shapes across ladder levels.
+
+    Exactly like ``sort_rows_padded``'s callers, anything the device path
+    cannot represent falls back to the numpy ladder (:func:`merge_runs` of
+    :func:`merge_two`): key ranges that do not fit the int32/uint16 pad
+    sentinels, or totals too small to amortize a dispatch.
+    """
+    starts = np.asarray(starts, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    keep = lengths > 0
+    if not keep.all():
+        starts, lengths = starts[keep], lengths[keep]
+    R = int(starts.size)
+    if R == 0:
+        return np.zeros(0, dtype=np.int64)
+    if R == 1:
+        s = int(starts[0])
+        return np.asarray(buf[s : s + int(lengths[0])], dtype=np.int64)
+    total = int(lengths.sum())
+    # Runs are sorted, so per-run min/max are the end keys: O(R), not O(n).
+    lo = int(buf[starts].min())
+    hi = int(buf[starts + lengths - 1].max())
+    dtype = _device_dtype(lo, hi)
+    if total < min_device_keys or dtype is None:
+        return np.asarray(
+            merge_runs([buf[s : s + l] for s, l in zip(starts, lengths)]),
+            dtype=np.int64,
+        )
+    from ..kernels import ops  # deferred: jax import is heavy
+
+    pad = dtype.type(np.iinfo(dtype).max)
+    # Vectorized next-pow2 (float64 log2 is exact for any realistic length).
+    buckets = (2 ** np.ceil(np.log2(lengths))).astype(np.int64)
+    winners: list[np.ndarray] = []
+    for B in np.unique(buckets):
+        sel = buckets == B
+        P = int(sel.sum())
+        if P == 1:
+            i = int(np.nonzero(sel)[0][0])
+            winners.append(buf[starts[i] : starts[i] + lengths[i]])
+            continue
+        rows = max(2, _next_pow2(P))
+        sl = lengths[sel]
+        mat = np.full((rows, int(B)), pad, dtype)
+        mat.flat[_ragged_gather(np.arange(P) * int(B), sl)] = buf[
+            _ragged_gather(starts[sel], sl)
+        ]
+        merged = np.asarray(ops.merge_tournament(mat, interpret=interpret))
+        winners.append(merged[: int(sl.sum())])
+    if len(winners) == 1:
+        return winners[0].astype(np.int64)
+    return np.asarray(merge_runs(winners), dtype=np.int64)
+
+
+def merge_runs_batched(
+    runs: list[np.ndarray],
+    *,
+    min_device_keys: int = MIN_DEVICE_KEYS,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Device twin of :func:`merge_runs` for a list of sorted arrays.
+
+    Concatenates the runs into the flat arena layout once and defers to
+    :func:`merge_runs_flat`; used where the runs are not already contiguous
+    (the epoched ``final_merge`` of per-segment outputs).
+    """
+    runs = [r for r in runs if r.size]
+    if not runs:
+        return np.zeros(0, dtype=np.int64)
+    if len(runs) == 1:
+        return np.asarray(runs[0], dtype=np.int64)
+    lengths = np.asarray([r.size for r in runs], dtype=np.int64)
+    starts = np.concatenate([[0], np.cumsum(lengths)[:-1]])
+    return merge_runs_flat(
+        np.concatenate(runs),
+        starts,
+        lengths,
+        min_device_keys=min_device_keys,
+        interpret=interpret,
+    )
 
 
 def merge_sort(a: np.ndarray, k: int = 10) -> tuple[np.ndarray, int]:

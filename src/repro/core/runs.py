@@ -52,6 +52,85 @@ class RunStats:
         )
 
 
+class RunArena:
+    """Flat run storage for one segment: a contiguous keys buffer plus an
+    offsets table, so closed runs are *slices*, not Python objects.
+
+    The streaming server's arena merge backend appends each in-order payload
+    columnarly (:meth:`feed` detects run breaks with one vectorized compare —
+    no per-run Python), keeps the youngest run *open* so natural runs
+    continue across packet boundaries exactly as Alg. 1 would see them, and
+    at drain time hands the whole segment to the batched device merge as
+    ``(keys, starts, lengths)`` — the layout
+    :func:`repro.core.mergesort.merge_runs_flat` gathers into one padded
+    tournament matrix without touching the runs individually.
+
+    Buffers grow by doubling; both the keys buffer and the offsets table are
+    int64 end to end (the index math must survive >2^31 keys — pinned by the
+    regression tests in ``tests/test_run_arena.py``).
+    """
+
+    def __init__(self, capacity: int = 1024) -> None:
+        self._buf = np.empty(max(int(capacity), 1), dtype=np.int64)
+        self._n = 0
+        self._starts = np.zeros(16, dtype=np.int64)
+        self._num_runs = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def num_runs(self) -> int:
+        """Maximal ascending runs fed so far (the open run included)."""
+        return self._num_runs
+
+    @property
+    def tail(self) -> int | None:
+        """Last key of the open run (None while the arena is empty)."""
+        return int(self._buf[self._n - 1]) if self._n else None
+
+    def _grow(self, arr: np.ndarray, need: int) -> np.ndarray:
+        cap = arr.size
+        if need <= cap:
+            return arr
+        while cap < need:
+            cap *= 2
+        out = np.empty(cap, dtype=arr.dtype)
+        out[: arr.size] = arr
+        return out
+
+    def feed(self, arr: np.ndarray) -> None:
+        """Append one in-order payload; extend or break runs columnarly."""
+        arr = np.asarray(arr)
+        m = int(arr.size)
+        if m == 0:
+            return
+        breaks = np.nonzero(arr[1:] < arr[:-1])[0] + 1
+        opens_new = self._n == 0 or int(arr[0]) < int(self._buf[self._n - 1])
+        new_starts = breaks + self._n
+        if opens_new:
+            new_starts = np.concatenate([[self._n], new_starts])
+        self._buf = self._grow(self._buf, self._n + m)
+        self._buf[self._n : self._n + m] = arr
+        self._n += m
+        r = int(new_starts.size)
+        if r:
+            self._starts = self._grow(self._starts, self._num_runs + r)
+            self._starts[self._num_runs : self._num_runs + r] = new_starts
+            self._num_runs += r
+
+    @property
+    def keys(self) -> np.ndarray:
+        """The contiguous key buffer (a view; runs are adjacent slices)."""
+        return self._buf[: self._n]
+
+    def run_offsets(self) -> tuple[np.ndarray, np.ndarray]:
+        """``(starts, lengths)`` of every run, in arrival order."""
+        starts = self._starts[: self._num_runs]
+        lengths = np.diff(np.concatenate([starts, [self._n]]))
+        return starts.copy(), lengths.astype(np.int64)
+
+
 def merge_passes(num_runs: int, k: int) -> int:
     """Number of k-way merge iterations to reduce ``num_runs`` runs to one.
 

@@ -112,6 +112,35 @@ def bitonic_merge_array(x: jax.Array) -> jax.Array:
     return x
 
 
+def bitonic_merge_rows(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge row-wise sorted ``a`` and ``b`` (..., B) -> (..., 2B).
+
+    ``concat(a, reverse(b))`` is bitonic, so the log(2B)-stage merge network
+    sorts it — the batched form of the server's pairwise run merge.  (flip on
+    the value, not a Ref: Refs reject negative strides, and lax.rev lowers
+    cleanly on TPU.)
+    """
+    x = jnp.concatenate([a, jnp.flip(b, axis=-1)], axis=-1)
+    return bitonic_merge_array(x)
+
+
+def tournament_merge_array(x: jax.Array) -> jax.Array:
+    """Merge all ``P`` sorted rows of ``x`` (P, B) into one sorted (P*B,) row.
+
+    The run-arena merge engine: rows are padded sorted runs (pads = dtype
+    max, which every round keeps at the row tail), and each round merges
+    adjacent row pairs with the log-depth merge network — rows halve, width
+    doubles, log²-free.  ``P`` rounds of work stay device-resident; nothing
+    returns to the host until one row remains.  P and B powers of two.
+    """
+    P, B = x.shape
+    if P & (P - 1) or B & (B - 1):
+        raise ValueError(f"tournament shape must be powers of two, got {x.shape}")
+    while x.shape[0] > 1:
+        x = bitonic_merge_rows(x[0::2], x[1::2])
+    return x[0]
+
+
 # ---------------------------------------------------------------------------
 # Pallas kernels
 # ---------------------------------------------------------------------------
@@ -128,11 +157,11 @@ def _sort_kv_kernel(k_ref, v_ref, ko_ref, vo_ref):
 
 
 def _merge_kernel(a_ref, b_ref, o_ref):
-    # concat(a, reverse(b)) is bitonic; the merge network sorts it.
-    # (flip on the loaded value, not the Ref: Refs reject negative strides,
-    # and lax.rev lowers cleanly on TPU.)
-    x = jnp.concatenate([a_ref[...], jnp.flip(b_ref[...], axis=-1)], axis=-1)
-    o_ref[...] = bitonic_merge_array(x)
+    o_ref[...] = bitonic_merge_rows(a_ref[...], b_ref[...])
+
+
+def _tournament_kernel(x_ref, o_ref):
+    o_ref[...] = tournament_merge_array(x_ref[...])[None, :]
 
 
 def sort_tiles(
@@ -215,3 +244,34 @@ def merge_tiles(
         out_specs=out_spec,
         interpret=interpret,
     )(a, b)
+
+
+#: VMEM budget for the whole-tournament kernel: the full (P, B) run matrix
+#: plus one round of temporaries must stay on-chip (~16 MB/core).
+TOURNAMENT_MAX_ELEMS = 1 << 22
+
+
+def tournament_tiles(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Run-arena tournament as one Pallas call: the entire padded run matrix
+    lives in VMEM and every merge round happens without touching HBM.
+
+    No grid — rounds couple all rows, so the matrix is a single block.
+    ``P * B`` is capped at :data:`TOURNAMENT_MAX_ELEMS` (the VMEM budget);
+    larger arenas are the caller's responsibility to split (``ops.
+    merge_tournament`` lowers the identical network through plain XLA
+    off-TPU, where no such cap applies).
+    """
+    P, B = x.shape
+    if P & (P - 1) or B & (B - 1):
+        raise ValueError(f"tournament shape must be powers of two, got {x.shape}")
+    if P * B > TOURNAMENT_MAX_ELEMS:
+        raise ValueError(
+            f"tournament matrix {P}x{B} exceeds the VMEM budget "
+            f"({TOURNAMENT_MAX_ELEMS} elements)"
+        )
+    out = pl.pallas_call(
+        _tournament_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, P * B), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[0]

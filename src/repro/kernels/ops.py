@@ -121,6 +121,33 @@ def merge_rows(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_tournament(x: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Merge ``P`` padded sorted rows (P, B) into one sorted (P*B,) stream —
+    the run-arena engine's one device call per segment.
+
+    Rows are runs padded with the dtype max (pads stay at row tails through
+    every round and are sliced off by the caller); each round merges adjacent
+    row pairs with the log-depth bitonic *merge* network, so the whole
+    tournament is ``sum_r log2(2^r B)`` compare-exchange stages instead of a
+    fresh log² sort.  P and B must be powers of two — the shape-bucketing
+    contract that keeps the jit cache to a handful of compiled shapes.
+
+    On TPU the matrix stays VMEM-resident for all rounds in one Pallas call
+    (:func:`repro.kernels.bitonic.tournament_tiles`, up to its VMEM cap);
+    elsewhere the *identical* stage schedule lowers through XLA on the host
+    backend — Pallas interpret mode would re-trace the network per stage and
+    is orders of magnitude slower, which matters because this op backs a
+    benchmarked server hot path (unlike the validation-only kernel tests).
+    """
+    P, B = x.shape
+    if P & (P - 1) or B & (B - 1):
+        raise ValueError(f"tournament shape must be powers of two, got {x.shape}")
+    if _interpret_default(interpret) or P * B > bitonic.TOURNAMENT_MAX_ELEMS:
+        return bitonic.tournament_merge_array(x)
+    return bitonic.tournament_tiles(x, interpret=False)
+
+
 def flash_attention(
     q, k, v, *, causal=True, scale=None, block_q=512, block_k=512,
     interpret: bool | None = None,

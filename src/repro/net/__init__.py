@@ -49,7 +49,7 @@ from .pipeline import (
     plain_stream_sort,
     run_pipeline,
 )
-from .server import StreamingServer, stream_sort
+from .server import MERGE_BACKENDS, StreamingServer, stream_sort
 from .topology import (
     TOPOLOGIES,
     AggregationTree,
@@ -106,6 +106,7 @@ __all__ = [
     "jitter_delivery_batch",
     "plain_stream_sort",
     "run_pipeline",
+    "MERGE_BACKENDS",
     "StreamingServer",
     "stream_sort",
     "TOPOLOGIES",

@@ -76,9 +76,13 @@ class ServerPool:
     values in ``[0, num_servers)`` so the disjoint-range concatenation
     stays sorted.
 
-    ``merge_backend`` selects the distributed merge: ``"numpy"`` (default)
-    or ``"shard_map"`` — per-server shards placed one-per-device on a host
-    ``("server",)`` mesh and concatenated with one collective
+    ``merge_backend`` selects every member server's run-merge engine
+    (:data:`repro.net.server.MERGE_BACKENDS`): the eager ``"numpy"`` ladder
+    or the device-resident ``"arena"`` tournament — byte-identical
+    ``(output, passes)``, different wall-clock.  ``pool_backend`` selects
+    the *distributed* merge that reassembles the shard outputs: ``"numpy"``
+    (default) or ``"shard_map"`` — per-server shards placed one-per-device
+    on a host ``("server",)`` mesh and concatenated with one collective
     (:func:`repro.core.distributed.pool_concat_sharded`); when the platform
     exposes fewer devices than servers it falls back to numpy (run CPU tests
     under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
@@ -94,12 +98,13 @@ class ServerPool:
         reorder_capacity: int | None = None,
         affinity: np.ndarray | None = None,
         merge_backend: str = "numpy",
+        pool_backend: str = "numpy",
     ) -> None:
         if num_epochs < 1:
             raise ValueError("num_epochs must be >= 1")
-        if merge_backend not in ("numpy", "shard_map"):
+        if pool_backend not in ("numpy", "shard_map"):
             raise ValueError(
-                f"unknown merge_backend {merge_backend!r}; "
+                f"unknown pool_backend {pool_backend!r}; "
                 f"options: numpy, shard_map"
             )
         base = segment_affinity(num_segments, num_servers)
@@ -129,6 +134,7 @@ class ServerPool:
         self.num_epochs = num_epochs
         self.eff_segments = num_segments * num_epochs
         self.merge_backend = merge_backend
+        self.pool_backend = pool_backend
         # Local segment numbering: server s's virtual segments, ascending,
         # get local ids 0..count-1 — per epoch that is the base-block order,
         # so a server's own concatenation is ascending in key space too.
@@ -143,6 +149,7 @@ class ServerPool:
                 k=k,
                 reorder_capacity=reorder_capacity,
                 final_merge=num_epochs > 1,
+                merge_backend=merge_backend,
             )
             for s in range(num_servers)
         ]
@@ -212,7 +219,7 @@ class ServerPool:
         output = pool_concat(
             outs,
             disjoint=self.num_epochs == 1,
-            backend=self.merge_backend,
+            backend=self.pool_backend,
         )
         self.merge_seconds = time.perf_counter() - t0
         return output, passes

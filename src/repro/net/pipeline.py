@@ -78,6 +78,7 @@ class PipelineResult:
     engine: str = "fused"
     delivered: WireBatch | None = None  # the wire as the server saw it
     num_servers: int = 1
+    merge_backend: str = "numpy"  # run-merge engine: "numpy" ladder | "arena"
     per_server_seconds: list[float] = dataclasses.field(default_factory=list)
     pool_merge_seconds: float = 0.0
     server_keys: list[int] = dataclasses.field(default_factory=list)
@@ -139,6 +140,7 @@ def run_pipeline(
     reorder_capacity: int | None = None,
     num_servers: int = 1,
     merge_backend: str = "numpy",
+    pool_backend: str = "numpy",
     verify: bool = False,
     **topo_kw,
 ) -> PipelineResult:
@@ -154,8 +156,12 @@ def run_pipeline(
     across a segment-affinity :class:`~repro.net.egress.ServerPool`
     (``num_servers=1`` is the classic single streaming server); the output
     is byte-identical for every ``num_servers`` — only the makespan and the
-    per-server load change.  ``merge_backend`` picks the pool's distributed
-    merge (``"numpy"`` or ``"shard_map"`` with numpy fallback).
+    per-server load change.  ``merge_backend`` picks each server's run-merge
+    engine (``"numpy"`` eager ladder or the device-resident ``"arena"``
+    tournament — byte-identical ``(output, passes)``, the
+    ``server_throughput`` bench section measures the difference);
+    ``pool_backend`` picks the pool's distributed merge (``"numpy"`` or
+    ``"shard_map"`` with numpy fallback).
     """
     values = np.asarray(values, dtype=np.int64)
     if max_value is None:
@@ -242,6 +248,7 @@ def run_pipeline(
         reorder_capacity=reorder_capacity,
         affinity=affinity,
         merge_backend=merge_backend,
+        pool_backend=pool_backend,
     )
     pool.ingest_batch(delivered)
     out, passes = pool.finish()
@@ -267,6 +274,7 @@ def run_pipeline(
         engine=engine,
         delivered=delivered,
         num_servers=num_servers,
+        merge_backend=merge_backend,
         per_server_seconds=list(pool.per_server_seconds),
         pool_merge_seconds=pool.merge_seconds,
         server_keys=pool.server_keys,

@@ -16,6 +16,23 @@ as they land.  :class:`StreamingServer` keeps, per segment (port number):
   k-sets Alg. 1's passes form, executed as soon as their inputs exist, so
   merge work overlaps with arrival instead of following it).
 
+Two ``merge_backend``s drain the detected runs:
+
+* ``"numpy"`` (default) — the eager host ladder above: runs are Python-held
+  arrays, every merge a pairwise ``merge_two`` (one ``searchsorted`` +
+  scatter per pair).
+* ``"arena"`` — the device-resident run-arena engine: each segment's runs
+  live as adjacent slices of one contiguous buffer
+  (:class:`repro.core.runs.RunArena`; ingest appends columnarly, zero
+  per-run Python), and at drain time the whole segment becomes one padded
+  tournament matrix merged on device
+  (:func:`repro.core.mergesort.merge_runs_flat` →
+  :func:`repro.kernels.ops.merge_tournament` — each ladder level is one
+  round of the log-depth bitonic merge network over *all* pairs of the
+  level at once).  Output and pass counts are byte-identical to the numpy
+  ladder — only the wall-clock changes (the ``server_throughput`` bench
+  section gates the arena at ≥2× the ladder on 1M keys).
+
 Ingestion speaks both wire formats: per-object packets (:meth:`ingest`) and
 columnar :class:`~repro.net.wire.WireBatch` streams (:meth:`ingest_batch`),
 whose fast path feeds each in-order segment's keys through the vectorized
@@ -35,10 +52,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.mergesort import merge_runs
-from ..core.runs import merge_passes, run_starts
+from ..core.mergesort import merge_runs, merge_runs_batched, merge_runs_flat
+from ..core.runs import RunArena, merge_passes, run_starts
 from .packet import Packet
 from .wire import ragged_gather
+
+#: Run-merge engines a streaming server can drain with.
+MERGE_BACKENDS = ("numpy", "arena")
 
 
 class StreamingServer:
@@ -50,13 +70,20 @@ class StreamingServer:
         k: int = 10,
         reorder_capacity: int | None = None,
         final_merge: bool = False,
+        merge_backend: str = "numpy",
     ) -> None:
         if num_segments <= 0:
             raise ValueError("num_segments must be positive")
+        if merge_backend not in MERGE_BACKENDS:
+            raise ValueError(
+                f"unknown merge_backend {merge_backend!r}; "
+                f"options: {', '.join(MERGE_BACKENDS)}"
+            )
         self.num_segments = num_segments
         self.k = k
         self.reorder_capacity = reorder_capacity
         self.final_merge = final_merge
+        self.merge_backend = merge_backend
         S = num_segments
         self._pending: list[dict[int, np.ndarray]] = [{} for _ in range(S)]
         self._next_seq = [0] * S
@@ -64,6 +91,9 @@ class StreamingServer:
         self._tail: list[int | None] = [None] * S
         self._levels: list[list[list[np.ndarray]]] = [[] for _ in range(S)]
         self._run_count = [0] * S
+        self._arenas: list[RunArena] | None = (
+            [RunArena() for _ in range(S)] if merge_backend == "arena" else None
+        )
         self._ingested = 0
         self.max_reorder_depth = 0  # observability: worst buffer occupancy
 
@@ -164,6 +194,12 @@ class StreamingServer:
         if arr.size == 0:
             return
         self._ingested += int(arr.size)
+        if self._arenas is not None:
+            # Arena backend: the same run-break rule, applied columnarly —
+            # keys append to the segment's flat buffer, boundaries to its
+            # offsets table, and the open run continues across payloads.
+            self._arenas[sid].feed(arr)
+            return
         tail = self._tail[sid]
         if tail is not None and int(arr[0]) < tail:
             self._close_run(sid)
@@ -210,16 +246,28 @@ class StreamingServer:
                 )
         outs: list[np.ndarray] = []
         passes: list[int] = []
-        for sid in range(self.num_segments):
-            self._close_run(sid)
-            remaining = [r for level in self._levels[sid] for r in level]
-            if remaining:
-                outs.append(merge_runs(remaining))
-            passes.append(merge_passes(self._run_count[sid], self.k))
+        if self._arenas is not None:
+            for sid in range(self.num_segments):
+                arena = self._arenas[sid]
+                if len(arena):
+                    starts, lengths = arena.run_offsets()
+                    outs.append(merge_runs_flat(arena.keys, starts, lengths))
+                passes.append(merge_passes(arena.num_runs, self.k))
+        else:
+            for sid in range(self.num_segments):
+                self._close_run(sid)
+                remaining = [r for level in self._levels[sid] for r in level]
+                if remaining:
+                    outs.append(merge_runs(remaining))
+                passes.append(merge_passes(self._run_count[sid], self.k))
         if not outs:
             out = np.zeros(0, dtype=np.int64)
         elif self.final_merge:
-            out = merge_runs(outs)
+            out = (
+                merge_runs_batched(outs)
+                if self._arenas is not None
+                else merge_runs(outs)
+            )
         else:
             out = np.concatenate(outs)
         assert out.size == self._ingested

@@ -31,6 +31,41 @@ def test_merge_two(a, b):
     np.testing.assert_array_equal(out, np.sort(np.concatenate([a, b])))
 
 
+def test_merge_two_empty_side_same_dtype_is_a_view_not_a_copy():
+    """The tournament hot path: an empty partner must not trigger the
+    result_type + full-copy round — the contiguous survivor passes through
+    as a view (one ascontiguousarray, not a copy per tournament round)."""
+    a = np.array([1, 2, 3], dtype=np.int64)
+    empty = np.zeros(0, dtype=np.int64)
+    for out in (merge_two(a, empty), merge_two(empty, a)):
+        assert out.dtype == np.int64
+        assert np.shares_memory(out, a)
+        np.testing.assert_array_equal(out, a)
+    both = merge_two(empty, empty)
+    assert both.size == 0 and both.dtype == np.int64
+
+
+def test_merge_two_empty_side_mixed_dtype_still_promotes():
+    a = np.array([1, 2], dtype=np.int32)
+    empty64 = np.zeros(0, dtype=np.int64)
+    out = merge_two(a, empty64)
+    assert out.dtype == np.int64
+    assert not np.shares_memory(out, a)
+    np.testing.assert_array_equal(out, a)
+
+
+def test_merge_two_stable_on_all_duplicate_keys():
+    """Stability, observed directly: -0.0 == +0.0 compare equal but carry a
+    distinguishable sign bit, so an all-duplicate merge shows exactly which
+    input each tied slot came from — all of ``a`` must precede ``b``."""
+    a = np.array([-0.0, -0.0, -0.0])
+    b = np.array([0.0, 0.0])
+    out = merge_two(a, b)
+    np.testing.assert_array_equal(
+        np.signbit(out), [True, True, True, False, False]
+    )
+
+
 @given(
     st.lists(st.integers(0, 10_000), max_size=500),
     st.integers(min_value=2, max_value=12),

@@ -131,6 +131,38 @@ def test_truncated_shard_detected_at_finish():
         pool.finish()
 
 
+@pytest.mark.parametrize("window,seed", [(8, 3), (32, 5)])
+def test_jitter_observability_counters_pinned(window, seed):
+    """`max_reorder_depth` and `keys_ingested` are reported on every server
+    — pin them against independently computed ground truth under jittered
+    delivery, not just report them."""
+    vals, delivered = _delivered()
+    jittered = jitter_delivery_batch(delivered, window, seed=seed)
+    pool = ServerPool(SEGS, POOL)
+    pool.ingest_batch(jittered)
+    out, _ = pool.finish()
+    np.testing.assert_array_equal(out, np.sort(vals))
+    # keys_ingested per server == that server's affinity shard of the wire,
+    # counted straight off the delivered columns (jitter permutes packets
+    # but never moves a key across segments, hence never across servers).
+    affinity = segment_affinity(SEGS, POOL)
+    starts, sizes = _packet_view(jittered)
+    shard_of_packet = affinity[jittered.segment_id[starts]]
+    expected_keys = [
+        int(sizes[shard_of_packet == s].sum()) for s in range(POOL)
+    ]
+    assert pool.server_keys == expected_keys
+    assert [s.keys_ingested for s in pool.servers] == expected_keys
+    assert sum(expected_keys) == vals.size
+    # the pool's high-water mark is the max over its members, each of which
+    # saw real buffering (depth >= 1) bounded by the displacement window
+    depths = [s.max_reorder_depth for s in pool.servers]
+    assert pool.max_reorder_depth == max(depths)
+    assert pool.max_reorder_depth > 1  # the jitter really exercised a buffer
+    for d in depths:
+        assert 1 <= d <= 2 * window
+
+
 def test_jitter_straddling_two_ingest_calls_matches_one_shot():
     """The resume path: a jittered stream split across two ingest_batch
     calls (each server resumes around buffered packets) is byte-identical

@@ -247,8 +247,8 @@ def test_pool_concat_sharded_collective_path():
 def test_pipeline_shard_map_backend_matches_numpy_backend(mode):
     vals = TRACES["network"](1500, seed=17)
     maxv = trace_max_value("network")
-    a = _run(vals, maxv, "single", {}, mode, 4, merge_backend="shard_map")
-    b = _run(vals, maxv, "single", {}, mode, 4, merge_backend="numpy")
+    a = _run(vals, maxv, "single", {}, mode, 4, pool_backend="shard_map")
+    b = _run(vals, maxv, "single", {}, mode, 4, pool_backend="numpy")
     np.testing.assert_array_equal(a.output, b.output)
     assert a.passes == b.passes
 

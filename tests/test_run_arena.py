@@ -1,0 +1,346 @@
+"""Run-arena merge engine tests (ISSUE 5).
+
+Four layers, smallest to largest:
+
+1. :class:`repro.core.runs.RunArena` — columnar run collection: boundary
+   detection, open-run continuation across payloads, offsets-table shape.
+2. ``run_starts``/``run_lengths`` regression coverage — int64 index math
+   (including a >2^31-element buffer), single-element, strictly-descending.
+3. :func:`repro.core.mergesort.merge_runs_flat` /
+   :func:`~repro.core.mergesort.merge_runs_batched` — the batched device
+   tournament against the numpy ladder and ``np.sort``, on the device path
+   (``min_device_keys=0``) and across every fallback rule (uint16 / int32
+   pad-sentinel bounds, sub-threshold totals), plus jnp vs Pallas-interpret
+   parity for the tournament kernel itself.
+4. Three-way end-to-end byte-identity: ``merge_backend="arena"`` ==
+   ``"numpy"`` == ``merge_sort_reference`` (literal Alg. 1) over
+   scenario × topology × range-mode × pool size, including the epoched
+   ``final_merge`` path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    RunArena,
+    merge_runs,
+    merge_runs_batched,
+    merge_runs_flat,
+    merge_sort_reference,
+)
+from repro.core.runs import run_lengths, run_starts
+from repro.data import SCENARIOS, TRACES, scenario_max_value, trace_max_value
+from repro.net import AdaptiveControlPlane, run_pipeline
+
+# ---------------------------------------------------------------------------
+# RunArena
+# ---------------------------------------------------------------------------
+
+
+def _offsets(arena):
+    starts, lengths = arena.run_offsets()
+    return list(starts), list(lengths)
+
+
+def test_arena_single_feed_matches_run_starts():
+    a = np.array([1, 3, 2, 2, 5, 0, 7], dtype=np.int64)
+    arena = RunArena(capacity=2)  # force growth
+    arena.feed(a)
+    np.testing.assert_array_equal(arena.keys, a)
+    starts, lengths = arena.run_offsets()
+    np.testing.assert_array_equal(starts, run_starts(a))
+    np.testing.assert_array_equal(lengths, run_lengths(a))
+    assert arena.num_runs == run_starts(a).size
+    assert arena.tail == 7
+
+
+def test_arena_open_run_continues_across_feeds():
+    arena = RunArena()
+    arena.feed(np.array([1, 2, 3]))
+    arena.feed(np.array([3, 4]))  # ascending across the boundary: same run
+    assert arena.num_runs == 1
+    arena.feed(np.array([0, 9]))  # descends at the boundary: new run
+    assert arena.num_runs == 2
+    assert _offsets(arena) == ([0, 5], [5, 2])
+    np.testing.assert_array_equal(arena.keys, [1, 2, 3, 3, 4, 0, 9])
+
+
+def test_arena_multi_feed_equals_one_shot_on_concatenation():
+    rng = np.random.default_rng(3)
+    stream = rng.integers(0, 100, size=500)
+    one = RunArena()
+    one.feed(stream)
+    many = RunArena(capacity=1)
+    for cut in np.array_split(stream, 13):
+        many.feed(cut)
+    many.feed(np.zeros(0, dtype=np.int64))  # empty payloads are no-ops
+    assert _offsets(one) == _offsets(many)
+    assert one.num_runs == many.num_runs
+    np.testing.assert_array_equal(one.keys, many.keys)
+
+
+def test_arena_empty_and_single_element():
+    arena = RunArena()
+    assert len(arena) == 0 and arena.num_runs == 0 and arena.tail is None
+    starts, lengths = arena.run_offsets()
+    assert starts.size == 0 and lengths.size == 0
+    arena.feed(np.array([42]))
+    assert _offsets(arena) == ([0], [1]) and arena.tail == 42
+
+
+def test_arena_strictly_descending_every_key_its_own_run():
+    arena = RunArena()
+    arena.feed(np.arange(64, dtype=np.int64)[::-1].copy())
+    assert arena.num_runs == 64
+    starts, lengths = arena.run_offsets()
+    np.testing.assert_array_equal(starts, np.arange(64))
+    assert set(lengths) == {1}
+
+
+# ---------------------------------------------------------------------------
+# run_starts / run_lengths regression (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_run_starts_index_dtype_is_int64_for_any_input_dtype():
+    for dtype in (np.int8, np.int32, np.int64):
+        a = np.array([3, 1, 2], dtype=dtype)
+        assert run_starts(a).dtype == np.int64
+        assert run_lengths(a).dtype == np.int64
+
+
+def test_run_starts_single_element_and_strictly_descending():
+    np.testing.assert_array_equal(run_starts(np.array([7])), [0])
+    np.testing.assert_array_equal(run_lengths(np.array([7])), [1])
+    desc = np.arange(50)[::-1]
+    np.testing.assert_array_equal(run_starts(desc), np.arange(50))
+    np.testing.assert_array_equal(run_lengths(desc), np.ones(50))
+
+
+@pytest.mark.slow
+def test_run_lengths_beyond_int31_elements():
+    """A single run longer than 2^31 keys: every index and length on the
+    path (break offsets, concatenated starts, diffs) must be 64-bit —
+    int32 math would wrap the length negative.  int8 keys keep the buffer
+    at ~2 GiB."""
+    n = 2**31 + 3
+    a = np.zeros(n, dtype=np.int8)  # non-decreasing: one maximal run
+    starts = run_starts(a)
+    assert starts.dtype == np.int64
+    np.testing.assert_array_equal(starts, [0])
+    lengths = run_lengths(a)
+    assert lengths.dtype == np.int64
+    assert lengths.tolist() == [n]
+    assert n > np.iinfo(np.int32).max  # the regression being pinned
+
+
+# ---------------------------------------------------------------------------
+# Batched device merge vs the numpy ladder
+# ---------------------------------------------------------------------------
+
+
+def _random_runs(rng, count, lo=0, hi=1000, max_len=40):
+    return [
+        np.sort(rng.integers(lo, hi, size=rng.integers(1, max_len + 1)))
+        for _ in range(count)
+    ]
+
+
+def _flat(runs):
+    lengths = np.asarray([r.size for r in runs], dtype=np.int64)
+    starts = np.concatenate([[0], np.cumsum(lengths)[:-1]])
+    return np.concatenate(runs), starts, lengths
+
+
+@pytest.mark.parametrize("count", [2, 3, 7, 16, 33])
+def test_merge_runs_flat_device_path_matches_ladder(count):
+    rng = np.random.default_rng(count)
+    runs = _random_runs(rng, count)
+    buf, starts, lengths = _flat(runs)
+    got = merge_runs_flat(buf, starts, lengths, min_device_keys=0)
+    ref = merge_runs([r.astype(np.int64) for r in runs])
+    assert got.dtype == np.int64
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(got, np.sort(buf))
+
+
+def test_merge_runs_flat_skips_empty_runs_and_handles_trivia():
+    out = merge_runs_flat(np.zeros(0, np.int64), [], [])
+    assert out.size == 0 and out.dtype == np.int64
+    buf = np.array([5, 6, 7], dtype=np.int64)
+    np.testing.assert_array_equal(
+        merge_runs_flat(buf, [0, 3], [3, 0], min_device_keys=0), buf
+    )
+
+
+def test_merge_runs_flat_all_duplicates_and_pow2_edges():
+    # lengths exactly at and around powers of two; all-equal keys
+    runs = [np.full(m, 9, dtype=np.int64) for m in (1, 2, 31, 32, 33, 64)]
+    buf, starts, lengths = _flat(runs)
+    got = merge_runs_flat(buf, starts, lengths, min_device_keys=0)
+    np.testing.assert_array_equal(got, np.full(sum(r.size for r in runs), 9))
+
+
+def test_merge_runs_flat_dtype_fallback_rules():
+    """uint16 needs 0 <= k < 65535; int32 needs |k| < 2^31-1; beyond that
+    the numpy ladder takes over — all byte-identical."""
+    rng = np.random.default_rng(0)
+    cases = [
+        (0, 60_000),  # uint16 device path
+        (0, 65_535),  # 65535 key: uint16 pad sentinel -> int32 path
+        (-500, 500),  # negatives: int32 path
+        (0, 2**40),  # beyond int32: numpy ladder fallback
+        (np.iinfo(np.int64).max - 10, np.iinfo(np.int64).max),  # extreme
+    ]
+    for lo, hi in cases:
+        runs = [
+            np.sort(rng.integers(lo, hi, size=rng.integers(1, 30), dtype=np.int64))
+            for _ in range(9)
+        ]
+        buf, starts, lengths = _flat(runs)
+        got = merge_runs_flat(buf, starts, lengths, min_device_keys=0)
+        np.testing.assert_array_equal(got, np.sort(buf))
+
+
+def test_merge_runs_batched_list_interface():
+    rng = np.random.default_rng(7)
+    runs = _random_runs(rng, 12) + [np.zeros(0, dtype=np.int64)]
+    got = merge_runs_batched(runs, min_device_keys=0)
+    np.testing.assert_array_equal(got, np.sort(np.concatenate(runs)))
+    assert merge_runs_batched([]).size == 0
+    one = np.array([1, 2], dtype=np.int64)
+    np.testing.assert_array_equal(merge_runs_batched([one]), one)
+
+
+def test_tournament_jnp_matches_pallas_interpret():
+    """ops.merge_tournament lowers the network through XLA off-TPU; the
+    Pallas kernel (interpret mode) must realize the identical schedule."""
+    jax = pytest.importorskip("jax")
+    from repro.kernels import bitonic, ops
+
+    rng = np.random.default_rng(1)
+    x = np.sort(rng.integers(0, 1000, size=(8, 16)).astype(np.int32), axis=1)
+    via_ops = np.asarray(ops.merge_tournament(x))
+    via_pallas = np.asarray(bitonic.tournament_tiles(jax.numpy.asarray(x)))
+    np.testing.assert_array_equal(via_ops, via_pallas)
+    np.testing.assert_array_equal(via_ops, np.sort(x.ravel()))
+    with pytest.raises(ValueError, match="powers of two"):
+        ops.merge_tournament(x[:, :10])
+
+
+# ---------------------------------------------------------------------------
+# Three-way end-to-end byte-identity (arena == numpy == Alg. 1 reference)
+# ---------------------------------------------------------------------------
+
+N_E2E = 700  # merge_sort_reference is literal-Python Alg. 1: keep it small
+
+
+def _three_way(
+    vals, maxv, *, num_servers, reference=True, adaptive_factory=None, **kw
+):
+    results = {}
+    for backend in ("numpy", "arena"):
+        results[backend] = run_pipeline(
+            vals,
+            num_segments=8,
+            segment_length=16,
+            max_value=maxv,
+            payload_size=32,
+            num_servers=num_servers,
+            merge_backend=backend,
+            # an AdaptiveControlPlane is consumed by its run: build one each
+            adaptive=adaptive_factory() if adaptive_factory else None,
+            verify=True,
+            **kw,
+        )
+    a, b = results["arena"], results["numpy"]
+    np.testing.assert_array_equal(a.output, b.output)
+    assert a.passes == b.passes
+    assert a.num_epochs == b.num_epochs
+    if reference:
+        np.testing.assert_array_equal(
+            a.output, merge_sort_reference(vals, k=10)
+        )
+    return a
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+@pytest.mark.parametrize("mode", ("static", "sampled"))
+def test_three_way_identity_per_scenario(scenario, mode):
+    vals = SCENARIOS[scenario](N_E2E, seed=11)
+    maxv = scenario_max_value(scenario)
+    for pool in (1, 2):
+        _three_way(
+            vals, maxv, num_servers=pool, range_mode=mode, seed=5
+        )
+
+
+@pytest.mark.parametrize("topo,topo_kw", [
+    ("leaf_spine", {"num_leaves": 3}),
+    ("tree", {"branching": 2, "height": 3}),
+])
+@pytest.mark.parametrize("mode", ("oracle", "sampled"))
+def test_three_way_identity_across_fabrics(topo, topo_kw, mode):
+    vals = TRACES["network"](N_E2E, seed=23)
+    _three_way(
+        vals,
+        trace_max_value("network"),
+        num_servers=4,
+        topology=topo,
+        range_mode=mode,
+        seed=2,
+        **topo_kw,
+    )
+
+
+def test_three_way_identity_epoched_final_merge():
+    """Mid-stream re-partitioning: overlapping per-epoch ranges force the
+    k-way ``final_merge`` on every server — the arena path must k-way merge
+    its per-(epoch, segment) outputs byte-identically."""
+    vals = SCENARIOS["drifting"](6000, seed=0)
+    maxv = scenario_max_value("drifting")
+    for pool in (1, 4):
+        res = _three_way(
+            vals,
+            maxv,
+            num_servers=pool,
+            range_mode="sampled",
+            adaptive_factory=lambda: AdaptiveControlPlane(
+                8, maxv, warmup=1024, check_every=1024, max_epochs=6
+            ),
+            num_flows=1,  # preserve the temporal drift the plane reacts to
+            reference=False,  # 6k keys: the literal-Python Alg. 1 is too slow
+            seed=0,
+        )
+        assert res.num_epochs >= 2  # final_merge really ran
+        np.testing.assert_array_equal(res.output, np.sort(vals))
+
+
+def test_arena_equals_numpy_at_device_scale():
+    """Above MIN_DEVICE_KEYS per segment the arena really merges on device
+    (the 700-key three-way tests exercise its numpy fallback); identity
+    must hold there too."""
+    vals = TRACES["random"](80_000, seed=9)
+    res = _three_way(
+        vals,
+        trace_max_value("random"),
+        num_servers=1,
+        range_mode="oracle",
+        reference=False,  # 80k keys: literal-Python Alg. 1 is too slow
+        seed=4,
+    )
+    from repro.core.mergesort import MIN_DEVICE_KEYS
+
+    assert min(np.bincount(res.delivered.segment_id)) > MIN_DEVICE_KEYS
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+
+
+def test_arena_backend_validation():
+    from repro.net.server import StreamingServer
+
+    with pytest.raises(ValueError, match="unknown merge_backend"):
+        StreamingServer(4, merge_backend="bogus")
+    with pytest.raises(ValueError, match="unknown pool_backend"):
+        from repro.net import ServerPool
+
+        ServerPool(4, 2, pool_backend="bogus")
