@@ -1,11 +1,11 @@
 """BENCH_*.json artifact schema: write, validate, and gate bench results.
 
 Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
-trajectory across PRs.  The schema (version 4) is hand-validated here — no
+trajectory across PRs.  The schema (version 5) is hand-validated here — no
 external dependency — and documented in README "Reproducing the numbers":
 
     {
-      "schema_version": 3,
+      "schema_version": 5,
       "bench": "net",
       "config":  {"n", "repeats", "segments", "length", "payload", "k",
                   "quick": bool, "seed": int},
@@ -45,6 +45,18 @@ external dependency — and documented in README "Reproducing the numbers":
                   "server_seconds": float, # ingest+finish, min over repeats
                   "keys_per_sec": float}],
         "speedup_arena_vs_numpy": float,
+      },
+      "telemetry": {            # observability overhead sweep (v5)
+        "config": {"segments", "length", "payload", "n", "trace",
+                   "range_mode", "repeats"},
+        "rows": [{"mode": str,            # "off" | "traced" | "int"
+                  "pipeline_seconds": float,  # end-to-end, min over repeats
+                  "keys_per_sec": float}],
+        "per_hop": [{"hop": str,          # from the traced run's hop spans
+                     "seconds": float,
+                     "keys_in": int, "keys_out": int}],
+        "overhead_traced_vs_off": float,  # tracing must be near-free
+        "overhead_int_vs_off": float,
       }
     }
 
@@ -53,12 +65,14 @@ sampled ranges within ``--min-sampled-ratio`` of the oracle-quantile
 reduction on the skewed traces (ISSUE 2), the fused batched hop engine at
 least ``--min-hop-speedup``× the per-segment numpy path (ISSUE 3), the
 4-server egress pool at least ``--min-server-scaling``× the single server
-on the 1M-key makespan (ISSUE 4), and the run-arena merge engine at least
-``--min-server-speedup``× the numpy ladder on the same trace (ISSUE 5):
+on the 1M-key makespan (ISSUE 4), the run-arena merge engine at least
+``--min-server-speedup``× the numpy ladder on the same trace (ISSUE 5),
+and the recording tracer at most ``--max-trace-overhead``× the null-tracer
+pipeline on the 1M-key wire (ISSUE 6):
 
     python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \\
         --min-hop-speedup 3.0 --min-server-scaling 1.0 \\
-        --min-server-speedup 2.0
+        --min-server-speedup 2.0 --max-trace-overhead 1.05
 """
 
 from __future__ import annotations
@@ -71,7 +85,7 @@ try:
 except ImportError:  # pragma: no cover - python -m benchmarks.emit
     from benchmarks import _bootstrap  # noqa: F401
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 _CONFIG_FIELDS = {
     "n": int,
@@ -145,6 +159,23 @@ _SERVER_TP_ROW_FIELDS = {
 }
 
 _MERGE_BACKENDS = {"numpy", "arena"}
+
+_TELEMETRY_CONFIG_FIELDS = dict(_SCALING_CONFIG_FIELDS)
+
+_TELEMETRY_ROW_FIELDS = {
+    "mode": str,
+    "pipeline_seconds": float,
+    "keys_per_sec": float,
+}
+
+_TELEMETRY_MODES = {"off", "traced", "int"}
+
+_TELEMETRY_HOP_FIELDS = {
+    "hop": str,
+    "seconds": float,
+    "keys_in": int,
+    "keys_out": int,
+}
 
 
 def _check_type(path: str, value, want: type) -> None:
@@ -307,6 +338,55 @@ def validate_net_bench(doc: dict) -> None:
     )
     if tp["speedup_arena_vs_numpy"] <= 0:
         raise ValueError("$.server_throughput.speedup_arena_vs_numpy: <= 0")
+    tel = doc.get("telemetry")
+    _check_type("$.telemetry", tel, dict)
+    _check_type("$.telemetry.config", tel.get("config"), dict)
+    for key, want in _TELEMETRY_CONFIG_FIELDS.items():
+        if key not in tel["config"]:
+            raise ValueError(f"$.telemetry.config.{key}: missing")
+        _check_type(f"$.telemetry.config.{key}", tel["config"][key], want)
+    if tel["config"]["range_mode"] not in _RANGE_MODES:
+        raise ValueError(
+            f"$.telemetry.config.range_mode: "
+            f"{tel['config']['range_mode']!r} not in {sorted(_RANGE_MODES)}"
+        )
+    _check_type("$.telemetry.rows", tel.get("rows"), list)
+    modes = set()
+    for i, row in enumerate(tel["rows"]):
+        _check_type(f"$.telemetry.rows[{i}]", row, dict)
+        for key, want in _TELEMETRY_ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.telemetry.rows[{i}].{key}: missing")
+            _check_type(f"$.telemetry.rows[{i}].{key}", row[key], want)
+        if row["mode"] not in _TELEMETRY_MODES:
+            raise ValueError(
+                f"$.telemetry.rows[{i}].mode: {row['mode']!r} not in "
+                f"{sorted(_TELEMETRY_MODES)}"
+            )
+        if row["pipeline_seconds"] <= 0 or row["keys_per_sec"] <= 0:
+            raise ValueError(f"$.telemetry.rows[{i}]: non-positive timing")
+        modes.add(row["mode"])
+    if modes != _TELEMETRY_MODES:
+        raise ValueError(
+            f"$.telemetry.rows: modes {sorted(modes)} != "
+            f"{sorted(_TELEMETRY_MODES)}"
+        )
+    _check_type("$.telemetry.per_hop", tel.get("per_hop"), list)
+    if not tel["per_hop"]:
+        raise ValueError("$.telemetry.per_hop: empty — the traced run "
+                         "must contribute at least one hop span")
+    for i, row in enumerate(tel["per_hop"]):
+        _check_type(f"$.telemetry.per_hop[{i}]", row, dict)
+        for key, want in _TELEMETRY_HOP_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.telemetry.per_hop[{i}].{key}: missing")
+            _check_type(f"$.telemetry.per_hop[{i}].{key}", row[key], want)
+        if row["seconds"] < 0 or row["keys_in"] < 0 or row["keys_out"] < 0:
+            raise ValueError(f"$.telemetry.per_hop[{i}]: negative value")
+    for key in ("overhead_traced_vs_off", "overhead_int_vs_off"):
+        _check_type(f"$.telemetry.{key}", tel.get(key), float)
+        if tel[key] <= 0:
+            raise ValueError(f"$.telemetry.{key}: <= 0")
 
 
 def hop_speedup(doc: dict) -> float:
@@ -324,9 +404,14 @@ def server_merge_speedup(doc: dict) -> float:
     return float(doc["server_throughput"]["speedup_arena_vs_numpy"])
 
 
+def trace_overhead(doc: dict) -> float:
+    """The artifact's recording-tracer-vs-off end-to-end pipeline ratio."""
+    return float(doc["telemetry"]["overhead_traced_vs_off"])
+
+
 def write_net_bench(
     path: str, config: dict, results: list[dict], hop_throughput: dict,
-    server_scaling: dict, server_throughput: dict,
+    server_scaling: dict, server_throughput: dict, telemetry: dict,
 ) -> dict:
     """Assemble, validate, and write a net-bench artifact; return the doc."""
     doc = {
@@ -337,6 +422,7 @@ def write_net_bench(
         "hop_throughput": hop_throughput,
         "server_scaling": server_scaling,
         "server_throughput": server_throughput,
+        "telemetry": telemetry,
     }
     validate_net_bench(doc)
     with open(path, "w") as fh:
@@ -401,6 +487,12 @@ def main() -> None:
         "times faster than the numpy ladder on the 1M-key server sweep "
         "(ISSUE 5 acceptance: 2.0)",
     )
+    ap.add_argument(
+        "--max-trace-overhead", type=float, default=None,
+        help="gate: the recording tracer may cost at most this ratio of "
+        "the null-tracer end-to-end pipeline on the 1M-key wire (ISSUE 6 "
+        "acceptance: 1.05)",
+    )
     args = ap.parse_args()
     with open(args.artifact) as fh:
         doc = json.load(fh)
@@ -435,6 +527,16 @@ def main() -> None:
             raise SystemExit(
                 f"run-arena merge engine is only {speedup:.2f}x the numpy "
                 f"ladder (need {args.min_server_speedup}x)"
+            )
+    if args.max_trace_overhead is not None:
+        overhead = trace_overhead(doc)
+        ok = overhead <= args.max_trace_overhead
+        status = "OK" if ok else "FAIL"
+        print(f"  telemetry overhead traced/off: {overhead:.3f}x {status}")
+        if not ok:
+            raise SystemExit(
+                f"recording tracer costs {overhead:.3f}x the null-tracer "
+                f"pipeline (allowed {args.max_trace_overhead}x)"
             )
     if args.min_sampled_ratio is not None:
         ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))

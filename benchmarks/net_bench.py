@@ -33,13 +33,18 @@ gates S=4 beating S=1; and the **server merge-backend sweep** (schema
 v4): the same delivered 1M-key wire drained once per run-merge engine —
 the eager numpy ladder vs the device-resident run-arena tournament
 (byte-identical ``(output, passes)``) — with their speedup ratio, which
-``--min-server-speedup`` gates in CI.  All RNG (trace synthesis,
-interleave, control plane) derives from ``--seed``, so an artifact
-reproduces across invocations.
+``--min-server-speedup`` gates in CI; and the **telemetry overhead sweep**
+(schema v5): the end-to-end 1M-key pipeline run with observability off
+(null tracer), with a recording :class:`repro.obs.Tracer` + metrics, and
+with in-band INT columns on the wire — outputs asserted byte-identical
+across modes, per-hop time/keys breakdown from the traced run's spans,
+and the traced-vs-off ratio that ``--max-trace-overhead`` gates in CI.
+All RNG (trace synthesis, interleave, control plane) derives from
+``--seed``, so an artifact reproduces across invocations.
 
 Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
             [--faithful-check] [--hop-n N] [--scaling-n N] [--server-n N]
-            [--seed S] [--out BENCH_net.json]
+            [--telemetry-n N] [--seed S] [--out BENCH_net.json]
 """
 
 from __future__ import annotations
@@ -106,6 +111,15 @@ SCALING_BENCH = {"segments": 16, "length": 64, "payload": 256,
 # arena >= 2x the ladder.
 SERVER_BACKENDS = ("numpy", "arena")
 SERVER_BENCH = dict(SCALING_BENCH)
+
+# Telemetry overhead sweep (schema v5 `telemetry`): the same end-to-end
+# 1M-key pipeline run three ways — observability fully off (the null
+# tracer), with a recording Tracer + metrics registry, and with INT
+# per-hop metadata columns stamped onto the wire on top of that.  Outputs
+# are asserted byte-identical across modes (tracing must be transparent);
+# CI gates `overhead_traced_vs_off` at ``--max-trace-overhead`` (1.05).
+TELEMETRY_MODES = ("off", "traced", "int")
+TELEMETRY_BENCH = dict(SCALING_BENCH)
 
 
 def hop_throughput(n: int, repeats: int, seed: int = 0) -> dict:
@@ -260,6 +274,79 @@ def server_throughput(n: int, repeats: int, seed: int = 0) -> dict:
     }
 
 
+def telemetry_overhead(n: int, repeats: int, seed: int = 0) -> dict:
+    """End-to-end pipeline seconds per observability mode, plus per-hop cost.
+
+    Three modes on the identical trace and config: ``off`` (null tracer —
+    the production path), ``traced`` (recording :class:`repro.obs.Tracer` +
+    metrics registry), and ``int`` (traced plus in-band per-hop metadata
+    columns on the wire).  Outputs are asserted byte-identical across all
+    three — observability must be transparent — and the traced run's hop
+    spans become the per-hop time/keys breakdown the report renders.
+    """
+    from repro.obs import Tracer
+
+    cfg = dict(TELEMETRY_BENCH, n=n, repeats=repeats)
+    trace = TRACES[cfg["trace"]](n, seed=seed)
+    maxv = trace_max_value(cfg["trace"])
+    expected = np.sort(trace)
+    kw = dict(
+        topology="single",
+        num_segments=cfg["segments"],
+        segment_length=cfg["length"],
+        max_value=maxv,
+        payload_size=cfg["payload"],
+        num_flows=8,
+        k=K,
+        range_mode=cfg["range_mode"],
+        seed=seed,
+    )
+    # Interleave the modes round-robin (off, traced, int, off, traced, …)
+    # rather than timing each mode's repeats in a block: allocator and page
+    # cache state drift over a block schedule and masquerade as tracer
+    # overhead.  Min-per-mode over interleaved rounds isolates the real cost.
+    run_pipeline(trace, **kw)  # warm-up (imports, allocator growth)
+    times: dict[str, list[float]] = {mode: [] for mode in TELEMETRY_MODES}
+    best_tracer = None
+    for _ in range(repeats):
+        for mode in TELEMETRY_MODES:
+            tracer = Tracer() if mode != "off" else None
+            t0 = time.perf_counter()
+            res = run_pipeline(
+                trace, tracer=tracer, int_telemetry=mode == "int", **kw
+            )
+            dt = time.perf_counter() - t0
+            if mode == "traced" and dt <= min(times[mode], default=np.inf):
+                best_tracer = tracer
+            times[mode].append(dt)
+            np.testing.assert_array_equal(res.output, expected)
+    rows = []
+    by_mode: dict[str, float] = {}
+    per_hop: list[dict] = []
+    for mode in TELEMETRY_MODES:
+        secs = float(np.min(times[mode]))
+        by_mode[mode] = secs
+        rows.append(
+            {"mode": mode, "pipeline_seconds": secs, "keys_per_sec": n / secs}
+        )
+    for sp in best_tracer.find(cat="hop"):
+        per_hop.append(
+            {
+                "hop": sp.name.removeprefix("hop:"),
+                "seconds": float(sp.seconds),
+                "keys_in": int(sp.args.get("keys", 0)),
+                "keys_out": int(sp.args.get("keys_out", 0)),
+            }
+        )
+    return {
+        "config": cfg,
+        "rows": rows,
+        "per_hop": per_hop,
+        "overhead_traced_vs_off": by_mode["traced"] / by_mode["off"],
+        "overhead_int_vs_off": by_mode["int"] / by_mode["off"],
+    }
+
+
 def _best(fn, repeats: int):
     """Min-time over repeats (noise-robust) + the last result."""
     times, out = [], None
@@ -333,6 +420,16 @@ def main() -> None:
         "--server-repeats", type=int, default=3,
         help="repeats for the server-throughput sweep (min-time wins; the "
         "first arena repeat pays the jit compiles, so >= 2 to measure warm)",
+    )
+    ap.add_argument(
+        "--telemetry-n", type=int, default=1_000_000,
+        help="trace size for the telemetry-overhead sweep (>= 1M keys; "
+        "not reduced by --quick — the overhead gate needs real work to "
+        "amortize against)",
+    )
+    ap.add_argument(
+        "--telemetry-repeats", type=int, default=3,
+        help="repeats for the telemetry-overhead sweep (min-time wins)",
     )
     ap.add_argument(
         "--seed", type=int, default=0,
@@ -496,6 +593,23 @@ def main() -> None:
         flush=True,
     )
 
+    telemetry = telemetry_overhead(
+        args.telemetry_n, args.telemetry_repeats, seed=args.seed
+    )
+    for r in telemetry["rows"]:
+        emit(
+            f"telemetry_{r['mode']}_{telemetry['config']['trace']}",
+            r["pipeline_seconds"] * 1e6,
+            f"keys_per_sec={r['keys_per_sec']:.0f};"
+            f"n={telemetry['config']['n']}",
+        )
+    print(
+        f"# telemetry overhead traced vs off: "
+        f"{telemetry['overhead_traced_vs_off']:.3f}x "
+        f"(int: {telemetry['overhead_int_vs_off']:.3f}x)",
+        flush=True,
+    )
+
     if args.out:
         config = {
             "n": n,
@@ -510,6 +624,7 @@ def main() -> None:
         write_net_bench(
             args.out, config, rows, hop_throughput=hop,
             server_scaling=scaling, server_throughput=server,
+            telemetry=telemetry,
         )
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 

@@ -7,8 +7,10 @@ Two artifact kinds, detected by shape:
 * ``BENCH_net.json`` (a dict with ``bench: "net"``) → the dataplane matrix
   (reduction per topology × trace × range-mode) plus the per-engine
   hop-throughput microbench (keys/sec, fused vs per-segment speedup), the
-  egress server-pool scaling sweep (makespan per pool size), and the
-  server merge-backend sweep (numpy ladder vs run-arena keys/sec).
+  egress server-pool scaling sweep (makespan per pool size), the server
+  merge-backend sweep (numpy ladder vs run-arena keys/sec), and the
+  telemetry-overhead sweep (null tracer vs recording tracer vs INT
+  columns, with the traced run's per-hop time/keys breakdown).
 
     PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
     PYTHONPATH=src:. python -m benchmarks.report BENCH_net.json
@@ -184,6 +186,39 @@ def render_net(doc: dict) -> str:
         f"\nserver merge speedup arena vs numpy: "
         f"{tp['speedup_arena_vs_numpy']:.2f}x"
     )
+    tel = doc["telemetry"]
+    ec = tel["config"]
+    out += [
+        "",
+        f"## telemetry overhead ({ec['trace']} trace, n={ec['n']}, "
+        f"{ec['segments']}x{ec['length']} switch, {ec['range_mode']} ranges)",
+        "",
+        "| mode | pipeline s | keys/sec |",
+        "|---|---|---|",
+    ]
+    for r in tel["rows"]:
+        out.append(
+            f"| {r['mode']} | {r['pipeline_seconds']:.3f} "
+            f"| {r['keys_per_sec']:,.0f} |"
+        )
+    out.append(
+        f"\ntracer overhead: traced {tel['overhead_traced_vs_off']:.3f}x, "
+        f"int {tel['overhead_int_vs_off']:.3f}x vs off"
+    )
+    total = sum(r["seconds"] for r in tel["per_hop"]) or 1.0
+    out += [
+        "",
+        "### per-hop breakdown (traced run)",
+        "",
+        "| hop | seconds | share | keys in | keys out |",
+        "|---|---|---|---|---|",
+    ]
+    for r in tel["per_hop"]:
+        out.append(
+            f"| {r['hop']} | {r['seconds']:.4f} "
+            f"| {100 * r['seconds'] / total:.1f}% "
+            f"| {r['keys_in']:,} | {r['keys_out']:,} |"
+        )
     return "\n".join(out)
 
 

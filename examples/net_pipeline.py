@@ -7,7 +7,7 @@ packet arrival and never holds the unsorted stream in memory.
     python examples/net_pipeline.py [--n 400000] [--trace drifting]
         [--topology single|leaf_spine|tree] [--interleave bursty]
         [--jitter 8] [--ranges static|oracle|sampled] [--servers 4]
-        [--merge-backend numpy|arena]
+        [--merge-backend numpy|arena] [--trace-out out.json] [--metrics]
 
 ``--servers S`` shards the egress across a segment-affinity pool of S
 independent streaming servers (the paper's "sort each range separately and
@@ -16,9 +16,18 @@ printed per server.  ``--merge-backend arena`` swaps every server's eager
 numpy merge ladder for the device-resident run-arena tournament (same
 output and pass counts, different wall-clock — sweep both to see the
 ``server_throughput`` bench section live).
+
+``--trace-out out.json`` records the run with a :class:`repro.obs.Tracer`
+and writes a Chrome-trace-event JSON — open it at https://ui.perfetto.dev
+to see the hop/stage/server span timeline.  ``--metrics`` prints the
+metrics-registry snapshot (per-hop key counters, run-length histograms,
+reorder-depth series); ``--int`` stamps in-band per-hop metadata columns
+onto the wire and prints their per-hop summary at egress.  All three are
+byte-transparent: the sorted output is identical with or without them.
 """
 
 import argparse
+import json
 
 import numpy as np
 
@@ -31,6 +40,7 @@ from repro.net import (
     plain_stream_sort,
     run_pipeline,
 )
+from repro.obs import MetricsRegistry, Tracer
 
 WORKLOADS = {**TRACES, **SCENARIOS}
 
@@ -62,6 +72,15 @@ def main() -> None:
                     help="run-merge engine per server: the eager numpy "
                     "ladder or the device-resident run-arena tournament "
                     "(byte-identical output, different wall-clock)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record the run with a tracer and write a "
+                    "Chrome-trace-event JSON (view at ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="collect and print the metrics-registry snapshot")
+    ap.add_argument("--int", dest="int_telemetry", action="store_true",
+                    help="stamp in-band per-hop metadata columns (hop id, "
+                    "queue depth, rank ticks) onto the wire and print the "
+                    "per-hop summary observed at egress")
     args = ap.parse_args()
 
     if args.merge_backend == "arena":
@@ -87,6 +106,8 @@ def main() -> None:
     np.testing.assert_array_equal(out, np.sort(trace))
     print(f"no switch: server {t_plain:.3f}s, {passes[0]} merge passes")
 
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics else None
     res = run_pipeline(
         trace,
         topology=args.topology,
@@ -101,6 +122,9 @@ def main() -> None:
         range_mode=args.ranges,
         num_servers=args.servers,
         merge_backend=args.merge_backend,
+        tracer=tracer,
+        metrics=metrics,
+        int_telemetry=args.int_telemetry,
         verify=True,
         **topo_kw,
     )
@@ -133,6 +157,27 @@ def main() -> None:
             f"{st.recirculations} recirculation passes"
         )
     print(f"reorder buffer high-water mark: {res.max_reorder_depth} packets")
+    if args.int_telemetry and res.telemetry and res.telemetry.get("int"):
+        print("in-band telemetry (per hop, observed at egress):")
+        for row in res.telemetry["int"]:
+            print(
+                f"  depth {row['depth']} hop {row['hop_id']}: "
+                f"{row['keys']:>8} keys, queue depth "
+                f"mean {row['mean_queue_depth']:.1f} / "
+                f"max {row['max_queue_depth']}, rank ticks "
+                f"mean {row['mean_rank_ticks']:.1f}"
+            )
+    if args.metrics:
+        print("metrics snapshot:")
+        print(json.dumps(res.telemetry and {
+            k: v for k, v in res.telemetry.items() if k != "int"
+        }, indent=2, sort_keys=True))
+    if tracer is not None:
+        tracer.dump(args.trace_out)
+        print(
+            f"wrote {args.trace_out} ({len(tracer.spans)} spans, "
+            f"{len(tracer.instants)} instants) — open at ui.perfetto.dev"
+        )
     print("output == np.sort(input) ✓")
 
 

@@ -39,6 +39,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from .partition import segment_of, set_ranges
 
 # Padding key for the ragged tail rows of the fused block matrix; sorts to
@@ -190,6 +192,7 @@ def marathon_emission(
     max_value: int,
     ranges: np.ndarray | None = None,
     row_sort=None,
+    tracer=None,
 ) -> MarathonEmission:
     """One fused, loop-free pass of the whole switch over ``values``.
 
@@ -199,36 +202,47 @@ def marathon_emission(
     reconstruct the emission interleave: arrival with per-segment rank
     ``r >= L`` emits element ``r - L`` of its segment's stream, then the
     flush appends each segment's last ``min(n_s, L)`` stream elements.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`) records the four stages
+    as ``route``/``rank``/``sort``/``emit`` spans (cat="stage").
     """
+    tr = tracer or NULL_TRACER
     values = np.asarray(values, dtype=np.int64)
     if ranges is None:
         ranges = set_ranges(max_value, num_segments)
     if row_sort is None:
         row_sort = default_row_sort
     L = segment_length
-    seg = segment_of(values, ranges)
-    order, counts, starts, ranks = rank_within_segment(seg, num_segments)
+    with tr.span("route", cat="stage"):
+        seg = segment_of(values, ranges)
+    with tr.span("rank", cat="stage"):
+        order, counts, starts, ranks = rank_within_segment(seg, num_segments)
 
-    mat, row_len = block_matrix(values[order], counts, L)
-    streams = row_sort(mat, row_len)[
-        np.arange(L)[None, :] < row_len[:, None]
-    ] if mat.size else np.zeros(0, dtype=np.int64)
+    with tr.span("sort", cat="stage") as sp:
+        mat, row_len = block_matrix(values[order], counts, L)
+        sp.set(blocks=int(mat.shape[0]), block_len=L)
+        streams = row_sort(mat, row_len)[
+            np.arange(L)[None, :] < row_len[:, None]
+        ] if mat.size else np.zeros(0, dtype=np.int64)
 
-    # Per-arrival emissions, in arrival order: arrival with rank r >= L
-    # emits its segment's stream element r - L.
-    emit_mask = ranks >= L
-    emit_slot = (starts[seg] + ranks - L)[emit_mask]
-    # Flush: segment by segment, the stream tail not yet emitted (at most
-    # L elements per segment — the flush arrays stay tiny).
-    n_emitted = np.maximum(counts - L, 0)
-    tail_len = counts - n_emitted  # = min(counts, L)
-    flush_sids = np.repeat(np.arange(num_segments, dtype=np.int64), tail_len)
-    tail_starts = np.concatenate([[0], np.cumsum(tail_len)[:-1]])
-    tail_off = (
-        np.arange(int(tail_len.sum()), dtype=np.int64)
-        - np.repeat(tail_starts, tail_len)
-    )
-    flush_slot = starts[flush_sids] + n_emitted[flush_sids] + tail_off
+    with tr.span("emit", cat="stage"):
+        # Per-arrival emissions, in arrival order: arrival with rank r >= L
+        # emits its segment's stream element r - L.
+        emit_mask = ranks >= L
+        emit_slot = (starts[seg] + ranks - L)[emit_mask]
+        # Flush: segment by segment, the stream tail not yet emitted (at most
+        # L elements per segment — the flush arrays stay tiny).
+        n_emitted = np.maximum(counts - L, 0)
+        tail_len = counts - n_emitted  # = min(counts, L)
+        flush_sids = np.repeat(
+            np.arange(num_segments, dtype=np.int64), tail_len
+        )
+        tail_starts = np.concatenate([[0], np.cumsum(tail_len)[:-1]])
+        tail_off = (
+            np.arange(int(tail_len.sum()), dtype=np.int64)
+            - np.repeat(tail_starts, tail_len)
+        )
+        flush_slot = starts[flush_sids] + n_emitted[flush_sids] + tail_off
     return MarathonEmission(
         streams=streams,
         slots=np.concatenate([emit_slot, flush_slot]),

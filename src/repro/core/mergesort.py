@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from .runs import run_starts
 
 
@@ -108,6 +110,8 @@ def merge_runs_flat(
     *,
     min_device_keys: int = MIN_DEVICE_KEYS,
     interpret: bool | None = None,
+    tracer=None,
+    tid: int = 0,
 ) -> np.ndarray:
     """Merge the sorted runs ``buf[starts[i]:starts[i]+lengths[i]]`` — the
     run-arena layout — into one sorted int64 array, on device.
@@ -123,7 +127,11 @@ def merge_runs_flat(
     cannot represent falls back to the numpy ladder (:func:`merge_runs` of
     :func:`merge_two`): key ranges that do not fit the int32/uint16 pad
     sentinels, or totals too small to amortize a dispatch.
+
+    ``tracer`` records one ``tournament:b<B>`` span per length bucket and a
+    ``winners`` span for the final host merge (cat="server", lane ``tid``).
     """
+    tr = tracer or NULL_TRACER
     starts = np.asarray(starts, dtype=np.int64)
     lengths = np.asarray(lengths, dtype=np.int64)
     keep = lengths > 0
@@ -158,17 +166,23 @@ def merge_runs_flat(
             i = int(np.nonzero(sel)[0][0])
             winners.append(buf[starts[i] : starts[i] + lengths[i]])
             continue
-        rows = max(2, _next_pow2(P))
-        sl = lengths[sel]
-        mat = np.full((rows, int(B)), pad, dtype)
-        mat.flat[_ragged_gather(np.arange(P) * int(B), sl)] = buf[
-            _ragged_gather(starts[sel], sl)
-        ]
-        merged = np.asarray(ops.merge_tournament(mat, interpret=interpret))
-        winners.append(merged[: int(sl.sum())])
+        with tr.span(
+            f"tournament:b{int(B)}", cat="server", tid=tid, runs=P
+        ):
+            rows = max(2, _next_pow2(P))
+            sl = lengths[sel]
+            mat = np.full((rows, int(B)), pad, dtype)
+            mat.flat[_ragged_gather(np.arange(P) * int(B), sl)] = buf[
+                _ragged_gather(starts[sel], sl)
+            ]
+            merged = np.asarray(
+                ops.merge_tournament(mat, interpret=interpret)
+            )
+            winners.append(merged[: int(sl.sum())])
     if len(winners) == 1:
         return winners[0].astype(np.int64)
-    return np.asarray(merge_runs(winners), dtype=np.int64)
+    with tr.span("winners", cat="server", tid=tid, runs=len(winners)):
+        return np.asarray(merge_runs(winners), dtype=np.int64)
 
 
 def merge_runs_batched(
@@ -176,6 +190,8 @@ def merge_runs_batched(
     *,
     min_device_keys: int = MIN_DEVICE_KEYS,
     interpret: bool | None = None,
+    tracer=None,
+    tid: int = 0,
 ) -> np.ndarray:
     """Device twin of :func:`merge_runs` for a list of sorted arrays.
 
@@ -196,6 +212,8 @@ def merge_runs_batched(
         lengths,
         min_device_keys=min_device_keys,
         interpret=interpret,
+        tracer=tracer,
+        tid=tid,
     )
 
 

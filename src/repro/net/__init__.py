@@ -14,6 +14,11 @@ its k-way merge with arrival, ingesting batches directly (:mod:`server`) —
 or a segment-affinity pool of them (:mod:`egress` — each server sorts only
 its range shard; a distributed merge concatenates the shard outputs).
 :mod:`pipeline` wires it end to end.
+
+Every layer is instrumentable through :mod:`repro.obs` — pass
+``tracer=``/``metrics=`` (and ``int_telemetry=True`` for in-band per-hop
+metadata columns) to :func:`~repro.net.pipeline.run_pipeline`; the default
+is the zero-overhead null path and the output is byte-identical either way.
 """
 
 from .control import (

@@ -36,6 +36,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from ..core.partition import load_imbalance, quantile_ranges, set_ranges
 
 #: The range modes ``run_pipeline``/``net_bench`` sweep.
@@ -157,6 +159,8 @@ class AdaptiveControlPlane:
         rebalance_factor: float = 2.0,
         max_epochs: int = 4,
         seed: int = 0,
+        tracer=None,
+        metrics=None,
     ) -> None:
         if num_segments <= 0:
             raise ValueError("num_segments must be positive")
@@ -174,6 +178,8 @@ class AdaptiveControlPlane:
         self.rebalance_factor = rebalance_factor
         self.max_epochs = max_epochs
         self.reservoir = ReservoirSampler(sample_capacity, seed)
+        self._tr = tracer or NULL_TRACER
+        self._metrics = metrics
         self.installed: np.ndarray | None = None
         self.epoch = 0  # number of installed range-sets
         self._since_check = 0
@@ -218,6 +224,12 @@ class AdaptiveControlPlane:
         self.epoch += 1
         self._since_check = 0
         self._pending = None
+        self._tr.instant(
+            "control:install", cat="control",
+            epoch=self.epoch, keys_seen=self.reservoir.seen,
+        )
+        if self._metrics is not None:
+            self._metrics.counter("control_installs").inc()
 
     def observe(self, payload: np.ndarray) -> bool:
         """Feed one payload; return ``True`` when the epoch should close."""
@@ -230,7 +242,10 @@ class AdaptiveControlPlane:
         if self.epoch >= self.max_epochs:
             return False
         if self.epoch == 1:  # bootstrap epoch: hand off after the warmup
-            return self.reservoir.seen >= self.warmup
+            if self.reservoir.seen >= self.warmup:
+                self._handoff("warmup")
+                return True
+            return False
         if self._since_check < self.check_every:
             return False
         self._since_check = 0
@@ -242,8 +257,18 @@ class AdaptiveControlPlane:
         best = load_imbalance(recent, proposed)
         if cur > self.rebalance_factor * max(best, 1.0):
             self._pending = proposed  # propose() reuses the scored ranges
+            self._handoff("drift", imbalance=cur, achievable=best)
             return True
         return False
+
+    def _handoff(self, kind: str, **args) -> None:
+        """Record an epoch-close decision (warmup or drift) as telemetry."""
+        self._tr.instant(
+            f"control:handoff:{kind}", cat="control",
+            epoch=self.epoch, keys_seen=self.reservoir.seen, **args,
+        )
+        if self._metrics is not None:
+            self._metrics.counter(f"control_{kind}_handoffs").inc()
 
     def propose(self) -> np.ndarray:
         """Ranges for the next epoch (does not install them)."""

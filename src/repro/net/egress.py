@@ -36,9 +36,9 @@ routing and is charged to neither side.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
+
+from repro.obs.trace import NULL_TRACER
 
 from ..core.distributed import pool_concat
 from .server import StreamingServer
@@ -99,6 +99,8 @@ class ServerPool:
         affinity: np.ndarray | None = None,
         merge_backend: str = "numpy",
         pool_backend: str = "numpy",
+        tracer=None,
+        metrics=None,
     ) -> None:
         if num_epochs < 1:
             raise ValueError("num_epochs must be >= 1")
@@ -143,6 +145,10 @@ class ServerPool:
         for s in range(num_servers):
             local[self._affinity == s] = np.arange(counts[s])
         self._local_of = local
+        self._tr = tracer or NULL_TRACER
+        self._metrics = metrics
+        # Each member server traces on its own lane (Chrome tid 1+s) so the
+        # pool's simulated-parallel drain renders as parallel tracks.
         self.servers = [
             StreamingServer(
                 int(counts[s]) if counts[s] else 1,  # idle server: 1 port
@@ -150,6 +156,10 @@ class ServerPool:
                 reorder_capacity=reorder_capacity,
                 final_merge=num_epochs > 1,
                 merge_backend=merge_backend,
+                tracer=tracer,
+                metrics=metrics,
+                name=f"server{s}",
+                lane=1 + s,
             )
             for s in range(num_servers)
         ]
@@ -173,9 +183,9 @@ class ServerPool:
             bad = int(sids.min()) if sids.min() < 0 else int(sids.max())
             raise ValueError(f"packet with invalid segment id {bad}")
         if self.num_servers == 1:
-            t0 = time.perf_counter()
-            self.servers[0].ingest_batch(batch)
-            self.per_server_seconds[0] += time.perf_counter() - t0
+            with self._tr.timed("server0:wall", cat="egress", tid=1) as t:
+                self.servers[0].ingest_batch(batch)
+            self.per_server_seconds[0] += t.seconds
             return
         srv = self._affinity[sids]
         for s in range(self.num_servers):
@@ -189,10 +199,13 @@ class ServerPool:
                 sub.seq,
                 self._local_of[sub.segment_id],
                 epoch=sub.epoch,
+                int_meta=sub.int_meta,
             )
-            t0 = time.perf_counter()
-            self.servers[s].ingest_batch(sub)
-            self.per_server_seconds[s] += time.perf_counter() - t0
+            with self._tr.timed(
+                f"server{s}:wall", cat="egress", tid=1 + s
+            ) as t:
+                self.servers[s].ingest_batch(sub)
+            self.per_server_seconds[s] += t.seconds
 
     # -- completion -----------------------------------------------------
     def finish(self) -> tuple[np.ndarray, list[int]]:
@@ -206,29 +219,37 @@ class ServerPool:
         outs: list[np.ndarray] = []
         per_server_passes: list[list[int]] = []
         for s, server in enumerate(self.servers):
-            t0 = time.perf_counter()
-            out, passes = server.finish()
-            self.per_server_seconds[s] += time.perf_counter() - t0
+            with self._tr.timed(
+                f"server{s}:wall", cat="egress", tid=1 + s
+            ) as t:
+                out, passes = server.finish()
+            self.per_server_seconds[s] += t.seconds
             outs.append(out)
             per_server_passes.append(passes)
         passes = [
             per_server_passes[int(self._affinity[v])][int(self._local_of[v])]
             for v in range(self.eff_segments)
         ]
-        t0 = time.perf_counter()
-        output = pool_concat(
-            outs,
-            disjoint=self.num_epochs == 1,
-            backend=self.pool_backend,
-        )
-        self.merge_seconds = time.perf_counter() - t0
+        with self._tr.timed(
+            "pool:merge", cat="egress", servers=self.num_servers
+        ) as t:
+            output = pool_concat(
+                outs,
+                disjoint=self.num_epochs == 1,
+                backend=self.pool_backend,
+            )
+        self.merge_seconds = t.seconds
+        if self._metrics is not None:
+            self._metrics.gauge("pool_server_keys").set(self.server_keys)
+            self._metrics.gauge("pool_imbalance").set(self.server_imbalance)
         return output, passes
 
     # -- observability --------------------------------------------------
     @property
     def max_reorder_depth(self) -> int:
-        """Worst reorder-buffer occupancy across the pool."""
-        return max(s.max_reorder_depth for s in self.servers)
+        """Worst reorder-buffer occupancy across the pool (0 when the pool
+        is degenerate — no servers constructed yet)."""
+        return max((s.max_reorder_depth for s in self.servers), default=0)
 
     @property
     def server_keys(self) -> list[int]:
@@ -237,14 +258,16 @@ class ServerPool:
 
     @property
     def server_imbalance(self) -> float:
-        """Peak-over-mean per-server key load; 1.0 is a perfect shard."""
+        """Peak-over-mean per-server key load; 1.0 is a perfect shard
+        (also reported for an empty or degenerate pool)."""
         keys = self.server_keys
         total = sum(keys)
-        if total == 0:
+        if total == 0 or not self.num_servers:
             return 1.0
         return max(keys) / (total / self.num_servers)
 
     @property
     def makespan_seconds(self) -> float:
-        """The pool's wall-clock: slowest server + distributed merge."""
-        return max(self.per_server_seconds) + self.merge_seconds
+        """The pool's wall-clock: slowest server + distributed merge
+        (just the merge for a degenerate pool with no servers)."""
+        return max(self.per_server_seconds, default=0.0) + self.merge_seconds

@@ -32,6 +32,9 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.telemetry import IntColumns
+from repro.obs.trace import NULL_TRACER
+
 from ..core.marathon import (
     MarathonEmission,
     blockwise_sort,
@@ -81,6 +84,13 @@ class HopStats:
     emitted_runs: int  # total maximal runs across emitted sub-streams
     mean_run_len: float
     recirculations: int  # emitting flush passes (≤ 2 per segment, Alg. 3)
+    # Full run-length distribution (per-segment maximal ascending runs),
+    # when the engine grouped the stream anyway; None for engines that
+    # only count.  compare=False: ndarray __eq__, and engines that agree
+    # on every scalar stat must still compare equal.
+    emitted_run_lengths: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     @classmethod
     def collect(
@@ -121,7 +131,14 @@ class HopStats:
         # A run break is a descent *within* a segment's emitted stream.
         seg_of_pos = np.repeat(np.arange(counts.size), counts)
         desc = (grouped[1:] < grouped[:-1]) & (seg_of_pos[1:] == seg_of_pos[:-1])
-        runs = int((counts > 0).sum()) + int(desc.sum())
+        if total:
+            brk = np.empty(total, dtype=bool)
+            brk[0] = True
+            brk[1:] = desc | (seg_of_pos[1:] != seg_of_pos[:-1])
+            run_lens = np.diff(np.flatnonzero(brk), append=total)
+        else:
+            run_lens = np.zeros(0, dtype=np.int64)
+        runs = int(run_lens.size)
         # Flush passes that emit values: one for a partially-filled segment
         # (single young run), two for a full one — unless the younger run is
         # empty (arrivals a multiple of L).
@@ -141,6 +158,7 @@ class HopStats:
             emitted_runs=runs,
             mean_run_len=(total / runs) if runs else 0.0,
             recirculations=recirc,
+            emitted_run_lengths=run_lens,
         )
 
 
@@ -192,7 +210,7 @@ def _wire_from_grouped(
     counts: np.ndarray,
     payload_size: int,
     epoch: int,
-) -> WireBatch:
+) -> tuple[WireBatch, np.ndarray]:
     """Ship-order packetization over the segment-grouped emitted stream.
 
     ``grouped`` holds each segment's emitted keys contiguously in emission
@@ -204,6 +222,10 @@ def _wire_from_grouped(
     ``grouped`` — only the (few thousand) packets are sorted by their
     (unique) ship index; the (possibly millions of) keys move in one ragged
     gather.  O(n + packets·log packets).
+
+    Returns ``(batch, idx)`` where ``idx[j]`` is the position in ``grouped``
+    of the key on wire row ``j`` — the provenance the INT telemetry stamp
+    needs to follow keys through the hop.
     """
     n = int(grouped.size)
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
@@ -217,13 +239,14 @@ def _wire_from_grouped(
     porder = np.argsort(ship)
     sz = pkt_sz[porder]
     idx = ragged_gather((starts[pkt_sid] + pkt_off)[porder], sz)
-    return WireBatch(
+    batch = WireBatch(
         grouped[idx],
         np.zeros(n, dtype=np.int64),
         np.repeat(pkt_j[porder], sz),
         np.repeat(pkt_sid[porder], sz),
         epoch=epoch,
     )
+    return batch, idx
 
 
 def emission_to_wire(
@@ -244,9 +267,10 @@ def emission_to_wire(
         return empty_batch(epoch)
     counts = np.bincount(sids, minlength=num_segments)
     eidx = np.argsort(sids * n + np.arange(n, dtype=np.int64))
-    return _wire_from_grouped(
+    batch, _ = _wire_from_grouped(
         values[eidx], eidx, counts, payload_size, epoch
     )
+    return batch
 
 
 # ---------------------------------------------------------------------------
@@ -255,10 +279,27 @@ def emission_to_wire(
 
 
 def fused_hop(
-    batch: WireBatch, spec: HopSpec, name: str
+    batch: WireBatch,
+    spec: HopSpec,
+    name: str,
+    *,
+    tracer=None,
+    hop_id: int = 0,
+    int_telemetry: bool = False,
 ) -> tuple[WireBatch, HopStats]:
     """The batched engine: route → rank → block-sort → emit → packetize,
-    every stage over all segments at once."""
+    every stage over all segments at once.
+
+    With ``int_telemetry`` (or an arrival batch already carrying telemetry)
+    the hop stamps INT columns onto the output: for every emitted key, this
+    hop's id, the count of its segment-mates still resident at emission
+    (register occupancy, capped at the 2·L pipeline size), and its
+    insertion rank within its segment.  The stamp follows the *exact*
+    provenance of each output row — the fused pass's grouping permutation
+    composed with the reconstructed within-block sort permutation and the
+    packetization gather — so telemetry rows never detach from their keys.
+    """
+    tr = tracer or NULL_TRACER
     em: MarathonEmission = marathon_emission(
         batch.values,
         spec.num_segments,
@@ -266,26 +307,86 @@ def fused_hop(
         spec.max_value,
         ranges=spec.ranges,
         row_sort=ROW_SORTERS[spec.backend],
+        tracer=tracer,
     )
     # The emitted stream grouped by segment IS the blockwise stream array —
     # stats come straight off the fused pass's internals.
-    stats = HopStats._from_grouped(
-        name, em.streams, em.counts, spec.segment_length
-    )
+    with tr.span("stats", cat="stage"):
+        stats = HopStats._from_grouped(
+            name, em.streams, em.counts, spec.segment_length
+        )
     if len(batch) == 0:
-        return empty_batch(batch.epoch), stats
+        out = empty_batch(batch.epoch)
+        if int_telemetry or batch.int_meta is not None:
+            depth = 0 if batch.int_meta is None else batch.int_meta.depth
+            out = out.with_int_meta(IntColumns.empty(0, depth + 1))
+        return out, stats
     # One scatter recovers the slot → emission-index map from the fused
     # pass; the wire is then packet slices of the stream array.
-    eidx = np.empty(len(batch), dtype=np.int64)
-    eidx[em.slots] = np.arange(len(batch), dtype=np.int64)
-    out = _wire_from_grouped(
-        em.streams, eidx, em.counts, spec.payload_size, batch.epoch
-    )
+    with tr.span("packetize", cat="stage"):
+        eidx = np.empty(len(batch), dtype=np.int64)
+        eidx[em.slots] = np.arange(len(batch), dtype=np.int64)
+        out, idx = _wire_from_grouped(
+            em.streams, eidx, em.counts, spec.payload_size, batch.epoch
+        )
+    if int_telemetry or batch.int_meta is not None:
+        with tr.span("int_stamp", cat="stage"):
+            out = _stamp_int(batch, em, out, idx, spec, hop_id)
     return out, stats
 
 
+def _stamp_int(
+    batch: WireBatch,
+    em: MarathonEmission,
+    out: WireBatch,
+    idx: np.ndarray,
+    spec: HopSpec,
+    hop_id: int,
+) -> WireBatch:
+    """Append this hop's INT column, carrying the arrival stack forward."""
+    counts, starts, L = em.counts, em.starts, spec.segment_length
+    n = len(batch)
+    seg_of_pos = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+    pos = np.arange(n, dtype=np.int64) - starts[seg_of_pos]
+    # Within-block sort permutation, reconstructed exactly: sorting grouped
+    # positions by (segment, block, key value, arrival position) redoes the
+    # stable per-block value sort, so src maps sorted grouped position →
+    # arrival grouped position, i.e. em.streams == batch.values[em.order][src].
+    src = np.lexsort(
+        (pos, batch.values[em.order], pos // L, seg_of_pos)
+    )
+    in_rows = em.order[src[idx]]  # output wire row j ← input batch row
+    sid_out = seg_of_pos[idx]
+    # Register occupancy when each key left: its segment's keys not yet
+    # emitted at that point, capped at the 2·L pipeline capacity.
+    queue_depth = np.minimum(counts[sid_out] - (idx - starts[sid_out]), 2 * L)
+    prev = batch.int_meta
+    if prev is None:
+        prev = IntColumns.empty(n)
+    stack = prev.take(in_rows).stamp(
+        hop_id, queue_depth, em.ranks[in_rows]
+    )
+    return out.with_int_meta(stack)
+
+
+def _reject_int(batch: WireBatch, int_telemetry: bool, engine: str) -> None:
+    """Baseline engines have no emission provenance to stamp with."""
+    if int_telemetry or batch.int_meta is not None:
+        raise ValueError(
+            f"engine {engine!r} does not support INT telemetry — only the "
+            "'fused' engine exposes the exact emission permutation the "
+            "stamp needs"
+        )
+
+
 def segment_hop(
-    batch: WireBatch, spec: HopSpec, name: str
+    batch: WireBatch,
+    spec: HopSpec,
+    name: str,
+    *,
+    tracer=None,
+    hop_id: int = 0,
+    int_telemetry: bool = False,
 ) -> tuple[WireBatch, HopStats]:
     """The pre-fusion dataplane, preserved verbatim as the baseline.
 
@@ -300,6 +401,8 @@ def segment_hop(
     from ..core.marathon import _marathon_flat_persegment
     from ..core.runs import run_lengths
 
+    _reject_int(batch, int_telemetry, "segment")
+    del tracer, hop_id  # baseline engine: no stage spans, no stamping
     packets = batch.to_packets()
     stream = (
         np.concatenate([p.payload for p in packets])
@@ -368,9 +471,17 @@ def segment_hop(
 
 
 def faithful_hop(
-    batch: WireBatch, spec: HopSpec, name: str
+    batch: WireBatch,
+    spec: HopSpec,
+    name: str,
+    *,
+    tracer=None,
+    hop_id: int = 0,
+    int_telemetry: bool = False,
 ) -> tuple[WireBatch, HopStats]:
     """Element-at-a-time Alg. 3 reference (``core.switchsim.Switch``)."""
+    _reject_int(batch, int_telemetry, "faithful")
+    del tracer, hop_id  # reference engine: no stage spans, no stamping
     sw = Switch(
         spec.num_segments,
         spec.segment_length,
@@ -424,13 +535,28 @@ HOP_ENGINES = {
 
 
 def run_hop(
-    batch: WireBatch, spec: HopSpec, name: str, engine: str = "fused"
+    batch: WireBatch,
+    spec: HopSpec,
+    name: str,
+    engine: str = "fused",
+    *,
+    tracer=None,
+    hop_id: int = 0,
+    int_telemetry: bool = False,
 ) -> tuple[WireBatch, HopStats]:
-    """Dispatch one hop through the named engine."""
+    """Dispatch one hop through the named engine.
+
+    ``tracer`` records the hop's internal stage spans (fused engine);
+    ``hop_id``/``int_telemetry`` control the INT stamp (fused only — the
+    baseline engines raise rather than silently dropping provenance).
+    """
     try:
         fn = HOP_ENGINES[engine]
     except KeyError:
         raise ValueError(
             f"unknown hop engine {engine!r}; options: {sorted(HOP_ENGINES)}"
         ) from None
-    return fn(batch, spec, name)
+    return fn(
+        batch, spec, name,
+        tracer=tracer, hop_id=hop_id, int_telemetry=int_telemetry,
+    )

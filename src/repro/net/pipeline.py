@@ -42,9 +42,12 @@ per-(epoch, segment) delivered multisets equal the single-switch reference.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.telemetry import int_summary
+from repro.obs.trace import NULL_TRACER
 
 from ..core.partition import quantile_ranges, set_ranges
 from .control import RANGE_MODES, AdaptiveControlPlane, ControlPlane
@@ -83,6 +86,9 @@ class PipelineResult:
     pool_merge_seconds: float = 0.0
     server_keys: list[int] = dataclasses.field(default_factory=list)
     server_imbalance: float = 1.0  # peak-over-mean per-server key load
+    # Metrics snapshot (+ INT column summary) when the run was observed;
+    # None on an uninstrumented run — never part of output equality.
+    telemetry: dict | None = None
 
 
 def jitter_delivery(
@@ -142,6 +148,9 @@ def run_pipeline(
     merge_backend: str = "numpy",
     pool_backend: str = "numpy",
     verify: bool = False,
+    tracer=None,
+    metrics=None,
+    int_telemetry: bool = False,
     **topo_kw,
 ) -> PipelineResult:
     """Drive the full storage→switch→server datapath over ``values``.
@@ -162,6 +171,17 @@ def run_pipeline(
     ``server_throughput`` bench section measures the difference);
     ``pool_backend`` picks the pool's distributed merge (``"numpy"`` or
     ``"shard_map"`` with numpy fallback).
+
+    Observability (all opt-in and output-transparent — the sorted stream,
+    passes, and epoch structure are byte-identical instrumented or not):
+    ``tracer`` (a :class:`repro.obs.Tracer`) records the full span
+    hierarchy (pipeline → epoch → hop → stages; server/egress lanes);
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) accumulates the
+    dataplane counters/gauges/histograms — when a recording tracer is given
+    without a registry, one is created so the snapshot always lands in
+    ``PipelineResult.telemetry``; ``int_telemetry=True`` stamps INT-style
+    per-hop metadata columns onto the wire (``fused`` engine only), exposed
+    on ``result.delivered.int_meta`` and summarized in the telemetry dict.
     """
     values = np.asarray(values, dtype=np.int64)
     if max_value is None:
@@ -181,80 +201,107 @@ def run_pipeline(
         )
     engine = engine or ("faithful" if faithful else "fused")
 
-    flows = split_flows(values, num_flows, payload_size)
-    arrivals = interleave_batch(flows, interleave_mode, seed=seed)
+    tr = tracer or NULL_TRACER
+    if metrics is None and tr.enabled:
+        # A recording tracer implies an observed run: build a registry so
+        # the snapshot always lands in ``PipelineResult.telemetry``.
+        metrics = MetricsRegistry()
 
-    def _run_topology(ranges: np.ndarray, batch: WireBatch):
-        topo = make_topology(
-            topology,
-            num_segments=num_segments,
-            segment_length=segment_length,
-            max_value=max_value,
-            ranges=ranges,
-            faithful=faithful,
-            backend=backend,
-            engine=engine,
-            payload_size=payload_size,
-            **topo_kw,
-        )
-        return topo.run_batch(batch)
+    with tr.span("pipeline", cat="pipeline", n=int(values.size)):
+        flows = split_flows(values, num_flows, payload_size)
+        arrivals = interleave_batch(flows, interleave_mode, seed=seed)
 
-    if range_mode == "sampled":
-        plane = adaptive or AdaptiveControlPlane(
-            num_segments, max_value, seed=seed
-        )
-        epochs = plane.split_epochs(arrivals)
-        delivered_epochs: list[WireBatch] = []
-        hop_stats: list[HopStats] = []
-        ranges_history: list[np.ndarray] = []
-        for e, (ranges_e, sub) in enumerate(epochs):
-            out, stats = _run_topology(ranges_e, sub)
-            delivered_epochs.append(out.with_epoch(e, num_segments))
-            hop_stats.extend(
-                dataclasses.replace(st, name=f"e{e}:{st.name}") for st in stats
+        def _run_topology(ranges: np.ndarray, batch: WireBatch):
+            topo = make_topology(
+                topology,
+                num_segments=num_segments,
+                segment_length=segment_length,
+                max_value=max_value,
+                ranges=ranges,
+                faithful=faithful,
+                backend=backend,
+                engine=engine,
+                payload_size=payload_size,
+                **topo_kw,
             )
-            ranges_history.append(ranges_e)
-        delivered = concat_batches(delivered_epochs)
-        eff_segments = num_segments * len(epochs)
-        # Epoch handoff re-shards the virtual ids across the pool (empty
-        # epochs were dropped, so slice the map to the ids actually on the
-        # wire — the tiling is per-epoch, so the prefix is exact).
-        affinity = plane.pool_affinity(num_servers)[:eff_segments]
-        mode_str = "sampled"
-    else:
-        if range_mode == "oracle":
-            ranges = quantile_ranges(values, num_segments, max_value)
-            mode_str = "oracle"
-        elif range_mode == "static":
-            ranges = set_ranges(max_value, num_segments)
-            mode_str = "static"
+            return topo.run_batch(
+                batch,
+                tracer=tracer,
+                metrics=metrics,
+                int_telemetry=int_telemetry,
+            )
+
+        if range_mode == "sampled":
+            plane = adaptive or AdaptiveControlPlane(
+                num_segments, max_value, seed=seed,
+                tracer=tracer, metrics=metrics,
+            )
+            with tr.span("control:split_epochs", cat="control"):
+                epochs = plane.split_epochs(arrivals)
+            delivered_epochs: list[WireBatch] = []
+            hop_stats: list[HopStats] = []
+            ranges_history: list[np.ndarray] = []
+            for e, (ranges_e, sub) in enumerate(epochs):
+                with tr.span(f"epoch:{e}", cat="pipeline", keys=len(sub)):
+                    out, stats = _run_topology(ranges_e, sub)
+                delivered_epochs.append(out.with_epoch(e, num_segments))
+                hop_stats.extend(
+                    dataclasses.replace(st, name=f"e{e}:{st.name}")
+                    for st in stats
+                )
+                ranges_history.append(ranges_e)
+            delivered = concat_batches(delivered_epochs)
+            eff_segments = num_segments * len(epochs)
+            # Epoch handoff re-shards the virtual ids across the pool (empty
+            # epochs were dropped, so slice the map to the ids actually on
+            # the wire — the tiling is per-epoch, so the prefix is exact).
+            affinity = plane.pool_affinity(num_servers)[:eff_segments]
+            mode_str = "sampled"
         else:
-            plane = control or ControlPlane()
-            ranges = plane.ranges(values, num_segments, max_value)
-            mode_str = plane.mode
-        delivered, hop_stats = _run_topology(ranges, arrivals)
-        ranges_history = [ranges]
-        eff_segments = num_segments
-        affinity = None
+            if range_mode == "oracle":
+                ranges = quantile_ranges(values, num_segments, max_value)
+                mode_str = "oracle"
+            elif range_mode == "static":
+                ranges = set_ranges(max_value, num_segments)
+                mode_str = "static"
+            else:
+                plane = control or ControlPlane()
+                ranges = plane.ranges(values, num_segments, max_value)
+                mode_str = plane.mode
+            with tr.span("epoch:0", cat="pipeline", keys=len(arrivals)):
+                delivered, hop_stats = _run_topology(ranges, arrivals)
+            ranges_history = [ranges]
+            eff_segments = num_segments
+            affinity = None
 
-    if jitter_window:
-        delivered = jitter_delivery_batch(delivered, jitter_window, seed=seed + 1)
+        if jitter_window:
+            delivered = jitter_delivery_batch(
+                delivered, jitter_window, seed=seed + 1
+            )
 
-    pool = ServerPool(
-        num_segments,
-        num_servers,
-        num_epochs=eff_segments // num_segments,
-        k=k,
-        reorder_capacity=reorder_capacity,
-        affinity=affinity,
-        merge_backend=merge_backend,
-        pool_backend=pool_backend,
-    )
-    pool.ingest_batch(delivered)
-    out, passes = pool.finish()
+        pool = ServerPool(
+            num_segments,
+            num_servers,
+            num_epochs=eff_segments // num_segments,
+            k=k,
+            reorder_capacity=reorder_capacity,
+            affinity=affinity,
+            merge_backend=merge_backend,
+            pool_backend=pool_backend,
+            tracer=tracer,
+            metrics=metrics,
+        )
+        pool.ingest_batch(delivered)
+        out, passes = pool.finish()
 
     if verify:
         np.testing.assert_array_equal(out, np.sort(values))
+
+    telemetry = None
+    if metrics is not None or delivered.int_meta is not None:
+        telemetry = metrics.snapshot() if metrics is not None else {}
+        if delivered.int_meta is not None:
+            telemetry["int"] = int_summary(delivered.int_meta)
 
     # Reorder-buffer-corrected per-segment streams, for multiset invariants.
     # (jitter permutes packets; segment_streams gives raw arrival order,
@@ -279,6 +326,7 @@ def run_pipeline(
         pool_merge_seconds=pool.merge_seconds,
         server_keys=pool.server_keys,
         server_imbalance=pool.server_imbalance,
+        telemetry=telemetry,
     )
 
 
@@ -286,14 +334,23 @@ def plain_stream_sort(
     values: np.ndarray,
     payload_size: int = DEFAULT_PAYLOAD,
     k: int = 10,
+    *,
+    tracer=None,
 ) -> tuple[np.ndarray, list[int], float]:
     """Switchless baseline: raw packets straight into the streaming server
     (one segment, no port numbers to demux by).  Returns
-    ``(sorted, passes, server_seconds)``."""
+    ``(sorted, passes, server_seconds)``.
+
+    Timing goes through the tracer's ``timed`` primitive (the repo's single
+    wall-clock source); with the default null tracer it measures without
+    recording, so the returned seconds are identical either way.
+    """
     values = np.asarray(values, dtype=np.int64)
     batch = packetize_batch(values, payload_size, segment_id=0)
-    server = StreamingServer(1, k=k)
-    t0 = time.perf_counter()
-    server.ingest_batch(batch)
-    out, passes = server.finish()
-    return out, passes, time.perf_counter() - t0
+    server = StreamingServer(1, k=k, tracer=tracer, name="baseline")
+    with (tracer or NULL_TRACER).timed(
+        "baseline:server", cat="server"
+    ) as t:
+        server.ingest_batch(batch)
+        out, passes = server.finish()
+    return out, passes, t.seconds

@@ -52,6 +52,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from ..core.mergesort import merge_runs, merge_runs_batched, merge_runs_flat
 from ..core.runs import RunArena, merge_passes, run_starts
 from .packet import Packet
@@ -71,6 +73,11 @@ class StreamingServer:
         reorder_capacity: int | None = None,
         final_merge: bool = False,
         merge_backend: str = "numpy",
+        *,
+        tracer=None,
+        metrics=None,
+        name: str = "server0",
+        lane: int = 1,
     ) -> None:
         if num_segments <= 0:
             raise ValueError("num_segments must be positive")
@@ -84,6 +91,14 @@ class StreamingServer:
         self.reorder_capacity = reorder_capacity
         self.final_merge = final_merge
         self.merge_backend = merge_backend
+        self.name = name
+        self.lane = lane  # trace lane (Chrome tid): pool servers get 1+s
+        self._tr = tracer or NULL_TRACER
+        self._metrics = metrics
+        # Run lengths buffer here as plain ints; one vectorized histogram
+        # observe at finish() keeps the per-run hot path free of registry
+        # lookups (the tracer-overhead CI gate counts on this).
+        self._run_len_buf: list[int] = []
         S = num_segments
         self._pending: list[dict[int, np.ndarray]] = [{} for _ in range(S)]
         self._next_seq = [0] * S
@@ -118,6 +133,11 @@ class StreamingServer:
         buf[seq] = payload
         depth = len(buf)
         self.max_reorder_depth = max(self.max_reorder_depth, depth)
+        if self._metrics is not None:
+            # Timeline of buffer occupancy, x = keys ingested so far.
+            self._metrics.series("reorder_depth", self.name).append(
+                self._ingested, depth
+            )
         if self.reorder_capacity is not None and depth > self.reorder_capacity:
             raise ValueError(
                 f"reorder buffer overflow on segment {sid}: {depth} packets "
@@ -141,6 +161,12 @@ class StreamingServer:
         n = len(batch)
         if n == 0:
             return
+        with self._tr.span(
+            f"{self.name}:ingest", cat="server", tid=self.lane, keys=n
+        ):
+            self._ingest_batch_body(batch, n)
+
+    def _ingest_batch_body(self, batch, n: int) -> None:
         starts = batch.packet_starts()
         bounds = np.concatenate([starts, [n]])
         sizes = np.diff(bounds)
@@ -222,6 +248,8 @@ class StreamingServer:
         self._cur[sid] = []
         self._tail[sid] = None
         self._run_count[sid] += 1
+        if self._metrics is not None:
+            self._run_len_buf.append(run.size)
         self._push_run(sid, run, 0)
 
     def _push_run(self, sid: int, run: np.ndarray, depth: int) -> None:
@@ -230,7 +258,10 @@ class StreamingServer:
             levels.append([])
         levels[depth].append(run)
         if len(levels[depth]) == self.k:
-            merged = merge_runs(levels[depth])
+            with self._tr.span(
+                f"ladder:L{depth}", cat="server", tid=self.lane, runs=self.k
+            ):
+                merged = merge_runs(levels[depth])
             levels[depth] = []
             self._push_run(sid, merged, depth + 1)
 
@@ -244,6 +275,34 @@ class StreamingServer:
                     f"segment {sid}: stream incomplete, waiting on seq "
                     f"{missing} with {len(self._pending[sid])} buffered"
                 )
+        with self._tr.span(
+            f"{self.name}:finish", cat="server", tid=self.lane
+        ):
+            out, passes = self._finish_body()
+        if self._metrics is not None:
+            if self._run_len_buf:
+                self._metrics.histogram(
+                    "server_run_length", self.name
+                ).observe_many(np.asarray(self._run_len_buf, dtype=np.int64))
+                self._run_len_buf = []
+            self._metrics.gauge("server_keys_ingested", self.name).set(
+                self._ingested
+            )
+            self._metrics.gauge("server_max_reorder_depth", self.name).set(
+                self.max_reorder_depth
+            )
+            self._metrics.gauge("server_merge_passes", self.name).set(
+                list(passes)
+            )
+            self._metrics.counter("server_runs_detected", self.name).inc(
+                sum(
+                    a.num_runs for a in self._arenas
+                ) if self._arenas is not None else sum(self._run_count)
+            )
+        return out, passes
+
+    def _finish_body(self) -> tuple[np.ndarray, list[int]]:
+        tr = self._tr
         outs: list[np.ndarray] = []
         passes: list[int] = []
         if self._arenas is not None:
@@ -251,23 +310,51 @@ class StreamingServer:
                 arena = self._arenas[sid]
                 if len(arena):
                     starts, lengths = arena.run_offsets()
-                    outs.append(merge_runs_flat(arena.keys, starts, lengths))
+                    if self._metrics is not None:
+                        self._metrics.histogram(
+                            "server_run_length", self.name
+                        ).observe_many(lengths)
+                        self._metrics.gauge(
+                            "server_arena_fill", self.name
+                        ).high_water(len(arena))
+                    with tr.span(
+                        f"merge:seg{sid}", cat="server", tid=self.lane,
+                        keys=len(arena), runs=int(lengths.size),
+                    ):
+                        outs.append(
+                            merge_runs_flat(
+                                arena.keys, starts, lengths,
+                                tracer=self._tr if tr.enabled else None,
+                                tid=self.lane,
+                            )
+                        )
                 passes.append(merge_passes(arena.num_runs, self.k))
         else:
             for sid in range(self.num_segments):
                 self._close_run(sid)
                 remaining = [r for level in self._levels[sid] for r in level]
                 if remaining:
-                    outs.append(merge_runs(remaining))
+                    with tr.span(
+                        f"merge:seg{sid}", cat="server", tid=self.lane,
+                        runs=len(remaining),
+                    ):
+                        outs.append(merge_runs(remaining))
                 passes.append(merge_passes(self._run_count[sid], self.k))
         if not outs:
             out = np.zeros(0, dtype=np.int64)
         elif self.final_merge:
-            out = (
-                merge_runs_batched(outs)
-                if self._arenas is not None
-                else merge_runs(outs)
-            )
+            with tr.span(
+                "merge:final", cat="server", tid=self.lane, runs=len(outs)
+            ):
+                out = (
+                    merge_runs_batched(
+                        outs,
+                        tracer=self._tr if tr.enabled else None,
+                        tid=self.lane,
+                    )
+                    if self._arenas is not None
+                    else merge_runs(outs)
+                )
         else:
             out = np.concatenate(outs)
         assert out.size == self._ingested

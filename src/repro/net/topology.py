@@ -43,6 +43,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from .control import ControlPlane  # noqa: F401  (re-export: pre-PR-2 home)
 from .engine import HopSpec, HopStats, run_hop
 from .packet import DEFAULT_PAYLOAD, Packet
@@ -186,6 +188,10 @@ def run_graph(
     batch: WireBatch,
     spec: HopSpec,
     engine: str = "fused",
+    *,
+    tracer=None,
+    metrics=None,
+    int_telemetry: bool = False,
 ) -> tuple[WireBatch, list[HopStats]]:
     """Execute a fabric over an arrival batch.
 
@@ -193,7 +199,14 @@ def run_graph(
     consume the fair round-robin interleave of their parents' uplinks (the
     same link-scheduling order the packet path used).  Returns the egress
     node's wire batch plus per-hop stats in node order.
+
+    Observability (all opt-in, output-transparent): ``tracer`` wraps every
+    node in a ``hop:<name>`` span (cat="hop") containing the engine's stage
+    spans; ``metrics`` accumulates per-hop key counters and segment-load
+    gauges; ``int_telemetry`` has each hop stamp INT metadata columns onto
+    the stream (fused engine only).
     """
+    tr = tracer or NULL_TRACER
     ingress = split_by_flow(batch, graph.num_groups)
     outs: list[WireBatch] = []
     stats: list[HopStats] = []
@@ -202,7 +215,28 @@ def run_graph(
             inp = merge_round_robin_batches([outs[p] for p in node.parents])
         else:
             inp = ingress[node.group]
-        out, st = run_hop(inp, spec, node.name, engine)
+        with tr.span(f"hop:{node.name}", cat="hop", keys=len(inp)) as hop_sp:
+            out, st = run_hop(
+                inp, spec, node.name, engine,
+                tracer=tracer, hop_id=i, int_telemetry=int_telemetry,
+            )
+            hop_sp.set(keys_out=len(out))
+        if metrics is not None:
+            metrics.counter("hop_keys_in", node.name).inc(len(inp))
+            metrics.counter("hop_keys_out", node.name).inc(len(out))
+            metrics.counter("hop_packets_out", node.name).inc(out.num_packets)
+            metrics.counter("hop_recirculations", node.name).inc(
+                st.recirculations
+            )
+            metrics.gauge("hop_segment_loads", node.name).set(st.segment_loads)
+            metrics.gauge("hop_load_imbalance", node.name).set(
+                st.load_imbalance
+            )
+            metrics.histogram("hop_emitted_run_length", node.name).observe_many(
+                st.emitted_run_lengths
+                if st.emitted_run_lengths is not None
+                else _emitted_run_lengths(out)
+            )
         # Stamp the emitting hop into flow_id (its documented meaning).
         # Hop engines emit flow 0; distinct tags per node keep packet
         # headers unique when sibling uplinks interleave at the next hop,
@@ -213,10 +247,27 @@ def run_graph(
             out.seq,
             out.segment_id,
             epoch=out.epoch,
+            int_meta=out.int_meta,
         )
         outs.append(out)
         stats.append(st)
     return outs[-1], stats
+
+
+def _emitted_run_lengths(out: WireBatch) -> np.ndarray:
+    """Lengths of the maximal ascending runs within each segment's emitted
+    sub-stream — the distribution the streaming server will see."""
+    n = len(out)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    sids = out.segment_id
+    order = np.argsort(sids, kind="stable")
+    vals, segs = out.values[order], sids[order]
+    brk = np.zeros(n, dtype=bool)
+    brk[0] = True
+    brk[1:] = (vals[1:] < vals[:-1]) | (segs[1:] != segs[:-1])
+    starts = np.nonzero(brk)[0]
+    return np.diff(np.concatenate([starts, [n]]))
 
 
 def single_graph() -> HopGraph:
@@ -298,8 +349,18 @@ class _TopoBase:
     def _engine(self) -> str:
         return self.engine or ("faithful" if self.faithful else "fused")
 
-    def run_batch(self, batch: WireBatch) -> tuple[WireBatch, list[HopStats]]:
-        return run_graph(self.graph(), batch, self._spec(), self._engine())
+    def run_batch(
+        self,
+        batch: WireBatch,
+        *,
+        tracer=None,
+        metrics=None,
+        int_telemetry: bool = False,
+    ) -> tuple[WireBatch, list[HopStats]]:
+        return run_graph(
+            self.graph(), batch, self._spec(), self._engine(),
+            tracer=tracer, metrics=metrics, int_telemetry=int_telemetry,
+        )
 
     def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:
         out, stats = self.run_batch(WireBatch.from_packets(packets))

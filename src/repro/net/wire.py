@@ -26,6 +26,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.telemetry import IntColumns
+
 from .packet import DEFAULT_PAYLOAD, UNTAGGED, Packet
 
 
@@ -58,6 +60,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
     seq: np.ndarray  # (n,) per-(flow, segment) packet sequence number
     segment_id: np.ndarray  # (n,) the paper's port number (UNTAGGED pre-switch)
     epoch: int = 0  # control-plane epoch this batch routes under
+    int_meta: IntColumns | None = None  # INT per-hop telemetry stack (opt-in)
 
     def __post_init__(self) -> None:
         for name in ("values", "flow_id", "seq", "segment_id"):
@@ -68,6 +71,10 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
         for name in ("flow_id", "seq", "segment_id"):
             if getattr(self, name).size != n:
                 raise ValueError(f"column {name} length != values length {n}")
+        if self.int_meta is not None and len(self.int_meta) != n:
+            raise ValueError(
+                f"int_meta rows {len(self.int_meta)} != values length {n}"
+            )
 
     def __len__(self) -> int:
         return int(self.values.size)
@@ -100,13 +107,17 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
 
     # -- reshaping ------------------------------------------------------
     def take(self, idx: np.ndarray) -> "WireBatch":
-        """Row gather (boolean mask or index array), order-preserving."""
+        """Row gather (boolean mask or index array), order-preserving.
+
+        The INT telemetry stack follows its keys through the same gather.
+        """
         return WireBatch(
             self.values[idx],
             self.flow_id[idx],
             self.seq[idx],
             self.segment_id[idx],
             epoch=self.epoch,
+            int_meta=None if self.int_meta is None else self.int_meta.take(idx),
         )
 
     def slice_keys(self, lo: int, hi: int) -> "WireBatch":
@@ -116,6 +127,9 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             self.seq[lo:hi],
             self.segment_id[lo:hi],
             epoch=self.epoch,
+            int_meta=(
+                None if self.int_meta is None else self.int_meta.slice(lo, hi)
+            ),
         )
 
     def with_epoch(self, epoch: int, num_segments: int) -> "WireBatch":
@@ -127,6 +141,18 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             self.seq,
             self.segment_id + epoch * num_segments,
             epoch=epoch,
+            int_meta=self.int_meta,
+        )
+
+    def with_int_meta(self, int_meta: IntColumns | None) -> "WireBatch":
+        """The same wire rows carrying a different telemetry stack."""
+        return WireBatch(
+            self.values,
+            self.flow_id,
+            self.seq,
+            self.segment_id,
+            epoch=self.epoch,
+            int_meta=int_meta,
         )
 
     # -- Packet interop (the thin boundary view) ------------------------
@@ -193,12 +219,19 @@ def concat_batches(batches: list[WireBatch]) -> WireBatch:
     if not batches:
         return empty_batch()
     epochs = {b.epoch for b in batches}
+    # Telemetry survives when every key-carrying part has it (empty parts
+    # have nothing to say); a mixed stream degrades to no telemetry.
+    carrying = [b for b in batches if len(b)]
+    int_meta = None
+    if carrying and all(b.int_meta is not None for b in carrying):
+        int_meta = IntColumns.concat([b.int_meta for b in carrying])
     return WireBatch(
         np.concatenate([b.values for b in batches]),
         np.concatenate([b.flow_id for b in batches]),
         np.concatenate([b.seq for b in batches]),
         np.concatenate([b.segment_id for b in batches]),
         epoch=epochs.pop() if len(epochs) == 1 else 0,
+        int_meta=int_meta,
     )
 
 

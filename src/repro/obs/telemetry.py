@@ -1,0 +1,162 @@
+"""INT-style in-band telemetry columns that ride the wire to egress.
+
+Real programmable switches export state by *stamping it into packets*:
+In-band Network Telemetry (INT) appends a per-hop metadata stack — switch
+id, queue occupancy, timestamps — to each packet as it traverses the
+fabric, and the sink reads the whole path's story off the wire.  This
+module is the repro's analogue.  When a pipeline runs with
+``int_telemetry=True``, every hop stamps three per-key columns onto the
+:class:`~repro.net.wire.WireBatch` flowing through it:
+
+``hop_id``
+    which fabric node processed the key at this depth (the INT "switch id"
+    field);
+``queue_depth``
+    how many keys of the key's segment were resident in the hop's switch
+    memory when this key was emitted — the paper's register-array
+    occupancy, the INT "queue depth" field;
+``rank_ticks``
+    the key's insertion rank within its segment at this hop (arrival
+    order among segment-mates), standing in for the INT ingress-to-egress
+    latency field: it counts the sequential-insert "ticks" Algorithm 3
+    spends before this key can be emitted.
+
+Each column is an ``(n, d)`` int64 matrix — row = key, column = hop depth —
+held in an immutable :class:`IntColumns` carried by
+``WireBatch.int_meta``.  Stamping appends one column per hop, so after a
+``d``-hop fabric the sink sees the full per-key path history, and
+:func:`int_summary` aggregates it into the per-hop occupancy/latency
+report that ``report.py`` renders.
+
+The columns follow their keys: every permutation/selection a batch
+undergoes (``take``, packet re-interleaving, jitter, pool demux) applies
+the same row gather to the metadata, which is what makes the telemetry
+trustworthy end-to-end.  Only the ``fused`` engine can stamp — it exposes
+the exact emission permutation; ``segment``/``faithful`` raise rather than
+silently dropping provenance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: Column names, in storage order, of the per-hop INT metadata stack.
+INT_FIELDS = ("hop_id", "queue_depth", "rank_ticks")
+
+
+def _as_matrix(a, n: int, d: int, name: str) -> np.ndarray:
+    m = np.asarray(a, dtype=np.int64)
+    if m.shape != (n, d):
+        raise ValueError(f"{name} must have shape {(n, d)}, got {m.shape}")
+    m.flags.writeable = False
+    return m
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IntColumns:
+    """The per-key INT metadata stack: three ``(n, d)`` int64 matrices.
+
+    ``n`` is the batch length (row i belongs to key i of the carrying
+    ``WireBatch``); ``d`` is the number of hops stamped so far.  Instances
+    are immutable — :meth:`stamp` returns a new stack one column deeper.
+    """
+
+    hop_id: np.ndarray
+    queue_depth: np.ndarray
+    rank_ticks: np.ndarray
+
+    def __post_init__(self):
+        n, d = np.asarray(self.hop_id).shape
+        for name in INT_FIELDS:
+            object.__setattr__(
+                self, name, _as_matrix(getattr(self, name), n, d, name)
+            )
+
+    # -- shape ----------------------------------------------------------
+    def __len__(self) -> int:
+        return self.hop_id.shape[0]
+
+    @property
+    def depth(self) -> int:
+        """Number of hops stamped onto these keys so far."""
+        return self.hop_id.shape[1]
+
+    @classmethod
+    def empty(cls, n: int, depth: int = 0) -> "IntColumns":
+        z = np.zeros((n, depth), dtype=np.int64)
+        return cls(hop_id=z, queue_depth=z.copy(), rank_ticks=z.copy())
+
+    # -- key-following transforms ---------------------------------------
+    def take(self, idx) -> "IntColumns":
+        """Row gather — apply the same permutation/selection as the keys."""
+        return IntColumns(
+            **{name: getattr(self, name)[idx] for name in INT_FIELDS}
+        )
+
+    def slice(self, lo: int, hi: int) -> "IntColumns":
+        return IntColumns(
+            **{name: getattr(self, name)[lo:hi] for name in INT_FIELDS}
+        )
+
+    @staticmethod
+    def concat(parts: list["IntColumns"]) -> "IntColumns":
+        """Stack row-wise; every part must be at the same hop depth."""
+        if not parts:
+            return IntColumns.empty(0)
+        depths = {p.depth for p in parts}
+        if len(depths) > 1:
+            raise ValueError(
+                f"cannot concat IntColumns at different hop depths: "
+                f"{sorted(depths)}"
+            )
+        return IntColumns(
+            **{
+                name: np.concatenate([getattr(p, name) for p in parts])
+                for name in INT_FIELDS
+            }
+        )
+
+    # -- stamping -------------------------------------------------------
+    def stamp(self, hop_id: int, queue_depth, rank_ticks) -> "IntColumns":
+        """Append one hop's metadata column; returns a depth+1 stack."""
+        n = len(self)
+        qd = np.asarray(queue_depth, dtype=np.int64).reshape(n, 1)
+        rt = np.asarray(rank_ticks, dtype=np.int64).reshape(n, 1)
+        hid = np.full((n, 1), hop_id, dtype=np.int64)
+        return IntColumns(
+            hop_id=np.concatenate([self.hop_id, hid], axis=1),
+            queue_depth=np.concatenate([self.queue_depth, qd], axis=1),
+            rank_ticks=np.concatenate([self.rank_ticks, rt], axis=1),
+        )
+
+    # -- reporting ------------------------------------------------------
+    def summary(self) -> list[dict]:
+        """Per-(depth, hop_id) aggregates for the egress-side report.
+
+        One row per fabric node per depth level: how many keys it saw and
+        the mean/max of its queue-depth and rank-tick stamps.
+        """
+        rows = []
+        for level in range(self.depth):
+            hids = self.hop_id[:, level]
+            for hid in np.unique(hids):
+                m = hids == hid
+                rows.append(
+                    {
+                        "depth": int(level),
+                        "hop_id": int(hid),
+                        "keys": int(m.sum()),
+                        "mean_queue_depth": float(self.queue_depth[m, level].mean()),
+                        "max_queue_depth": int(self.queue_depth[m, level].max()),
+                        "mean_rank_ticks": float(self.rank_ticks[m, level].mean()),
+                        "max_rank_ticks": int(self.rank_ticks[m, level].max()),
+                    }
+                )
+        return rows
+
+
+def int_summary(cols: "IntColumns | None") -> list[dict]:
+    """:meth:`IntColumns.summary`, tolerating a batch with no telemetry."""
+    return [] if cols is None or len(cols) == 0 else cols.summary()

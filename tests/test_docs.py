@@ -15,7 +15,7 @@ import pytest
 
 REPO = Path(__file__).resolve().parents[1]
 
-DOC_PACKAGES = ("repro.core", "repro.net", "repro.data")
+DOC_PACKAGES = ("repro.core", "repro.net", "repro.data", "repro.obs")
 
 
 def _public_modules():
