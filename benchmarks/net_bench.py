@@ -38,13 +38,21 @@ the eager numpy ladder vs the device-resident run-arena tournament
 (null tracer), with a recording :class:`repro.obs.Tracer` + metrics, and
 with in-band INT columns on the wire — outputs asserted byte-identical
 across modes, per-hop time/keys breakdown from the traced run's spans,
-and the traced-vs-off ratio that ``--max-trace-overhead`` gates in CI.
-All RNG (trace synthesis, interleave, control plane) derives from
-``--seed``, so an artifact reproduces across invocations.
+and the traced-vs-off ratio that ``--max-trace-overhead`` gates in CI;
+and the **network timing sweep** (schema v6): the same 1M-key pipeline
+under the per-link timing model (:mod:`repro.net.timing`) across a grid
+of link bandwidths × buffer depths with 2% wire loss — per cell the
+network makespan, the server makespan, sorted keys/sec through the
+slower of the two, and which side bottlenecks (the compute↔network
+crossover), with every cell's output asserted byte-identical to the
+timeless lossless run, which ``--require-lossless-identical`` gates in
+CI.  All RNG (trace synthesis, interleave, control plane, wire loss)
+derives from ``--seed``, so an artifact reproduces across invocations.
 
 Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
             [--faithful-check] [--hop-n N] [--scaling-n N] [--server-n N]
-            [--telemetry-n N] [--seed S] [--out BENCH_net.json]
+            [--telemetry-n N] [--network-n N] [--seed S]
+            [--out BENCH_net.json]
 """
 
 from __future__ import annotations
@@ -120,6 +128,27 @@ SERVER_BENCH = dict(SCALING_BENCH)
 # CI gates `overhead_traced_vs_off` at ``--max-trace-overhead`` (1.05).
 TELEMETRY_MODES = ("off", "traced", "int")
 TELEMETRY_BENCH = dict(SCALING_BENCH)
+
+# Network timing sweep (schema v6 `network_sweep`): the same 1M-key pipeline
+# run under the per-link timing model (repro.net.timing) across a grid of
+# link bandwidths × output-buffer depths, with a small fixed wire-loss rate
+# so the server's recovery path is always on the hook.  Each cell reports
+# the network makespan (ticks → seconds via tick_ns), the server makespan,
+# sorted keys/sec through the slower of the two, and which side bottlenecks
+# — locating the compute↔network crossover the paper's deployment question
+# asks about.  Every cell's output is compared byte-for-byte against the
+# timeless lossless run; `emit.py --require-lossless-identical` gates that
+# loss cost time, never keys.  rate (0, 1) means unthrottled; buffer 0
+# means unbounded (JSON has no None for ints).
+#   slow tail (1/16, 1/64 keys/tick) reaches past the crossover: at 10ns
+#   ticks a 1M-key run needs >= 0.16s/0.64s on the wire, overtaking the
+#   numpy server makespan — the grid shows bottleneck flip, not just report
+#   it as absent.
+NETWORK_RATES = (
+    (0, 1), (8, 1), (2, 1), (1, 1), (1, 4), (1, 16), (1, 64)
+)  # keys/tick
+NETWORK_BUFFERS = (0, 4, 1)  # output-buffer packets
+NETWORK_BENCH = dict(SCALING_BENCH, loss_rate=0.02, policy="drop")
 
 
 def hop_throughput(n: int, repeats: int, seed: int = 0) -> dict:
@@ -347,6 +376,85 @@ def telemetry_overhead(n: int, repeats: int, seed: int = 0) -> dict:
     }
 
 
+def network_sweep(n: int, repeats: int, seed: int = 0) -> dict:
+    """Keys/sec and bottleneck per (link rate × buffer depth) grid cell.
+
+    One lossless timeless reference run anchors byte-identity; every timed
+    cell then runs the full pipeline under a :class:`repro.net.NetworkConfig`
+    with 2% wire loss (drop policy — NACK + replay; the raw egress wire's
+    duplicates and late retransmits exercise the server's recovery mode).
+    ``keys_per_sec`` charges the slower of the network and server makespans
+    — the crossover row is where ``bottleneck`` flips from compute to
+    network as the link slows or the buffer shrinks.
+    """
+    from repro.net import LinkSpec, NetworkConfig
+
+    cfg = dict(NETWORK_BENCH, n=n, repeats=repeats)
+    trace = TRACES[cfg["trace"]](n, seed=seed)
+    maxv = trace_max_value(cfg["trace"])
+    kw = dict(
+        topology="single",
+        num_segments=cfg["segments"],
+        segment_length=cfg["length"],
+        max_value=maxv,
+        payload_size=cfg["payload"],
+        num_flows=8,
+        k=K,
+        range_mode=cfg["range_mode"],
+        seed=seed,
+    )
+    ref = run_pipeline(trace, **kw)
+    np.testing.assert_array_equal(ref.output, np.sort(trace))
+    rows = []
+    crossover = 0.0  # slowest-to-fastest rate at which the network binds
+    for numer, denom in NETWORK_RATES:
+        for buf in NETWORK_BUFFERS:
+            net = NetworkConfig(
+                link=LinkSpec(
+                    latency=2,
+                    rate_numer=numer or None,
+                    rate_denom=denom,
+                    buffer_packets=buf or None,
+                    policy=cfg["policy"],
+                    loss_rate=cfg["loss_rate"],
+                ),
+                switch_latency=1,
+                seed=seed,
+            )
+            samples = []
+            for _ in range(repeats):
+                res = run_pipeline(trace, network=net, **kw)
+                samples.append(float(res.server_seconds))
+            server_s = float(np.min(samples))
+            report = res.network
+            net_s = float(report.seconds)
+            identical = bool(np.array_equal(res.output, ref.output))
+            bottleneck = "network" if net_s >= server_s else "compute"
+            if bottleneck == "network" and buf == 0 and numer:
+                crossover = max(crossover, numer / denom)
+            rows.append(
+                {
+                    "rate_numer": int(numer),
+                    "rate_denom": int(denom),
+                    "buffer_packets": int(buf),
+                    "makespan_ticks": int(report.makespan_ticks),
+                    "network_seconds": net_s,
+                    "server_seconds": server_s,
+                    "keys_per_sec": n / max(net_s, server_s),
+                    "bottleneck": bottleneck,
+                    "drops": int(report.drops),
+                    "retransmits": int(report.retransmits),
+                    "lossless_identical": identical,
+                }
+            )
+    return {
+        "config": cfg,
+        "rows": rows,
+        "all_lossless_identical": all(r["lossless_identical"] for r in rows),
+        "crossover_keys_per_tick": crossover,
+    }
+
+
 def _best(fn, repeats: int):
     """Min-time over repeats (noise-robust) + the last result."""
     times, out = [], None
@@ -430,6 +538,16 @@ def main() -> None:
     ap.add_argument(
         "--telemetry-repeats", type=int, default=3,
         help="repeats for the telemetry-overhead sweep (min-time wins)",
+    )
+    ap.add_argument(
+        "--network-n", type=int, default=1_000_000,
+        help="trace size for the network timing sweep (>= 1M keys; not "
+        "reduced by --quick — the crossover needs the real server makespan)",
+    )
+    ap.add_argument(
+        "--network-repeats", type=int, default=2,
+        help="repeats for the network timing sweep (min server time wins; "
+        "the tick-counted network makespan is deterministic)",
     )
     ap.add_argument(
         "--seed", type=int, default=0,
@@ -610,6 +728,30 @@ def main() -> None:
         flush=True,
     )
 
+    network = network_sweep(
+        args.network_n, args.network_repeats, seed=args.seed
+    )
+    for r in network["rows"]:
+        rate = (
+            "inf" if not r["rate_numer"]
+            else f"{r['rate_numer']}/{r['rate_denom']}"
+        )
+        buf = r["buffer_packets"] or "inf"
+        emit(
+            f"network_rate{rate.replace('/', 'd')}_buf{buf}",
+            r["network_seconds"] * 1e6,
+            f"keys_per_sec={r['keys_per_sec']:.0f};"
+            f"bottleneck={r['bottleneck']};drops={r['drops']};"
+            f"identical={int(r['lossless_identical'])}",
+        )
+    print(
+        f"# network sweep: lossless-identical on all "
+        f"{len(network['rows'])} cells: {network['all_lossless_identical']}; "
+        f"network binds at <= {network['crossover_keys_per_tick']:.2f} "
+        f"keys/tick (unbounded buffer)",
+        flush=True,
+    )
+
     if args.out:
         config = {
             "n": n,
@@ -624,7 +766,7 @@ def main() -> None:
         write_net_bench(
             args.out, config, rows, hop_throughput=hop,
             server_scaling=scaling, server_throughput=server,
-            telemetry=telemetry,
+            telemetry=telemetry, network_sweep=network,
         )
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 

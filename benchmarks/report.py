@@ -8,9 +8,11 @@ Two artifact kinds, detected by shape:
   (reduction per topology × trace × range-mode) plus the per-engine
   hop-throughput microbench (keys/sec, fused vs per-segment speedup), the
   egress server-pool scaling sweep (makespan per pool size), the server
-  merge-backend sweep (numpy ladder vs run-arena keys/sec), and the
+  merge-backend sweep (numpy ladder vs run-arena keys/sec), the
   telemetry-overhead sweep (null tracer vs recording tracer vs INT
-  columns, with the traced run's per-hop time/keys breakdown).
+  columns, with the traced run's per-hop time/keys breakdown), and the
+  network timing sweep (sorted keys/sec per link rate × buffer depth,
+  locating the compute↔network crossover).
 
     PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
     PYTHONPATH=src:. python -m benchmarks.report BENCH_net.json
@@ -219,6 +221,37 @@ def render_net(doc: dict) -> str:
             f"| {100 * r['seconds'] / total:.1f}% "
             f"| {r['keys_in']:,} | {r['keys_out']:,} |"
         )
+    net = doc["network_sweep"]
+    nc = net["config"]
+    out += [
+        "",
+        f"## network timing sweep ({nc['trace']} trace, n={nc['n']}, "
+        f"{nc['segments']}x{nc['length']} switch, "
+        f"loss {nc['loss_rate']:.0%}, {nc['policy']} policy)",
+        "",
+        "| link rate (keys/tick) | buffer (pkts) | net makespan | net s |"
+        " server s | keys/sec | bottleneck | drops | rexmits | lossless-id |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in net["rows"]:
+        rate = (
+            "inf" if not r["rate_numer"]
+            else f"{r['rate_numer']}/{r['rate_denom']}"
+        )
+        buf = "inf" if not r["buffer_packets"] else str(r["buffer_packets"])
+        out.append(
+            f"| {rate} | {buf} | {r['makespan_ticks']:,} "
+            f"| {r['network_seconds']:.4f} | {r['server_seconds']:.3f} "
+            f"| {r['keys_per_sec']:,.0f} | {r['bottleneck']} "
+            f"| {r['drops']:,} | {r['retransmits']:,} "
+            f"| {'Y' if r['lossless_identical'] else 'N'} |"
+        )
+    out.append(
+        f"\nall cells byte-identical to the lossless run: "
+        f"{'yes' if net['all_lossless_identical'] else 'NO'}; the network "
+        f"binds at <= {net['crossover_keys_per_tick']:.2f} keys/tick "
+        f"(unbounded buffer)"
+    )
     return "\n".join(out)
 
 

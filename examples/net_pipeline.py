@@ -8,6 +8,8 @@ packet arrival and never holds the unsorted stream in memory.
         [--topology single|leaf_spine|tree] [--interleave bursty]
         [--jitter 8] [--ranges static|oracle|sampled] [--servers 4]
         [--merge-backend numpy|arena] [--trace-out out.json] [--metrics]
+        [--link-latency 2] [--link-rate 4/1] [--buffer 4]
+        [--loss-rate 0.02] [--loss-policy drop|backpressure]
 
 ``--servers S`` shards the egress across a segment-affinity pool of S
 independent streaming servers (the paper's "sort each range separately and
@@ -24,6 +26,18 @@ metrics-registry snapshot (per-hop key counters, run-length histograms,
 reorder-depth series); ``--int`` stamps in-band per-hop metadata columns
 onto the wire and prints their per-hop summary at egress.  All three are
 byte-transparent: the sorted output is identical with or without them.
+
+Any of ``--link-latency/--link-rate/--buffer/--loss-rate/--loss-policy``
+turns on the per-link network timing model (:mod:`repro.net.timing`):
+every link gets the given latency (ticks), bandwidth (``NUMER[/DENOM]``
+keys per tick), and bounded output buffer (packets; 0 = unbounded) with
+the chosen overflow policy, and the wire loses packets at ``--loss-rate``
+(NACK + replay from an ingress replay buffer).  The raw egress wire —
+retransmit duplicates and all — is healed by the server pool's recovery
+mode; the run prints the network makespan, loss/retransmit/stall
+counters, and whether the network or the compute server bottlenecks.
+The delivered sorted output stays byte-identical: loss costs time,
+never keys.
 """
 
 import argparse
@@ -36,7 +50,10 @@ import _bootstrap  # noqa: F401
 from repro.data import SCENARIOS, TRACES, scenario_max_value, trace_max_value
 from repro.net import (
     MERGE_BACKENDS,
+    POLICIES,
     RANGE_MODES,
+    LinkSpec,
+    NetworkConfig,
     plain_stream_sort,
     run_pipeline,
 )
@@ -77,6 +94,23 @@ def main() -> None:
                     "Chrome-trace-event JSON (view at ui.perfetto.dev)")
     ap.add_argument("--metrics", action="store_true",
                     help="collect and print the metrics-registry snapshot")
+    ap.add_argument("--link-latency", type=int, default=None, metavar="TICKS",
+                    help="per-link propagation delay in ticks (1 tick = one "
+                    "key at storage line rate); enables the network timing "
+                    "model")
+    ap.add_argument("--link-rate", default=None, metavar="NUMER[/DENOM]",
+                    help="per-link bandwidth: NUMER keys per DENOM ticks "
+                    "(e.g. 4/1, 1/2); omit for an unthrottled link")
+    ap.add_argument("--buffer", type=int, default=None, metavar="PACKETS",
+                    help="per-link output-buffer slots (0 = unbounded); "
+                    "overflow follows --loss-policy")
+    ap.add_argument("--loss-rate", type=float, default=None, metavar="P",
+                    help="per-attempt wire loss probability (lost packets "
+                    "are NACKed and replayed; loss costs time, never keys)")
+    ap.add_argument("--loss-policy", default=None, choices=list(POLICIES),
+                    help="buffer-overflow policy: drop (NACK + retransmit "
+                    "from the replay buffer) or backpressure (the upstream "
+                    "hop stalls)")
     ap.add_argument("--int", dest="int_telemetry", action="store_true",
                     help="stamp in-band per-hop metadata columns (hop id, "
                     "queue depth, rank ticks) onto the wire and print the "
@@ -88,6 +122,28 @@ def main() -> None:
             "note: the arena backend jit-compiles its merge network on "
             "first use (one-time, ~seconds); benchmarks/net_bench.py "
             "reports warm timings"
+        )
+
+    network = None
+    if any(
+        v is not None
+        for v in (args.link_latency, args.link_rate, args.buffer,
+                  args.loss_rate, args.loss_policy)
+    ):
+        numer, denom = None, 1
+        if args.link_rate is not None:
+            parts = args.link_rate.split("/")
+            numer = int(parts[0])
+            denom = int(parts[1]) if len(parts) > 1 else 1
+        network = NetworkConfig(
+            link=LinkSpec(
+                latency=args.link_latency or 0,
+                rate_numer=numer,
+                rate_denom=denom,
+                buffer_packets=args.buffer or None,
+                policy=args.loss_policy or "drop",
+                loss_rate=args.loss_rate or 0.0,
+            ),
         )
 
     trace = WORKLOADS[args.trace](args.n)
@@ -120,6 +176,7 @@ def main() -> None:
         jitter_window=args.jitter,
         reorder_capacity=max(64, 4 * args.jitter),
         range_mode=args.ranges,
+        network=network,
         num_servers=args.servers,
         merge_backend=args.merge_backend,
         tracer=tracer,
@@ -157,6 +214,22 @@ def main() -> None:
             f"{st.recirculations} recirculation passes"
         )
     print(f"reorder buffer high-water mark: {res.max_reorder_depth} packets")
+    if res.network is not None:
+        rep = res.network
+        bound = "network" if rep.seconds >= res.server_seconds else "compute"
+        print(
+            f"network: makespan {rep.makespan_ticks} ticks "
+            f"({rep.seconds:.4f}s @ {rep.config.tick_ns:.0f}ns/tick), "
+            f"{rep.drops} drops, {rep.retransmits} retransmits, "
+            f"{rep.duplicates} duplicates, {rep.stall_ticks} stall ticks "
+            f"-> {bound}-bound"
+        )
+        if res.dup_packets_dropped or res.spilled_packets:
+            print(
+                f"  server recovery: {res.dup_packets_dropped} duplicate "
+                f"packet(s) deduped, {res.spilled_packets} packet(s) "
+                f"spilled ({res.spilled_keys} keys)"
+            )
     if args.int_telemetry and res.telemetry and res.telemetry.get("int"):
         print("in-band telemetry (per hop, observed at egress):")
         for row in res.telemetry["int"]:

@@ -13,7 +13,11 @@ re-partitioning on batch columns), and a streaming compute server overlaps
 its k-way merge with arrival, ingesting batches directly (:mod:`server`) —
 or a segment-affinity pool of them (:mod:`egress` — each server sorts only
 its range shard; a distributed merge concatenates the shard outputs).
-:mod:`pipeline` wires it end to end.
+:mod:`pipeline` wires it end to end.  :mod:`timing` makes the network
+itself cost something: a token-based per-link model (latency, bandwidth
+numer/denom throttle, bounded output buffers with drop-NACK-retransmit or
+backpressure overflow policies, wire loss/duplication) whose raw egress
+link the server pool heals in recovery mode.
 
 Every layer is instrumentable through :mod:`repro.obs` — pass
 ``tracer=``/``metrics=`` (and ``int_telemetry=True`` for in-band per-hop
@@ -55,6 +59,16 @@ from .pipeline import (
     run_pipeline,
 )
 from .server import MERGE_BACKENDS, StreamingServer, stream_sort
+from .timing import (
+    POLICIES,
+    LinkSpec,
+    LinkStats,
+    NetworkConfig,
+    NetworkReport,
+    merge_reports,
+    resequence,
+    simulate_link,
+)
 from .topology import (
     TOPOLOGIES,
     AggregationTree,
@@ -114,6 +128,14 @@ __all__ = [
     "MERGE_BACKENDS",
     "StreamingServer",
     "stream_sort",
+    "POLICIES",
+    "LinkSpec",
+    "LinkStats",
+    "NetworkConfig",
+    "NetworkReport",
+    "merge_reports",
+    "resequence",
+    "simulate_link",
     "TOPOLOGIES",
     "AggregationTree",
     "HopGraph",

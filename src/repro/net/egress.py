@@ -86,6 +86,12 @@ class ServerPool:
     (:func:`repro.core.distributed.pool_concat_sharded`); when the platform
     exposes fewer devices than servers it falls back to numpy (run CPU tests
     under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
+
+    ``recovery`` turns on every member server's loss-recovery mode (seq
+    dedup + reorder-overflow spill) — required when the delivered wire is
+    the raw egress link of the network timing model
+    (:mod:`repro.net.timing`), which carries retransmit duplicates and
+    late-beyond-jitter packets.
     """
 
     def __init__(
@@ -99,6 +105,7 @@ class ServerPool:
         affinity: np.ndarray | None = None,
         merge_backend: str = "numpy",
         pool_backend: str = "numpy",
+        recovery: bool = False,
         tracer=None,
         metrics=None,
     ) -> None:
@@ -156,6 +163,7 @@ class ServerPool:
                 reorder_capacity=reorder_capacity,
                 final_merge=num_epochs > 1,
                 merge_backend=merge_backend,
+                recovery=recovery,
                 tracer=tracer,
                 metrics=metrics,
                 name=f"server{s}",
@@ -250,6 +258,21 @@ class ServerPool:
         """Worst reorder-buffer occupancy across the pool (0 when the pool
         is degenerate — no servers constructed yet)."""
         return max((s.max_reorder_depth for s in self.servers), default=0)
+
+    @property
+    def dup_packets_dropped(self) -> int:
+        """Retransmit duplicates deduped across the pool (recovery mode)."""
+        return sum(s.dup_packets_dropped for s in self.servers)
+
+    @property
+    def spilled_packets(self) -> int:
+        """Packets fed out of band on reorder overflow, pool-wide."""
+        return sum(s.spilled_packets for s in self.servers)
+
+    @property
+    def spilled_keys(self) -> int:
+        """Keys carried by spilled packets, pool-wide."""
+        return sum(s.spilled_keys for s in self.servers)
 
     @property
     def server_keys(self) -> list[int]:

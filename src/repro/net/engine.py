@@ -91,6 +91,13 @@ class HopStats:
     emitted_run_lengths: np.ndarray | None = dataclasses.field(
         default=None, compare=False, repr=False
     )
+    # Emission index at which each output packet ships, in wire (packet)
+    # order — the cut-through pacing map the network timing overlay uses:
+    # output packet p cannot leave the hop before its ship_emission[p]'th
+    # arrival has landed.  None for stats built outside a hop engine.
+    ship_emission: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     @classmethod
     def collect(
@@ -223,9 +230,11 @@ def _wire_from_grouped(
     (unique) ship index; the (possibly millions of) keys move in one ragged
     gather.  O(n + packets·log packets).
 
-    Returns ``(batch, idx)`` where ``idx[j]`` is the position in ``grouped``
-    of the key on wire row ``j`` — the provenance the INT telemetry stamp
-    needs to follow keys through the hop.
+    Returns ``(batch, idx, ship)`` where ``idx[j]`` is the position in
+    ``grouped`` of the key on wire row ``j`` — the provenance the INT
+    telemetry stamp needs to follow keys through the hop — and ``ship[p]``
+    is the emission index at which wire packet ``p`` ships (ascending), the
+    pacing map the network timing overlay needs.
     """
     n = int(grouped.size)
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
@@ -246,7 +255,7 @@ def _wire_from_grouped(
         np.repeat(pkt_sid[porder], sz),
         epoch=epoch,
     )
-    return batch, idx
+    return batch, idx, ship[porder]
 
 
 def emission_to_wire(
@@ -257,20 +266,31 @@ def emission_to_wire(
     epoch: int = 0,
 ) -> WireBatch:
     """Packetize an emission-ordered ``(values, sids)`` stream (the faithful
-    simulator's output shape) into ship-ordered wire columns.
+    simulator's output shape) into ship-ordered wire columns."""
+    return _emission_wire(values, sids, num_segments, payload_size, epoch)[0]
+
+
+def _emission_wire(
+    values: np.ndarray,
+    sids: np.ndarray,
+    num_segments: int,
+    payload_size: int,
+    epoch: int = 0,
+) -> tuple[WireBatch, np.ndarray]:
+    """:func:`emission_to_wire` plus the per-packet ship-emission indices.
 
     One stable grouping argsort recovers the segment-grouped stream; for a
     grouping permutation, the slot→emission-index map *is* the permutation.
     """
     n = int(values.size)
     if n == 0:
-        return empty_batch(epoch)
+        return empty_batch(epoch), np.zeros(0, dtype=np.int64)
     counts = np.bincount(sids, minlength=num_segments)
     eidx = np.argsort(sids * n + np.arange(n, dtype=np.int64))
-    batch, _ = _wire_from_grouped(
+    batch, _, ship = _wire_from_grouped(
         values[eidx], eidx, counts, payload_size, epoch
     )
-    return batch
+    return batch, ship
 
 
 # ---------------------------------------------------------------------------
@@ -320,15 +340,19 @@ def fused_hop(
         if int_telemetry or batch.int_meta is not None:
             depth = 0 if batch.int_meta is None else batch.int_meta.depth
             out = out.with_int_meta(IntColumns.empty(0, depth + 1))
+        stats = dataclasses.replace(
+            stats, ship_emission=np.zeros(0, dtype=np.int64)
+        )
         return out, stats
     # One scatter recovers the slot → emission-index map from the fused
     # pass; the wire is then packet slices of the stream array.
     with tr.span("packetize", cat="stage"):
         eidx = np.empty(len(batch), dtype=np.int64)
         eidx[em.slots] = np.arange(len(batch), dtype=np.int64)
-        out, idx = _wire_from_grouped(
+        out, idx, ship = _wire_from_grouped(
             em.streams, eidx, em.counts, spec.payload_size, batch.epoch
         )
+    stats = dataclasses.replace(stats, ship_emission=ship)
     if int_telemetry or batch.int_meta is not None:
         with tr.span("int_stamp", cat="stage"):
             out = _stamp_int(batch, em, out, idx, spec, hop_id)
@@ -464,6 +488,10 @@ def segment_hop(
             ship_at = int(pos[i + chunk.size - 1])  # wire idx of last key
             out.append((ship_at, Packet(chunk, 0, seq, segment_id=s)))
     out.sort(key=lambda t: t[0])  # ship order; wire indices are unique
+    stats = dataclasses.replace(
+        stats,
+        ship_emission=np.array([at for at, _ in out], dtype=np.int64),
+    )
     return (
         WireBatch.from_packets([p for _, p in out], epoch=batch.epoch),
         stats,
@@ -492,9 +520,10 @@ def faithful_hop(
     stats = HopStats.collect(
         name, values, sids, spec.num_segments, spec.segment_length
     )
-    out = emission_to_wire(
+    out, ship = _emission_wire(
         values, sids, spec.num_segments, spec.payload_size, epoch=batch.epoch
     )
+    stats = dataclasses.replace(stats, ship_emission=ship)
     return out, stats
 
 

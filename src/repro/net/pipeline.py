@@ -68,6 +68,9 @@ from .wire import (
 
 @dataclasses.dataclass(eq=False)  # ndarray fields: generated __eq__ would raise
 class PipelineResult:
+    """Everything one :func:`run_pipeline` run produced (sorted stream,
+    per-hop stats, egress timing, optional telemetry/network report)."""
+
     output: np.ndarray
     passes: list[int]  # per-(epoch, segment) merge passes (server contract)
     hop_stats: list[HopStats]
@@ -89,6 +92,13 @@ class PipelineResult:
     # Metrics snapshot (+ INT column summary) when the run was observed;
     # None on an uninstrumented run — never part of output equality.
     telemetry: dict | None = None
+    # Network timing report (per-link LinkStats + makespan) when a
+    # NetworkConfig drove the run; None on a timeless run.
+    network: "object | None" = None
+    # Server-side recovery counters (non-zero only with recovery mode).
+    dup_packets_dropped: int = 0
+    spilled_packets: int = 0
+    spilled_keys: int = 0
 
 
 def jitter_delivery(
@@ -96,16 +106,24 @@ def jitter_delivery(
 ) -> list[Packet]:
     """Bounded-displacement reorder modelling in-network jitter.
 
-    Each packet's departure priority is its index plus uniform noise in
-    ``[0, window)``; stable-sorting by priority can only invert packets whose
-    indices differ by less than ``window``, so every packet lands strictly
-    less than ``window`` positions from where it started — the bound a
-    receiver sizes its reorder buffer against.
+    Each packet's departure priority is its index plus **integer** noise
+    drawn uniformly from ``[0, window)``; the sort is stable, so ties keep
+    their original order and an inversion needs a *strict* priority
+    deficit: packet ``j`` can pass packet ``i < j`` only when
+    ``j - i < noise_i - noise_j <= window - 1``.  Every packet therefore
+    lands strictly less than ``window`` positions from where it started —
+    including at shard edges — which is the bound a receiver sizes its
+    reorder buffer against.  (The earlier float-noise draw made the edge
+    case unprovable: real-valued priorities never tie, so the displacement
+    bound rested on measure-zero luck rather than the stable-sort
+    guarantee, and the occupancy tests carried slack to cover it.)
     """
     if window <= 0:
         return list(packets)
     rng = np.random.default_rng(seed)
-    pri = np.arange(len(packets)) + rng.random(len(packets)) * window
+    pri = np.arange(len(packets), dtype=np.int64) + rng.integers(
+        0, window, len(packets)
+    )
     return [packets[i] for i in np.argsort(pri, kind="stable")]
 
 
@@ -118,7 +136,9 @@ def jitter_delivery_batch(
         return batch
     starts = batch.packet_starts()
     rng = np.random.default_rng(seed)
-    pri = np.arange(starts.size) + rng.random(starts.size) * window
+    pri = np.arange(starts.size, dtype=np.int64) + rng.integers(
+        0, window, starts.size
+    )
     order = np.argsort(pri, kind="stable")
     sizes = np.diff(np.concatenate([starts, [len(batch)]]))
     return batch.take(ragged_gather(starts[order], sizes[order]))
@@ -144,6 +164,8 @@ def run_pipeline(
     k: int = 10,
     jitter_window: int = 0,
     reorder_capacity: int | None = None,
+    network=None,
+    recovery: bool | None = None,
     num_servers: int = 1,
     merge_backend: str = "numpy",
     pool_backend: str = "numpy",
@@ -182,6 +204,18 @@ def run_pipeline(
     ``PipelineResult.telemetry``; ``int_telemetry=True`` stamps INT-style
     per-hop metadata columns onto the wire (``fused`` engine only), exposed
     on ``result.delivered.int_meta`` and summarized in the telemetry dict.
+
+    ``network`` (a :class:`~repro.net.timing.NetworkConfig`) runs the fabric
+    under the per-link timing model: every link gets a latency / bandwidth /
+    bounded-buffer budget, interior loss is absorbed by per-link ARQ (it
+    costs time, never content), and the **egress link delivers the raw
+    wire** — retransmit duplicates and late-beyond-jitter packets included —
+    so the egress pool defaults to ``recovery=True`` (seq dedup + spill) and
+    still yields output byte-identical to the lossless run.  The per-link
+    :class:`~repro.net.timing.LinkStats` and the network makespan land in
+    ``PipelineResult.network``; ``recovery`` can be forced on/off explicitly
+    (off + a lossy egress link raises on the first duplicate — the PR-4
+    detection behaviour).
     """
     values = np.asarray(values, dtype=np.int64)
     if max_value is None:
@@ -200,6 +234,10 @@ def run_pipeline(
             f"faithful=True conflicts with engine={engine!r}; pass one"
         )
     engine = engine or ("faithful" if faithful else "fused")
+    if recovery is None:
+        # A timed network's egress link is raw (duplicates, late
+        # retransmits) — the pool must heal it by default.
+        recovery = network is not None
 
     tr = tracer or NULL_TRACER
     if metrics is None and tr.enabled:
@@ -224,12 +262,17 @@ def run_pipeline(
                 payload_size=payload_size,
                 **topo_kw,
             )
-            return topo.run_batch(
+            res = topo.run_batch(
                 batch,
                 tracer=tracer,
                 metrics=metrics,
                 int_telemetry=int_telemetry,
+                network=network,
             )
+            if network is None:
+                out, stats = res
+                return out, stats, None
+            return res  # (delivered, stats, NetworkReport)
 
         if range_mode == "sampled":
             plane = adaptive or AdaptiveControlPlane(
@@ -241,15 +284,26 @@ def run_pipeline(
             delivered_epochs: list[WireBatch] = []
             hop_stats: list[HopStats] = []
             ranges_history: list[np.ndarray] = []
+            net_reports = []
             for e, (ranges_e, sub) in enumerate(epochs):
                 with tr.span(f"epoch:{e}", cat="pipeline", keys=len(sub)):
-                    out, stats = _run_topology(ranges_e, sub)
+                    out, stats, rep = _run_topology(ranges_e, sub)
                 delivered_epochs.append(out.with_epoch(e, num_segments))
                 hop_stats.extend(
                     dataclasses.replace(st, name=f"e{e}:{st.name}")
                     for st in stats
                 )
+                if rep is not None:
+                    for lst in rep.links:
+                        lst.name = f"e{e}:{lst.name}"
+                    net_reports.append(rep)
                 ranges_history.append(ranges_e)
+            if net_reports:
+                from .timing import merge_reports
+
+                net_report = merge_reports(net_reports)
+            else:
+                net_report = None
             delivered = concat_batches(delivered_epochs)
             eff_segments = num_segments * len(epochs)
             # Epoch handoff re-shards the virtual ids across the pool (empty
@@ -269,7 +323,9 @@ def run_pipeline(
                 ranges = plane.ranges(values, num_segments, max_value)
                 mode_str = plane.mode
             with tr.span("epoch:0", cat="pipeline", keys=len(arrivals)):
-                delivered, hop_stats = _run_topology(ranges, arrivals)
+                delivered, hop_stats, net_report = _run_topology(
+                    ranges, arrivals
+                )
             ranges_history = [ranges]
             eff_segments = num_segments
             affinity = None
@@ -288,6 +344,7 @@ def run_pipeline(
             affinity=affinity,
             merge_backend=merge_backend,
             pool_backend=pool_backend,
+            recovery=recovery,
             tracer=tracer,
             metrics=metrics,
         )
@@ -327,6 +384,10 @@ def run_pipeline(
         server_keys=pool.server_keys,
         server_imbalance=pool.server_imbalance,
         telemetry=telemetry,
+        network=net_report,
+        dup_packets_dropped=pool.dup_packets_dropped,
+        spilled_packets=pool.spilled_packets,
+        spilled_keys=pool.spilled_keys,
     )
 
 

@@ -8,6 +8,17 @@ as they land.  :class:`StreamingServer` keeps, per segment (port number):
   the network may deliver them out of order, and the buffer restores emission
   order before any key is looked at (capacity overflow raises: the knob is
   the memory the NIC driver would dedicate per port);
+
+With ``recovery=True`` the server heals a lossy wire instead of refusing it
+(the raw egress link of :mod:`repro.net.timing` delivers retransmit
+duplicates and late-beyond-jitter packets): duplicate sequence numbers are
+counted and dropped rather than raised, and when the bounded reorder buffer
+overflows the youngest buffered packet is **spilled** — fed out of band to
+the run detector as its own run (sortedness and the multiset are preserved;
+the cost is shorter runs, i.e. more merge work) with its seq remembered so
+the in-order cursor steps over it and late copies still dedupe.  Genuinely
+missing packets still fail ``finish()``: recovery never invents keys.
+Additional per-server state:
 * incremental **natural-run detection** across packet boundaries — the
   switch guarantees ≥L-length ascending runs, which the detector recovers
   exactly as Alg. 1 would on the full stream;
@@ -74,6 +85,7 @@ class StreamingServer:
         final_merge: bool = False,
         merge_backend: str = "numpy",
         *,
+        recovery: bool = False,
         tracer=None,
         metrics=None,
         name: str = "server0",
@@ -91,6 +103,7 @@ class StreamingServer:
         self.reorder_capacity = reorder_capacity
         self.final_merge = final_merge
         self.merge_backend = merge_backend
+        self.recovery = recovery
         self.name = name
         self.lane = lane  # trace lane (Chrome tid): pool servers get 1+s
         self._tr = tracer or NULL_TRACER
@@ -111,6 +124,12 @@ class StreamingServer:
         )
         self._ingested = 0
         self.max_reorder_depth = 0  # observability: worst buffer occupancy
+        # Recovery-mode state: seqs spilled out of band (kept until the
+        # in-order cursor passes them, so late duplicates still dedupe).
+        self._spilled: list[set[int]] = [set() for _ in range(S)]
+        self.dup_packets_dropped = 0
+        self.spilled_packets = 0
+        self.spilled_keys = 0
 
     @property
     def keys_ingested(self) -> int:
@@ -126,7 +145,15 @@ class StreamingServer:
         if not 0 <= sid < self.num_segments:
             raise ValueError(f"packet with invalid segment id {sid}")
         buf = self._pending[sid]
-        if seq < self._next_seq[sid] or seq in buf:
+        if seq < self._next_seq[sid] or seq in buf or seq in self._spilled[sid]:
+            if self.recovery:
+                # A retransmit whose original also made it: count and drop.
+                self.dup_packets_dropped += 1
+                if self._metrics is not None:
+                    self._metrics.counter(
+                        "server_dup_packets", self.name
+                    ).inc()
+                return
             raise ValueError(
                 f"duplicate packet seg={sid} seq={seq}"
             )
@@ -139,14 +166,55 @@ class StreamingServer:
                 self._ingested, depth
             )
         if self.reorder_capacity is not None and depth > self.reorder_capacity:
-            raise ValueError(
-                f"reorder buffer overflow on segment {sid}: {depth} packets "
-                f"buffered, capacity {self.reorder_capacity}"
+            if not self.recovery:
+                raise ValueError(
+                    f"reorder buffer overflow on segment {sid}: {depth} "
+                    f"packets buffered, capacity {self.reorder_capacity}"
+                )
+            # In-order progress may relieve the pressure before any spill.
+            self._drain(sid)
+            while len(buf) > self.reorder_capacity:
+                self._spill(sid)
+        self._drain(sid)
+
+    def _drain(self, sid: int) -> None:
+        """Advance the in-order cursor: feed buffered packets, step over
+        spilled seqs (their keys are already in the run detector)."""
+        buf = self._pending[sid]
+        spilled = self._spilled[sid]
+        while True:
+            nxt = self._next_seq[sid]
+            if nxt in buf:
+                self._next_seq[sid] = nxt + 1
+                self._feed(sid, buf.pop(nxt))
+            elif spilled and nxt in spilled:
+                spilled.discard(nxt)
+                self._next_seq[sid] = nxt + 1
+            else:
+                return
+
+    def _spill(self, sid: int) -> None:
+        """Evict the youngest buffered packet out of band (recovery mode).
+
+        Its keys go straight into the run detector as regular payload — the
+        detector's run-break rule keeps the merge ladder's inputs sorted, so
+        the final output is byte-identical; the only cost is shorter runs
+        (more merge work), the right trade for keys delayed beyond any
+        bounded jitter window.  The seq is remembered until the in-order
+        cursor passes it so late copies still dedupe.
+        """
+        buf = self._pending[sid]
+        seq = max(buf)
+        arr = buf.pop(seq)
+        self._spilled[sid].add(seq)
+        self.spilled_packets += 1
+        self.spilled_keys += int(arr.size)
+        if self._metrics is not None:
+            self._metrics.counter("server_spilled_packets", self.name).inc()
+            self._metrics.counter("server_spilled_keys", self.name).inc(
+                int(arr.size)
             )
-        while self._next_seq[sid] in buf:
-            arr = buf.pop(self._next_seq[sid])
-            self._next_seq[sid] += 1
-            self._feed(sid, arr)
+        self._feed(sid, arr)
 
     def ingest_batch(self, batch) -> None:
         """Consume a columnar :class:`~repro.net.wire.WireBatch` directly.
@@ -190,6 +258,7 @@ class StreamingServer:
             in_order = (
                 (self.reorder_capacity is None or self.reorder_capacity >= 1)
                 and not self._pending[s]
+                and not self._spilled[s]
                 and np.array_equal(
                     seqs,
                     np.arange(
@@ -269,7 +338,11 @@ class StreamingServer:
     def finish(self) -> tuple[np.ndarray, list[int]]:
         """Drain state; return ``(globally sorted stream, passes/segment)``."""
         for sid in range(self.num_segments):
-            if self._pending[sid]:
+            # A non-empty spilled set means the in-order cursor is still
+            # short of a seq whose keys were already fed — i.e. some earlier
+            # packet never arrived.  Recovery dedupes and reorders; it never
+            # invents keys, so a genuine loss still fails here.
+            if self._pending[sid] or self._spilled[sid]:
                 missing = self._next_seq[sid]
                 raise ValueError(
                     f"segment {sid}: stream incomplete, waiting on seq "

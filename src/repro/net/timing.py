@@ -1,0 +1,560 @@
+"""Per-link network timing: latency, bandwidth tokens, bounded buffers, loss.
+
+Until this module the simulator's network was *free*: packets crossed every
+link instantaneously, buffers were infinite, and nothing was ever dropped —
+so the pipeline could not answer the paper's own deployment question of when
+the fabric (not the compute server) becomes the bottleneck.  This is the
+token-based switch model the ROADMAP points at (firesim's ``switch.cc``:
+``LINKLATENCY`` propagation cycles, a ``numer/denom`` bandwidth throttle,
+``LIMITED_BUFSIZE`` output buffers), recast for the columnar dataplane:
+
+* the **clock** ticks once per key at storage line rate — the aggregated
+  arrival stream injects one key per tick, so a packet is *ready* on the
+  ingress link when its last key has left storage;
+* every link has a :class:`LinkSpec`: propagation ``latency`` (ticks), a
+  bandwidth budget of ``rate_numer`` keys per ``rate_denom`` ticks (a packet
+  of ``z`` keys occupies the serializer for ``ceil(z·denom/numer)`` ticks),
+  and a bounded output buffer of ``buffer_packets`` slots (a slot is held
+  from admission until the packet fully departs);
+* **buffer overflow** triggers the link's policy: ``"drop"`` NACKs the
+  packet back to the sender's replay buffer and re-offers it one retransmit
+  timeout later, while ``"backpressure"`` stalls admission until the
+  head-of-line departure frees a slot (the upstream port eats the stall);
+* the **wire itself** can lose a packet (``loss_rate``, re-sent from the
+  replay buffer after ``rto`` ticks) or deliver a spurious duplicate
+  (``dup_rate`` — a retransmission whose ACK was lost);
+* a hop *emits* its output packets paced by its arrivals: output packet
+  ``p`` ships when its ship emission index's arrival has landed (plus the
+  switch's ``switch_latency`` processing delay) — the cut-through coupling
+  Alg. 3 has, where every arriving key pushes one emitted key out.
+
+Interior (hop-to-hop) links run a per-link ARQ: the receiving hop dedupes
+and resequences, so reordering and loss inside the fabric are charged in
+*time* (retransmit delays, stalls — :func:`resequence` is the in-order
+release) but never change the byte content of the stream — which is what
+keeps every hop engine's wire byte-identical under any link budget, and the
+zero-latency/infinite-buffer :class:`NetworkConfig` an exact regression
+anchor for the timeless pipeline.  The **egress** link is different: the
+compute server's NIC sees the raw wire — duplicates, late retransmits, and
+all — so :class:`~repro.net.server.StreamingServer` grows a recovery mode
+(seq dedup + spill) to heal what this module breaks.
+
+:class:`GraphTimer` is the overlay :func:`repro.net.topology.run_graph`
+drives alongside its node loop; it returns the raw delivered egress batch
+plus a :class:`NetworkReport` (per-link :class:`LinkStats`, the network
+makespan in ticks, and its wall-clock conversion via ``tick_ns`` — the
+``network_sweep`` bench section compares it against the server makespan to
+locate the compute↔network crossover).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.obs.trace import NULL_TRACER
+
+from .wire import WireBatch, ragged_gather
+
+#: Buffer-overflow policies a link can run.
+POLICIES = ("drop", "backpressure")
+
+
+# ---------------------------------------------------------------------------
+# Link and network configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One link's budget.  The default is the ideal link: zero latency,
+    infinite bandwidth, unbounded buffer, lossless — byte- and
+    tick-transparent, so ``NetworkConfig()`` reproduces the timeless
+    pipeline exactly."""
+
+    latency: int = 0  # propagation delay, ticks (firesim LINKLATENCY)
+    rate_numer: int | None = None  # keys per rate_denom ticks; None = infinite
+    rate_denom: int = 1
+    buffer_packets: int | None = None  # output-buffer slots; None = unbounded
+    policy: str = "drop"  # overflow policy: "drop" (NACK+replay) | "backpressure"
+    loss_rate: float = 0.0  # per-attempt wire loss probability
+    dup_rate: float = 0.0  # spurious-retransmit (lost-ACK) duplicate probability
+    rto: int | None = None  # retransmit timeout, ticks; None = 2*latency + 4
+    max_attempts: int = 8  # replay budget: the last attempt always lands
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r}; options: {POLICIES}"
+            )
+        if self.latency < 0:
+            raise ValueError("latency must be >= 0")
+        if self.rate_numer is not None and self.rate_numer <= 0:
+            raise ValueError("rate_numer must be positive (None = infinite)")
+        if self.rate_denom <= 0:
+            raise ValueError("rate_denom must be positive")
+        if self.buffer_packets is not None and self.buffer_packets < 1:
+            raise ValueError("buffer_packets must be >= 1 (None = unbounded)")
+        for name in ("loss_rate", "dup_rate"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1]")
+        if self.rto is not None and self.rto < 1:
+            raise ValueError("rto must be >= 1 tick")
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+
+    @property
+    def is_ideal(self) -> bool:
+        """Tick- and byte-transparent: the link adds nothing at all."""
+        return (
+            self.latency == 0
+            and self.rate_numer is None
+            and self.buffer_packets is None
+            and self.loss_rate == 0.0
+            and self.dup_rate == 0.0
+        )
+
+    @property
+    def effective_rto(self) -> int:
+        """NACK/timeout before a replay re-offer: one round trip plus slack."""
+        return self.rto if self.rto is not None else 2 * self.latency + 4
+
+    def transmission_ticks(self, sizes: np.ndarray) -> np.ndarray:
+        """Serializer occupancy per packet: ``ceil(keys * denom / numer)``."""
+        sizes = np.asarray(sizes, dtype=np.int64)
+        if self.rate_numer is None:
+            return np.zeros(sizes.size, dtype=np.int64)
+        return -(-(sizes * self.rate_denom) // self.rate_numer)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """The fabric-wide timing model: one default :class:`LinkSpec` with
+    optional ingress/egress overrides, a per-hop processing delay, and the
+    tick→wall-clock conversion.  The all-defaults config is the ideal
+    network — the regression anchor."""
+
+    link: LinkSpec = LinkSpec()  # hop-to-hop uplinks (and the fallback)
+    ingress: LinkSpec | None = None  # storage → ingress-hop links
+    egress: LinkSpec | None = None  # last hop → compute server link (raw wire)
+    switch_latency: int = 0  # per-hop processing delay, ticks
+    seed: int = 0  # loss/duplication RNG (one stream, link order)
+    tick_ns: float = 10.0  # wall-clock per tick (1 key/tick ≈ 100M keys/s)
+
+    def __post_init__(self) -> None:
+        if self.switch_latency < 0:
+            raise ValueError("switch_latency must be >= 0")
+        if self.tick_ns <= 0:
+            raise ValueError("tick_ns must be positive")
+
+    def link_for(self, kind: str) -> LinkSpec:
+        """The spec governing a link class: ``ingress``/``egress`` override
+        the fabric default when set."""
+        if kind == "ingress" and self.ingress is not None:
+            return self.ingress
+        if kind == "egress" and self.egress is not None:
+            return self.egress
+        return self.link
+
+    @property
+    def is_ideal(self) -> bool:
+        return (
+            self.switch_latency == 0
+            and all(
+                self.link_for(kind).is_ideal
+                for kind in ("ingress", "fabric", "egress")
+            )
+        )
+
+
+# ---------------------------------------------------------------------------
+# One link
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LinkStats:
+    """Per-link counters (the loss/retransmit/stall observability plane)."""
+
+    name: str
+    packets: int = 0  # distinct packets offered to the link
+    keys: int = 0
+    delivered: int = 0  # deliveries, including wire duplicates
+    drops_overflow: int = 0  # output-buffer overflows (drop policy)
+    drops_wire: int = 0  # packets lost on the wire
+    retransmits: int = 0  # replay-buffer re-offers (NACK or timeout)
+    duplicates: int = 0  # spurious duplicates delivered
+    coalesced: int = 0  # duplicates fused with their original at delivery
+    forced: int = 0  # replay budget exhausted: admitted by stalling instead
+    stall_ticks: int = 0  # backpressure (and forced-admission) wait, summed
+    buffer_high_water: int = 0  # peak output-buffer occupancy, packets
+    first_arrival: int = 0
+    last_arrival: int = 0  # the link's contribution to the makespan
+
+
+@dataclasses.dataclass
+class LinkResult:
+    """What a link delivered: ``order[j]`` is the offered packet index of
+    the ``j``-th arrival (arrival-tick order; indices repeat under
+    ``dup_rate``), ``ticks[j]`` its arrival tick."""
+
+    order: np.ndarray
+    ticks: np.ndarray
+    stats: LinkStats
+
+
+def simulate_link(
+    sizes: np.ndarray,
+    ready: np.ndarray,
+    spec: LinkSpec,
+    *,
+    rng: np.random.Generator | None = None,
+    name: str = "link",
+) -> LinkResult:
+    """Run one link's token schedule over packets of ``sizes`` keys that
+    become ready at ``ready`` ticks.
+
+    The serializer sends one packet at a time (``transmission_ticks``
+    each); a packet occupies an output-buffer slot from admission until it
+    fully departs, and arrives ``latency`` ticks after departing.  Overflow
+    follows ``spec.policy``; wire loss and duplication draw from ``rng``.
+    A packet's last replay attempt always lands (the budget caps NACK
+    storms), so every offered packet is delivered at least once — loss
+    costs time, never keys.
+    """
+    sizes = np.asarray(sizes, dtype=np.int64)
+    ready = np.asarray(ready, dtype=np.int64)
+    n = int(sizes.size)
+    stats = LinkStats(name=name, packets=n, keys=int(sizes.sum()))
+    if n == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return LinkResult(z, z, stats)
+    lossless_passthrough = (
+        spec.rate_numer is None
+        and spec.buffer_packets is None
+        and spec.loss_rate == 0.0
+        and spec.dup_rate == 0.0
+    )
+    if lossless_passthrough:
+        ticks = ready + spec.latency
+        order = (
+            np.arange(n, dtype=np.int64)
+            if np.all(ticks[1:] >= ticks[:-1])
+            else np.argsort(ticks, kind="stable").astype(np.int64)
+        )
+        ticks = ticks[order]
+        stats.delivered = n
+        stats.buffer_high_water = 1
+        stats.first_arrival = int(ticks[0])
+        stats.last_arrival = int(ticks[-1])
+        return LinkResult(order, ticks, stats)
+
+    rng = rng or np.random.default_rng(0)
+    trans = spec.transmission_ticks(sizes)
+    rto = spec.effective_rto
+    # (offer tick, FIFO tiebreak, packet, attempt); initial offers keep the
+    # caller's order among equal ticks, replays queue behind them.
+    heap: list[tuple[int, int, int, int]] = [
+        (int(ready[i]), i, i, 0) for i in range(n)
+    ]
+    heapq.heapify(heap)
+    counter = n
+    clock = 0  # the port's monotone admission clock
+    free_at = 0  # serializer busy until
+    occupants: list[int] = []  # departure ticks of buffered packets
+    deliveries: list[tuple[int, int, int]] = []
+    seq = 0
+    while heap:
+        t, _, i, attempt = heapq.heappop(heap)
+        if t < clock:
+            t = clock
+        while occupants and occupants[0] <= t:
+            heapq.heappop(occupants)
+        if (
+            spec.buffer_packets is not None
+            and len(occupants) >= spec.buffer_packets
+        ):
+            if spec.policy == "drop" and attempt + 1 < spec.max_attempts:
+                stats.drops_overflow += 1
+                stats.retransmits += 1
+                heapq.heappush(heap, (t + rto, counter, i, attempt + 1))
+                counter += 1
+                continue
+            # Backpressure — or a drop link whose replay budget ran out
+            # (keys must never vanish): wait for the head-of-line departure.
+            t2 = heapq.heappop(occupants)
+            if t2 > t:
+                stats.stall_ticks += t2 - t
+                t = t2
+            if spec.policy == "drop":
+                stats.forced += 1
+        clock = t
+        start = t if t > free_at else free_at
+        depart = start + int(trans[i])
+        free_at = depart
+        heapq.heappush(occupants, depart)
+        if len(occupants) > stats.buffer_high_water:
+            stats.buffer_high_water = len(occupants)
+        if (
+            spec.loss_rate > 0.0
+            and attempt + 1 < spec.max_attempts
+            and rng.random() < spec.loss_rate
+        ):
+            stats.drops_wire += 1
+            stats.retransmits += 1
+            heapq.heappush(heap, (depart + rto, counter, i, attempt + 1))
+            counter += 1
+            continue
+        arrival = depart + spec.latency
+        deliveries.append((arrival, seq, i))
+        seq += 1
+        if spec.dup_rate > 0.0 and rng.random() < spec.dup_rate:
+            stats.duplicates += 1
+            deliveries.append((arrival + max(rto, 1), seq, i))
+            seq += 1
+    deliveries.sort()
+    order = np.fromiter((d[2] for d in deliveries), np.int64, len(deliveries))
+    ticks = np.fromiter((d[0] for d in deliveries), np.int64, len(deliveries))
+    stats.delivered = len(deliveries)
+    stats.first_arrival = int(ticks[0])
+    stats.last_arrival = int(ticks[-1])
+    return LinkResult(order, ticks, stats)
+
+
+def resequence(n: int, result: LinkResult) -> np.ndarray:
+    """Per-link ARQ at the receiving hop: in-order release ticks.
+
+    The receiver discards duplicates (only a packet's first arrival counts)
+    and holds early packets until every predecessor has landed, so packet
+    ``i`` is released at ``max(arrival[j] for j <= i)`` — reordering and
+    loss cost time, never content.
+    """
+    first = np.full(n, np.iinfo(np.int64).max, dtype=np.int64)
+    np.minimum.at(first, result.order, result.ticks)
+    return np.maximum.accumulate(first)
+
+
+# ---------------------------------------------------------------------------
+# Whole-fabric report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class NetworkReport:
+    """Every link's stats plus the network makespan (last egress arrival)."""
+
+    links: list[LinkStats]
+    makespan_ticks: int
+    config: NetworkConfig
+
+    def _total(self, field: str) -> int:
+        return sum(getattr(s, field) for s in self.links)
+
+    @property
+    def drops(self) -> int:
+        return self._total("drops_overflow") + self._total("drops_wire")
+
+    @property
+    def retransmits(self) -> int:
+        return self._total("retransmits")
+
+    @property
+    def duplicates(self) -> int:
+        return self._total("duplicates")
+
+    @property
+    def stall_ticks(self) -> int:
+        return self._total("stall_ticks")
+
+    @property
+    def seconds(self) -> float:
+        """The network makespan on the wall clock (via ``tick_ns``) — what
+        the crossover sweep compares against the server makespan."""
+        return self.makespan_ticks * self.config.tick_ns * 1e-9
+
+
+def merge_reports(reports: list[NetworkReport]) -> NetworkReport:
+    """Combine per-epoch reports: epochs drain the wire sequentially, so
+    makespans add; link stats concatenate (callers prefix names)."""
+    if not reports:
+        raise ValueError("no reports to merge")
+    return NetworkReport(
+        links=[st for r in reports for st in r.links],
+        makespan_ticks=sum(r.makespan_ticks for r in reports),
+        config=reports[0].config,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The run_graph overlay
+# ---------------------------------------------------------------------------
+
+
+class GraphTimer:
+    """Timing overlay driven by :func:`repro.net.topology.run_graph`.
+
+    One instance per graph execution: ``after_hop`` is called per node (in
+    topological order, after the hop ran) to propagate per-packet ticks
+    through that node's input links and emission pacing; ``egress_deliver``
+    then runs the last link raw — its reordering, duplicates, and late
+    retransmits become actual wire content for the server to recover.
+    """
+
+    def __init__(
+        self,
+        graph,
+        batch: WireBatch,
+        network: NetworkConfig,
+        *,
+        tracer=None,
+        metrics=None,
+    ) -> None:
+        self._graph = graph
+        self._net = network
+        self._rng = np.random.default_rng(network.seed)
+        self._tr = tracer or NULL_TRACER
+        self._metrics = metrics
+        self.links: list[LinkStats] = []
+        self._out_ticks: list[np.ndarray | None] = [None] * len(graph.nodes)
+        self._egress_ready: np.ndarray | None = None
+        # Storage clock: the aggregated arrival stream injects one key per
+        # tick, so a packet is ready when its last key has left storage.
+        starts = batch.packet_starts()
+        sizes = np.diff(np.concatenate([starts, [len(batch)]]))
+        self._arr_sizes = sizes
+        self._arr_ready = np.cumsum(sizes) - 1 if sizes.size else sizes
+        self._arr_group = (
+            batch.flow_id[starts] % graph.num_groups
+            if starts.size
+            else np.zeros(0, dtype=np.int64)
+        )
+
+    def _record(self, res: LinkResult) -> None:
+        st = res.stats
+        self.links.append(st)
+        if self._metrics is not None:
+            m = self._metrics
+            m.counter("link_drops_overflow", st.name).inc(st.drops_overflow)
+            m.counter("link_drops_wire", st.name).inc(st.drops_wire)
+            m.counter("link_retransmits", st.name).inc(st.retransmits)
+            m.counter("link_duplicates", st.name).inc(st.duplicates)
+            m.counter("link_stall_ticks", st.name).inc(st.stall_ticks)
+            m.gauge("link_buffer_high_water", st.name).high_water(
+                st.buffer_high_water
+            )
+        if self._tr.enabled:
+            self._tr.instant(
+                f"link:{st.name}", cat="net",
+                packets=st.packets, delivered=st.delivered,
+                drops=st.drops_overflow + st.drops_wire,
+                retransmits=st.retransmits, duplicates=st.duplicates,
+                stall_ticks=st.stall_ticks, last_arrival=st.last_arrival,
+            )
+
+    @staticmethod
+    def _packet_sizes(batch: WireBatch) -> np.ndarray:
+        starts = batch.packet_starts()
+        return np.diff(np.concatenate([starts, [len(batch)]]))
+
+    def after_hop(self, i: int, node, inp: WireBatch, out: WireBatch,
+                  stats, outs: list[WireBatch]) -> None:
+        """Propagate ticks through node ``i``: input-link delivery, emission
+        pacing, and (for non-egress nodes) the uplink to the consumer."""
+        if node.parents:
+            # The RR merge interleaves parents one packet per turn —
+            # replicate it at packet granularity to carry each parent
+            # packet's delivery tick to its merged position.
+            par = [p for p in node.parents if len(outs[p])]
+            if not par:
+                in_ticks = np.zeros(0, dtype=np.int64)
+            elif len(par) == 1:
+                in_ticks = self._out_ticks[par[0]]
+            else:
+                counts = [int(self._packet_sizes(outs[p]).size) for p in par]
+                turn = np.concatenate(
+                    [np.arange(c, dtype=np.int64) for c in counts]
+                )
+                src = np.repeat(
+                    np.arange(len(par), dtype=np.int64), counts
+                )
+                order = np.lexsort((src, turn))
+                in_ticks = np.concatenate(
+                    [self._out_ticks[p] for p in par]
+                )[order]
+        else:
+            pmask = self._arr_group == node.group
+            res = simulate_link(
+                self._arr_sizes[pmask], self._arr_ready[pmask],
+                self._net.link_for("ingress"), rng=self._rng,
+                name=f"ingress:{node.name}",
+            )
+            self._record(res)
+            in_ticks = resequence(int(pmask.sum()), res)
+        in_sizes = self._packet_sizes(inp)
+        assert in_ticks.size == in_sizes.size, (
+            f"hop {node.name!r}: {in_ticks.size} link ticks for "
+            f"{in_sizes.size} input packets"
+        )
+        # Emission pacing (cut-through): output packet p ships once its
+        # ship-emission-index'th arrival has landed, plus processing delay.
+        key_ticks = np.repeat(in_ticks, in_sizes)
+        key_ticks.sort()
+        n = int(key_ticks.size)
+        ship = getattr(stats, "ship_emission", None)
+        if ship is None:
+            out_sizes = self._packet_sizes(out)
+            ship = np.cumsum(out_sizes) - 1
+        if n:
+            ready_out = (
+                key_ticks[np.minimum(ship, n - 1)] + self._net.switch_latency
+            )
+        else:
+            ready_out = np.zeros(len(ship), dtype=np.int64)
+        if i < len(self._graph.nodes) - 1:
+            res = simulate_link(
+                self._packet_sizes(out), ready_out,
+                self._net.link_for("fabric"), rng=self._rng,
+                name=f"uplink:{node.name}",
+            )
+            self._record(res)
+            self._out_ticks[i] = resequence(int(ready_out.size), res)
+        else:
+            self._egress_ready = ready_out
+
+    def egress_deliver(self, egress: WireBatch) -> tuple[WireBatch, "NetworkReport"]:
+        """Run the last-hop→server link raw: the delivered batch carries the
+        wire's actual packet order, duplicates included — the server's
+        recovery mode (seq dedup + spill) is what makes it sortable again."""
+        starts = egress.packet_starts()
+        sizes = self._packet_sizes(egress)
+        ready = (
+            self._egress_ready
+            if self._egress_ready is not None
+            else np.zeros(0, dtype=np.int64)
+        )
+        res = simulate_link(
+            sizes, ready, self._net.link_for("egress"), rng=self._rng,
+            name="egress",
+        )
+        order, ticks = res.order, res.ticks
+        if order.size:
+            # Two adjacent copies of one packet would fuse into a single
+            # double-length packet in the columnar wire (boundaries are
+            # header runs) — deliver only the first copy; the duplicate is
+            # redundant by definition.
+            keep = np.ones(order.size, dtype=bool)
+            keep[1:] = order[1:] != order[:-1]
+            fused = int(order.size - int(keep.sum()))
+            if fused:
+                res.stats.coalesced += fused
+                res.stats.delivered -= fused
+                order, ticks = order[keep], ticks[keep]
+        self._record(res)
+        delivered = egress.take(ragged_gather(starts[order], sizes[order]))
+        makespan = int(ticks.max(initial=0))
+        return delivered, NetworkReport(
+            links=self.links, makespan_ticks=makespan, config=self._net
+        )

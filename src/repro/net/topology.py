@@ -192,7 +192,8 @@ def run_graph(
     tracer=None,
     metrics=None,
     int_telemetry: bool = False,
-) -> tuple[WireBatch, list[HopStats]]:
+    network=None,
+):
     """Execute a fabric over an arrival batch.
 
     Ingress nodes consume their flow group's sub-stream; interior nodes
@@ -205,8 +206,22 @@ def run_graph(
     spans; ``metrics`` accumulates per-hop key counters and segment-load
     gauges; ``int_telemetry`` has each hop stamp INT metadata columns onto
     the stream (fused engine only).
+
+    ``network`` (a :class:`~repro.net.timing.NetworkConfig`) turns on the
+    per-link timing overlay: every link gets a latency/bandwidth/buffer
+    budget, interior links absorb loss as retransmit *time* (per-link ARQ),
+    and the egress link delivers the raw wire — duplicates and late
+    retransmits included — so the return becomes a three-tuple
+    ``(delivered, stats, NetworkReport)``.
     """
     tr = tracer or NULL_TRACER
+    timer = None
+    if network is not None:
+        from .timing import GraphTimer
+
+        timer = GraphTimer(
+            graph, batch, network, tracer=tracer, metrics=metrics
+        )
     ingress = split_by_flow(batch, graph.num_groups)
     outs: list[WireBatch] = []
     stats: list[HopStats] = []
@@ -249,8 +264,15 @@ def run_graph(
             epoch=out.epoch,
             int_meta=out.int_meta,
         )
+        if timer is not None:
+            # Flow re-stamping does not move packet boundaries, so the
+            # timing overlay sees the same packets the next hop will.
+            timer.after_hop(i, node, inp, out, st, outs)
         outs.append(out)
         stats.append(st)
+    if timer is not None:
+        delivered, report = timer.egress_deliver(outs[-1])
+        return delivered, stats, report
     return outs[-1], stats
 
 
@@ -356,10 +378,12 @@ class _TopoBase:
         tracer=None,
         metrics=None,
         int_telemetry: bool = False,
-    ) -> tuple[WireBatch, list[HopStats]]:
+        network=None,
+    ):
         return run_graph(
             self.graph(), batch, self._spec(), self._engine(),
             tracer=tracer, metrics=metrics, int_telemetry=int_telemetry,
+            network=network,
         )
 
     def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:

@@ -1,0 +1,487 @@
+"""Property suite for the per-link network timing model (ISSUE 7).
+
+Three layers of claims:
+
+* **link level** — :func:`repro.net.timing.simulate_link` unit semantics:
+  an ideal link is the identity, latency shifts arrivals, the bandwidth
+  token (``ceil(keys·denom/numer)``) serializes departures, a full output
+  buffer drops (NACK + replay) or stalls (backpressure) but never loses a
+  key, and the replay budget's last attempt always lands;
+* **pipeline level, deterministic** — the degenerate twins named by the
+  issue (single-packet flow, buffer-of-one with 100% overflow,
+  all-packets-dropped-once, backpressure deadlock-freedom on the k-ary
+  tree), each seed-pinned, plus the regression anchor: the
+  zero-latency/infinite-buffer :class:`~repro.net.NetworkConfig` reproduces
+  the timeless pipeline byte-for-byte *and* tick-for-tick (the wire drains
+  at line rate: makespan == n − 1), and makespan is monotone —
+  non-decreasing in latency, non-increasing in bandwidth;
+* **pipeline level, randomized** — the hypothesis sweep over scenario ×
+  topology × loss-rate × buffer-size × policy × pool size: whatever the
+  link budget does to the wire (drops, retransmits, duplicates, stalls),
+  the delivered sorted output is byte-identical to the lossless run —
+  loss costs time, never keys.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypstub import given, settings, st
+
+from repro.data import SCENARIOS, TRACES, scenario_max_value, trace_max_value
+from repro.net import (
+    LinkSpec,
+    NetworkConfig,
+    resequence,
+    run_pipeline,
+    simulate_link,
+)
+
+TOPO_CASES = [
+    ("single", {}),
+    ("leaf_spine", {"num_leaves": 3}),
+    ("tree", {"branching": 2, "height": 2}),
+]
+SEGS, LENGTH = 8, 16
+
+
+def _run(vals, maxv, topo, topo_kw, num_servers=1, **over):
+    kw = dict(
+        topology=topo,
+        num_segments=SEGS,
+        segment_length=LENGTH,
+        max_value=maxv,
+        num_flows=4,
+        payload_size=32,
+        num_servers=num_servers,
+        verify=True,
+    )
+    kw.update(topo_kw)
+    kw.update(over)
+    return run_pipeline(vals, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Link-level unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ideal_link_is_the_identity():
+    sizes = np.array([4, 1, 9, 2])
+    ready = np.array([0, 3, 3, 10])
+    res = simulate_link(sizes, ready, LinkSpec())
+    np.testing.assert_array_equal(res.order, np.arange(4))
+    np.testing.assert_array_equal(res.ticks, ready)
+    assert res.stats.drops_overflow == res.stats.drops_wire == 0
+    assert res.stats.retransmits == res.stats.duplicates == 0
+    assert res.stats.stall_ticks == 0
+    assert res.stats.delivered == 4 and res.stats.keys == 16
+
+
+def test_latency_shifts_every_arrival():
+    ready = np.array([0, 5, 11])
+    res = simulate_link(np.array([8, 8, 8]), ready, LinkSpec(latency=7))
+    np.testing.assert_array_equal(res.order, np.arange(3))
+    np.testing.assert_array_equal(res.ticks, ready + 7)
+
+
+def test_bandwidth_token_serializes_departures():
+    """One key per 2 ticks: a 4-key packet holds the serializer 8 ticks, so
+    back-to-back packets depart (and arrive) exactly 8 ticks apart."""
+    spec = LinkSpec(rate_numer=1, rate_denom=2)
+    res = simulate_link(
+        np.array([4, 4, 4]), np.zeros(3, dtype=np.int64), spec
+    )
+    np.testing.assert_array_equal(res.ticks, [8, 16, 24])
+    np.testing.assert_array_equal(res.order, np.arange(3))
+    assert res.stats.buffer_high_water >= 1
+
+
+def test_backpressure_stalls_never_drops_and_keeps_fifo():
+    spec = LinkSpec(
+        rate_numer=1, rate_denom=4, buffer_packets=1, policy="backpressure"
+    )
+    res = simulate_link(
+        np.array([8, 8, 8, 8]), np.zeros(4, dtype=np.int64), spec
+    )
+    # No replay path on a backpressure link: admission order is delivery
+    # order, and every packet arrives exactly once.
+    np.testing.assert_array_equal(res.order, np.arange(4))
+    assert res.stats.drops_overflow == res.stats.retransmits == 0
+    assert res.stats.stall_ticks > 0
+    assert res.stats.buffer_high_water == 1
+
+
+def test_replay_budget_exhaustion_forces_delivery():
+    """A drop link whose replay budget runs dry must not lose the packet:
+    the final attempt waits for a slot instead (counted as ``forced``)."""
+    spec = LinkSpec(
+        rate_numer=1, rate_denom=4, buffer_packets=1, policy="drop",
+        rto=1, max_attempts=3,
+    )
+    res = simulate_link(
+        np.array([8, 8, 8, 8]), np.zeros(4, dtype=np.int64), spec
+    )
+    np.testing.assert_array_equal(np.sort(res.order), np.arange(4))
+    assert res.stats.forced > 0
+    assert res.stats.drops_overflow == res.stats.retransmits
+    assert res.stats.delivered == 4  # every key still crossed the wire
+
+
+def test_wire_duplicates_are_delivered_and_counted():
+    spec = LinkSpec(latency=1, dup_rate=1.0, rto=50)
+    res = simulate_link(
+        np.array([4, 4, 4]), np.array([0, 10, 20]), spec,
+        rng=np.random.default_rng(0),
+    )
+    assert res.stats.duplicates == 3
+    assert res.stats.delivered == 6
+    np.testing.assert_array_equal(np.sort(res.order), np.repeat(np.arange(3), 2))
+    assert np.all(res.ticks[1:] >= res.ticks[:-1])  # arrival-tick order
+
+
+def test_simulate_link_is_deterministic_for_a_seeded_rng():
+    spec = LinkSpec(
+        latency=3, rate_numer=2, rate_denom=1, buffer_packets=2,
+        loss_rate=0.3, dup_rate=0.2,
+    )
+    sizes = np.full(40, 8)
+    ready = np.arange(40) * 3
+    a = simulate_link(sizes, ready, spec, rng=np.random.default_rng(11))
+    b = simulate_link(sizes, ready, spec, rng=np.random.default_rng(11))
+    np.testing.assert_array_equal(a.order, b.order)
+    np.testing.assert_array_equal(a.ticks, b.ticks)
+    assert a.stats == b.stats
+
+
+def test_resequence_releases_in_order_and_skips_duplicates():
+    """The receiving hop's ARQ: packet i is released at the max arrival of
+    packets 0..i, and only a duplicate's first arrival counts."""
+    from repro.net.timing import LinkResult, LinkStats
+
+    #        packet:  2 arrives first, then 0, dup of 2, then 1
+    res = LinkResult(
+        order=np.array([2, 0, 2, 1]),
+        ticks=np.array([5, 7, 9, 12]),
+        stats=LinkStats(name="x"),
+    )
+    np.testing.assert_array_equal(resequence(3, res), [7, 12, 12])
+
+
+def test_link_spec_validation():
+    with pytest.raises(ValueError, match="policy"):
+        LinkSpec(policy="teleport")
+    with pytest.raises(ValueError, match="buffer_packets"):
+        LinkSpec(buffer_packets=0)
+    with pytest.raises(ValueError, match="loss_rate"):
+        LinkSpec(loss_rate=1.5)
+    with pytest.raises(ValueError, match="rto"):
+        LinkSpec(rto=0)
+    assert LinkSpec().is_ideal
+    assert not LinkSpec(latency=1).is_ideal
+    assert NetworkConfig().is_ideal
+    assert not NetworkConfig(switch_latency=1).is_ideal
+    # per-kind overrides
+    cfg = NetworkConfig(link=LinkSpec(latency=2), egress=LinkSpec(latency=9))
+    assert cfg.link_for("fabric").latency == 2
+    assert cfg.link_for("ingress").latency == 2
+    assert cfg.link_for("egress").latency == 9
+
+
+# ---------------------------------------------------------------------------
+# Regression anchor: the ideal network is byte- and tick-transparent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+def test_ideal_network_reproduces_timeless_pipeline(topo, topo_kw):
+    """NetworkConfig() (zero latency, infinite bandwidth, unbounded buffers,
+    lossless) must reproduce today's pipeline exactly: identical delivered
+    wire columns, identical output and passes — and the makespan equals
+    n − 1 ticks, the storage line rate's own drain time (the network adds
+    zero)."""
+    vals = TRACES["network"](2000, seed=3)
+    maxv = trace_max_value("network")
+    ref = _run(vals, maxv, topo, topo_kw)
+    got = _run(vals, maxv, topo, topo_kw, network=NetworkConfig())
+    np.testing.assert_array_equal(got.output, ref.output)
+    assert got.passes == ref.passes
+    np.testing.assert_array_equal(got.delivered.values, ref.delivered.values)
+    np.testing.assert_array_equal(got.delivered.seq, ref.delivered.seq)
+    np.testing.assert_array_equal(
+        got.delivered.segment_id, ref.delivered.segment_id
+    )
+    np.testing.assert_array_equal(got.delivered.flow_id, ref.delivered.flow_id)
+    assert got.network is not None
+    assert got.network.makespan_ticks == vals.size - 1
+    assert got.network.drops == 0
+    assert got.network.retransmits == 0
+    assert got.network.duplicates == 0
+    assert got.network.stall_ticks == 0
+    assert got.dup_packets_dropped == 0 and got.spilled_packets == 0
+
+
+def test_makespan_monotone_in_latency_and_bandwidth():
+    """Lossless configs order cleanly: more latency never finishes earlier,
+    more bandwidth never finishes later.  (Loss draws are event-order
+    dependent, so monotonicity is a lossless-fabric property.)"""
+    vals = TRACES["random"](3000, seed=5)
+    maxv = trace_max_value("random")
+
+    def makespan(**link_kw):
+        net = NetworkConfig(link=LinkSpec(**link_kw))
+        return _run(
+            vals, maxv, "leaf_spine", {"num_leaves": 3}, network=net
+        ).network.makespan_ticks
+
+    spans = [makespan(latency=lat) for lat in (0, 2, 8, 32, 128)]
+    assert spans == sorted(spans), f"latency sweep not monotone: {spans}"
+    # fastest → slowest: (numer, denom) keys per tick
+    rates = [(8, 1), (2, 1), (1, 1), (1, 3), (1, 9)]
+    spans = [makespan(rate_numer=nu, rate_denom=de) for nu, de in rates]
+    assert spans == sorted(spans), f"bandwidth sweep not monotone: {spans}"
+    # ... and under backpressure with a bounded buffer (stalls included).
+    spans = [
+        makespan(
+            latency=lat, rate_numer=2, rate_denom=1,
+            buffer_packets=2, policy="backpressure",
+        )
+        for lat in (0, 4, 16, 64)
+    ]
+    assert spans == sorted(spans), f"backpressure sweep not monotone: {spans}"
+
+
+# ---------------------------------------------------------------------------
+# Deterministic degenerate twins (named, seed-pinned)
+# ---------------------------------------------------------------------------
+
+
+def test_twin_single_packet_flow_exact_makespan():
+    """One flow, fewer keys than a payload — a single packet crosses every
+    link, so the makespan is exactly (n − 1) storage ticks + ingress
+    latency + switch processing + egress latency."""
+    vals = np.array([40, 10, 30, 20, 50], dtype=np.int64)
+    net = NetworkConfig(
+        ingress=LinkSpec(latency=3),
+        egress=LinkSpec(latency=5),
+        switch_latency=2,
+    )
+    res = run_pipeline(
+        vals, num_segments=SEGS, segment_length=LENGTH, num_flows=1,
+        payload_size=32, network=net, verify=True, seed=0,
+    )
+    assert res.network.makespan_ticks == (vals.size - 1) + 3 + 2 + 5
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+    ingress = [s for s in res.network.links if s.name.startswith("ingress")]
+    assert len(ingress) == 1 and ingress[0].packets == 1
+
+
+def test_twin_buffer_of_one_every_packet_overflows():
+    """buffer_packets=1 with all packets ready at once: every packet beyond
+    the head finds the buffer full and is NACKed at least once — packet i
+    drops exactly i times with a slow serializer and a long RTO (no RNG in
+    the overflow path, so the counts pin exactly)."""
+    spec = LinkSpec(
+        rate_numer=1, rate_denom=4, buffer_packets=1, policy="drop", rto=40
+    )
+    n = 6
+    res = simulate_link(
+        np.full(n, 8), np.zeros(n, dtype=np.int64), spec
+    )
+    np.testing.assert_array_equal(np.sort(res.order), np.arange(n))
+    assert res.stats.drops_overflow == n * (n - 1) // 2  # i drops for packet i
+    assert res.stats.retransmits == res.stats.drops_overflow
+    assert res.stats.forced == 0
+    assert res.stats.buffer_high_water == 1
+    # ... and the same policy end-to-end still sorts (seed-pinned).
+    vals = TRACES["network"](1500, seed=7)
+    net = NetworkConfig(
+        link=LinkSpec(
+            rate_numer=8, rate_denom=1, buffer_packets=1, policy="drop"
+        ),
+        seed=7,
+    )
+    res2 = run_pipeline(
+        vals, num_segments=SEGS, segment_length=LENGTH, num_flows=4,
+        payload_size=32, max_value=trace_max_value("network"),
+        network=net, verify=True, seed=7,
+    )
+    np.testing.assert_array_equal(res2.output, np.sort(vals))
+    assert res2.network.drops > 0 and res2.network.retransmits > 0
+
+
+def test_twin_all_packets_dropped_once():
+    """loss_rate=1.0 with max_attempts=2: every packet's first attempt is
+    lost on the wire and its retransmission (the last attempt, which always
+    lands) delivers it — exactly one drop and one retransmit per packet."""
+    spec = LinkSpec(latency=1, loss_rate=1.0, max_attempts=2, rto=5)
+    n = 12
+    res = simulate_link(
+        np.full(n, 4), np.arange(n, dtype=np.int64) * 4, spec,
+        rng=np.random.default_rng(0),
+    )
+    assert res.stats.drops_wire == n
+    assert res.stats.retransmits == n
+    np.testing.assert_array_equal(np.sort(res.order), np.arange(n))
+    # end-to-end: the whole fabric loses every packet once, output intact.
+    vals = TRACES["network"](1500, seed=2)
+    net = NetworkConfig(
+        link=LinkSpec(latency=1, loss_rate=1.0, max_attempts=2, rto=5),
+        seed=2,
+    )
+    res2 = run_pipeline(
+        vals, num_segments=SEGS, segment_length=LENGTH, num_flows=4,
+        payload_size=32, max_value=trace_max_value("network"),
+        network=net, verify=True, seed=2,
+    )
+    np.testing.assert_array_equal(res2.output, np.sort(vals))
+    total_pkts = sum(
+        s.packets for s in res2.network.links
+    )
+    assert res2.network.drops == total_pkts  # each dropped exactly once
+
+
+def test_twin_backpressure_deadlock_free_on_kary_tree():
+    """Tight buffers + backpressure on the 3-ary tree: links form a DAG and
+    admission only ever waits on a *downstream* departure, so the fabric
+    must drain — no deadlock, no drops, real stalls, byte-identical output.
+    Seed-pinned and re-run for determinism."""
+    vals = TRACES["random"](4000, seed=11)
+    net = NetworkConfig(
+        link=LinkSpec(
+            latency=2, rate_numer=1, rate_denom=2,
+            buffer_packets=1, policy="backpressure",
+        ),
+        seed=11,
+    )
+
+    def run_once():
+        return run_pipeline(
+            vals, topology="tree", branching=3, height=3,
+            num_segments=SEGS, segment_length=LENGTH, num_flows=9,
+            payload_size=32, max_value=trace_max_value("random"),
+            network=net, verify=True, seed=11,
+        )
+
+    res = run_once()
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+    assert res.network.stall_ticks > 0
+    assert res.network.drops == 0 and res.network.retransmits == 0
+    assert res.network.makespan_ticks > vals.size - 1  # backpressure costs time
+    again = run_once()
+    assert again.network.makespan_ticks == res.network.makespan_ticks
+    assert again.network.stall_ticks == res.network.stall_ticks
+
+
+def test_spill_recovery_with_tight_reorder_capacity():
+    """A long-RTO lossy egress delays retransmits far beyond the reorder
+    capacity: the server spills them out of band and the output is still
+    byte-identical (the spill only shortens runs — more merge work, same
+    bytes)."""
+    vals = TRACES["network"](5000, seed=7)
+    net = NetworkConfig(
+        link=LinkSpec(latency=2, loss_rate=0.15, dup_rate=0.05, rto=400),
+        seed=7,
+    )
+    res = run_pipeline(
+        vals, num_segments=SEGS, segment_length=LENGTH, num_flows=4,
+        payload_size=32, max_value=trace_max_value("network"),
+        network=net, reorder_capacity=2, verify=True, seed=7,
+    )
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+    assert res.spilled_packets > 0 and res.spilled_keys > 0
+    assert res.dup_packets_dropped > 0  # long-RTO duplicates reached the server
+
+
+def test_recovery_off_raises_on_lossy_egress():
+    """Forcing recovery=False restores the PR-4 detection contract: the raw
+    egress wire's duplicates fault loudly instead of healing."""
+    vals = TRACES["network"](5000, seed=7)
+    net = NetworkConfig(
+        link=LinkSpec(latency=2, loss_rate=0.2, dup_rate=0.3, rto=400),
+        seed=7,
+    )
+    with pytest.raises(ValueError, match="duplicate"):
+        run_pipeline(
+            vals, num_segments=SEGS, segment_length=LENGTH, num_flows=4,
+            payload_size=32, max_value=trace_max_value("network"),
+            network=net, recovery=False, seed=7,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Loss costs time, never keys: deterministic matrix + hypothesis sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+@pytest.mark.parametrize("policy", ("drop", "backpressure"))
+@pytest.mark.parametrize("buffer_packets", (1, 4, None))
+@pytest.mark.parametrize("loss", (0.0, 0.2))
+def test_lossy_delivery_matrix(topo, topo_kw, policy, buffer_packets, loss):
+    """Deterministic cross product (always runs, with or without
+    hypothesis): 20% wire loss, buffers down to a single packet, both
+    overflow policies, every topology — output and passes match the
+    lossless reference exactly."""
+    vals = TRACES["network"](1200, seed=13)
+    maxv = trace_max_value("network")
+    ref = _run(vals, maxv, topo, topo_kw)
+    net = NetworkConfig(
+        link=LinkSpec(
+            latency=2, rate_numer=4, rate_denom=1,
+            buffer_packets=buffer_packets, policy=policy,
+            loss_rate=loss, dup_rate=loss / 4,
+        ),
+        switch_latency=1,
+        seed=13,
+    )
+    got = _run(vals, maxv, topo, topo_kw, num_servers=2, network=net)
+    np.testing.assert_array_equal(got.output, ref.output)
+    assert got.passes == ref.passes
+    assert got.network.makespan_ticks >= vals.size - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    scenario=st.sampled_from(sorted(SCENARIOS)),
+    case=st.integers(min_value=0, max_value=len(TOPO_CASES) - 1),
+    loss=st.sampled_from((0.0, 0.02, 0.1, 0.2)),
+    dup=st.sampled_from((0.0, 0.05)),
+    buffer_packets=st.sampled_from((1, 2, 8, None)),
+    policy=st.sampled_from(("drop", "backpressure")),
+    num_servers=st.sampled_from((1, 2, 4)),
+    n=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_lossy_delivery_byte_identical_to_lossless(
+    scenario, case, loss, dup, buffer_packets, policy, num_servers, n, seed
+):
+    """Any loss rate ≤ 20%, any buffer ≥ 1, either overflow policy, any
+    scenario × topology × pool size: the delivered sorted output — and the
+    per-segment pass counts — are byte-identical to the lossless run."""
+    vals = SCENARIOS[scenario](n, seed=seed)
+    maxv = scenario_max_value(scenario)
+    topo, topo_kw = TOPO_CASES[case]
+    ref = _run(vals, maxv, topo, topo_kw, num_servers=1)
+    net = NetworkConfig(
+        link=LinkSpec(
+            latency=2,
+            rate_numer=4,
+            rate_denom=1,
+            buffer_packets=buffer_packets,
+            policy=policy,
+            loss_rate=loss,
+            dup_rate=dup,
+        ),
+        switch_latency=1,
+        seed=seed % 97,
+    )
+    got = _run(
+        vals, maxv, topo, topo_kw, num_servers=num_servers, network=net
+    )
+    np.testing.assert_array_equal(got.output, np.sort(vals))
+    np.testing.assert_array_equal(got.output, ref.output)
+    assert got.passes == ref.passes  # recovery reorders; runs are intact
+    assert got.network.makespan_ticks >= max(0, vals.size - 1)
