@@ -1,11 +1,11 @@
 """BENCH_*.json artifact schema: write, validate, and gate bench results.
 
 Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
-trajectory across PRs.  The schema (version 6) is hand-validated here — no
+trajectory across PRs.  The schema (version 7) is hand-validated here — no
 external dependency — and documented in README "Reproducing the numbers":
 
     {
-      "schema_version": 6,
+      "schema_version": 7,
       "bench": "net",
       "config":  {"n", "repeats", "segments", "length", "payload", "k",
                   "quick": bool, "seed": int},
@@ -75,6 +75,20 @@ external dependency — and documented in README "Reproducing the numbers":
                   "lossless_identical": bool}],  # byte-equal to lossless run
         "all_lossless_identical": bool,
         "crossover_keys_per_tick": float,  # fastest rate the network binds
+      },
+      "end_to_end": {           # whole-epoch device-residency sweep (v7)
+        "config": {"segments", "length", "payload", "n", "trace",
+                   "range_mode", "repeats",
+                   "topology": str, "branching": int, "height": int,
+                   "payload_cols": int,    # int64 payload columns attached
+                   "num_servers": int, "merge_backend": str},
+        "rows": [{"engine": str,           # "fused" | "device"
+                  "backend": str,          # kernel backend ("pallas")
+                  "seconds": float,        # min over warm repeats
+                  "keys_per_sec": float,
+                  "records_per_sec": float,  # key + payload row together
+                  "payload_cols": int}],
+        "speedup_device_vs_fused": float,  # one program vs per-hop dispatch
       }
     }
 
@@ -88,12 +102,14 @@ on the 1M-key makespan (ISSUE 4), the run-arena merge engine at least
 the recording tracer at most ``--max-trace-overhead``× the null-tracer
 pipeline on the 1M-key wire (ISSUE 6), and — under the network timing
 sweep's loss and buffer grid — every cell's delivered output byte-identical
-to the lossless run (``--require-lossless-identical``, ISSUE 7):
+to the lossless run (``--require-lossless-identical``, ISSUE 7), and the
+whole-epoch ``device`` engine at least ``--min-e2e-speedup``× the per-hop
+fused path's keys/sec on the 10M-key payload-attached tree run (ISSUE 8):
 
     python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \\
         --min-hop-speedup 3.0 --min-server-scaling 1.0 \\
         --min-server-speedup 2.0 --max-trace-overhead 1.10 \\
-        --require-lossless-identical
+        --require-lossless-identical --min-e2e-speedup 2.0
 """
 
 from __future__ import annotations
@@ -106,7 +122,7 @@ try:
 except ImportError:  # pragma: no cover - python -m benchmarks.emit
     from benchmarks import _bootstrap  # noqa: F401
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 _CONFIG_FIELDS = {
     "n": int,
@@ -218,6 +234,27 @@ _NETWORK_ROW_FIELDS = {
 _NETWORK_POLICIES = {"drop", "backpressure"}
 
 _BOTTLENECKS = {"network", "compute"}
+
+_E2E_CONFIG_FIELDS = dict(
+    _SCALING_CONFIG_FIELDS,
+    topology=str,
+    branching=int,
+    height=int,
+    payload_cols=int,
+    num_servers=int,
+    merge_backend=str,
+)
+
+_E2E_ROW_FIELDS = {
+    "engine": str,
+    "backend": str,
+    "seconds": float,
+    "keys_per_sec": float,
+    "records_per_sec": float,
+    "payload_cols": int,
+}
+
+_E2E_ENGINES = {"fused", "device"}
 
 
 def _check_type(path: str, value, want: type) -> None:
@@ -484,6 +521,55 @@ def validate_net_bench(doc: dict) -> None:
     )
     if net["crossover_keys_per_tick"] < 0:
         raise ValueError("$.network_sweep.crossover_keys_per_tick: negative")
+    e2e = doc.get("end_to_end")
+    _check_type("$.end_to_end", e2e, dict)
+    _check_type("$.end_to_end.config", e2e.get("config"), dict)
+    for key, want in _E2E_CONFIG_FIELDS.items():
+        if key not in e2e["config"]:
+            raise ValueError(f"$.end_to_end.config.{key}: missing")
+        _check_type(f"$.end_to_end.config.{key}", e2e["config"][key], want)
+    if e2e["config"]["range_mode"] not in _RANGE_MODES:
+        raise ValueError(
+            f"$.end_to_end.config.range_mode: "
+            f"{e2e['config']['range_mode']!r} not in {sorted(_RANGE_MODES)}"
+        )
+    if e2e["config"]["merge_backend"] not in _MERGE_BACKENDS:
+        raise ValueError(
+            f"$.end_to_end.config.merge_backend: "
+            f"{e2e['config']['merge_backend']!r} not in "
+            f"{sorted(_MERGE_BACKENDS)}"
+        )
+    if e2e["config"]["payload_cols"] < 1:
+        raise ValueError("$.end_to_end.config.payload_cols: < 1")
+    _check_type("$.end_to_end.rows", e2e.get("rows"), list)
+    engines = set()
+    for i, row in enumerate(e2e["rows"]):
+        _check_type(f"$.end_to_end.rows[{i}]", row, dict)
+        for key, want in _E2E_ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.end_to_end.rows[{i}].{key}: missing")
+            _check_type(f"$.end_to_end.rows[{i}].{key}", row[key], want)
+        if row["engine"] not in _E2E_ENGINES:
+            raise ValueError(
+                f"$.end_to_end.rows[{i}].engine: {row['engine']!r} not in "
+                f"{sorted(_E2E_ENGINES)}"
+            )
+        if (row["seconds"] <= 0 or row["keys_per_sec"] <= 0
+                or row["records_per_sec"] <= 0):
+            raise ValueError(f"$.end_to_end.rows[{i}]: non-positive timing")
+        engines.add(row["engine"])
+    if engines != _E2E_ENGINES:
+        raise ValueError(
+            f"$.end_to_end.rows: engines {sorted(engines)} != "
+            f"{sorted(_E2E_ENGINES)}"
+        )
+    _check_type(
+        "$.end_to_end.speedup_device_vs_fused",
+        e2e.get("speedup_device_vs_fused"),
+        float,
+    )
+    if e2e["speedup_device_vs_fused"] <= 0:
+        raise ValueError("$.end_to_end.speedup_device_vs_fused: <= 0")
 
 
 def hop_speedup(doc: dict) -> float:
@@ -514,10 +600,15 @@ def lossy_cells_not_identical(doc: dict) -> list[dict]:
     ]
 
 
+def e2e_speedup(doc: dict) -> float:
+    """The artifact's whole-epoch-device-vs-per-hop-fused keys/sec ratio."""
+    return float(doc["end_to_end"]["speedup_device_vs_fused"])
+
+
 def write_net_bench(
     path: str, config: dict, results: list[dict], hop_throughput: dict,
     server_scaling: dict, server_throughput: dict, telemetry: dict,
-    network_sweep: dict,
+    network_sweep: dict, end_to_end: dict,
 ) -> dict:
     """Assemble, validate, and write a net-bench artifact; return the doc."""
     doc = {
@@ -530,6 +621,7 @@ def write_net_bench(
         "server_throughput": server_throughput,
         "telemetry": telemetry,
         "network_sweep": network_sweep,
+        "end_to_end": end_to_end,
     }
     validate_net_bench(doc)
     with open(path, "w") as fh:
@@ -606,6 +698,12 @@ def main() -> None:
         "byte-identical to the lossless run — loss costs time, never keys "
         "(ISSUE 7 acceptance)",
     )
+    ap.add_argument(
+        "--min-e2e-speedup", type=float, default=None,
+        help="gate: the whole-epoch device engine must sustain at least "
+        "this many times the per-hop fused path's keys/sec on the 10M-key "
+        "payload-attached tree run (ISSUE 8 acceptance: 2.0)",
+    )
     args = ap.parse_args()
     with open(args.artifact) as fh:
         doc = json.load(fh)
@@ -666,6 +764,16 @@ def main() -> None:
                 f"lossless output (first: rate "
                 f"{worst['rate_numer']}/{worst['rate_denom']}, buffer "
                 f"{worst['buffer_packets']})"
+            )
+    if args.min_e2e_speedup is not None:
+        speedup = e2e_speedup(doc)
+        ok = speedup >= args.min_e2e_speedup
+        status = "OK" if ok else "FAIL"
+        print(f"  end-to-end device/fused: {speedup:.2f}x {status}")
+        if not ok:
+            raise SystemExit(
+                f"whole-epoch device engine is only {speedup:.2f}x the "
+                f"per-hop fused path (need {args.min_e2e_speedup}x)"
             )
     if args.min_sampled_ratio is not None:
         ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))

@@ -46,12 +46,22 @@ network makespan, the server makespan, sorted keys/sec through the
 slower of the two, and which side bottlenecks (the compute↔network
 crossover), with every cell's output asserted byte-identical to the
 timeless lossless run, which ``--require-lossless-identical`` gates in
-CI.  All RNG (trace synthesis, interleave, control plane, wire loss)
-derives from ``--seed``, so an artifact reproduces across invocations.
+CI; and the **end-to-end device-residency sweep** (schema v7): the full
+tree fabric at 10M keys with a 2-column int64 payload attached, once per
+whole-epoch engine — the per-hop fused path on the Pallas backend (one
+host↔device round-trip *per hop*) vs the ``device`` engine (one compiled
+epoch program, keys resident from ingest to the run-arena tournament,
+exactly one transfer each way) — outputs and gathered payloads asserted
+byte-identical, keys/sec and records/sec per engine, and their speedup
+ratio, which ``--min-e2e-speedup`` gates in CI.  Every device-path timer
+stops its clock only after ``jax.block_until_ready`` (async dispatch
+otherwise credits device work to whoever touches the buffer next).  All
+RNG (trace synthesis, interleave, control plane, wire loss) derives from
+``--seed``, so an artifact reproduces across invocations.
 
 Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
             [--faithful-check] [--hop-n N] [--scaling-n N] [--server-n N]
-            [--telemetry-n N] [--network-n N] [--seed S]
+            [--telemetry-n N] [--network-n N] [--e2e-n N] [--seed S]
             [--out BENCH_net.json]
 """
 
@@ -149,6 +159,107 @@ NETWORK_RATES = (
 )  # keys/tick
 NETWORK_BUFFERS = (0, 4, 1)  # output-buffer packets
 NETWORK_BENCH = dict(SCALING_BENCH, loss_rate=0.02, policy="drop")
+
+# End-to-end device-residency sweep (schema v7 `end_to_end`): the deepest
+# stock fabric (tree, 7 hops) at 10M keys with a 2-column int64 payload
+# riding as packed key+row-index records, drained by the 4-server arena
+# pool.  Both engines are the whole production path; the only variable is
+# where the epoch lives — the fused engine re-enters Python and pays a
+# host↔device round-trip at every hop, the device engine lowers the whole
+# topological stage order into one jitted program with donated buffers.
+# CI gates device >= 2x fused keys/sec.
+E2E_ENGINES = (("fused", "pallas"), ("device", "pallas"))
+E2E_BENCH = dict(
+    SCALING_BENCH,
+    topology="tree", branching=2, height=3,
+    payload_cols=2, num_servers=4, merge_backend="arena",
+)
+
+
+def _sync(x):
+    """Block until device work behind ``x`` is done; return ``x``.
+
+    Timer hygiene for the device paths: jax dispatches asynchronously, so a
+    ``perf_counter`` delta that does not block first credits the kernel time
+    to whichever later host op touches the buffer.  Numpy arrays (already
+    host-resident) pass through untouched.
+    """
+    import jax
+
+    if isinstance(x, np.ndarray):
+        return x
+    return jax.block_until_ready(x)
+
+
+def end_to_end(n: int, repeats: int, seed: int = 0) -> dict:
+    """Keys/sec through the whole fabric per epoch engine, payload attached.
+
+    One warm-up run per engine pays the jit compiles (the device engine
+    caches its epoch program per (graph, spec, shapes)); the timed repeats
+    then measure the steady state the paper's deployment runs in.  Outputs,
+    pass counts, and gathered payloads are asserted byte-identical between
+    engines and against the stable-sort oracle.
+    """
+    cfg = dict(E2E_BENCH, n=n, repeats=repeats)
+    trace = TRACES[cfg["trace"]](n, seed=seed)
+    maxv = trace_max_value(cfg["trace"])
+    payload = np.empty((n, cfg["payload_cols"]), dtype=np.int64)
+    payload[:, 0] = trace * 7 + 3
+    payload[:, 1] = np.arange(n)
+    kw = dict(
+        topology=cfg["topology"],
+        branching=cfg["branching"],
+        height=cfg["height"],
+        num_segments=cfg["segments"],
+        segment_length=cfg["length"],
+        max_value=maxv,
+        payload_size=cfg["payload"],
+        num_flows=8,
+        k=K,
+        range_mode=cfg["range_mode"],
+        num_servers=cfg["num_servers"],
+        merge_backend=cfg["merge_backend"],
+        payload=payload,
+        seed=seed,
+    )
+    expected = np.sort(trace)
+    order = np.argsort(trace, kind="stable")
+    rows = []
+    by_engine: dict[str, float] = {}
+    ref_passes = None
+    for engine, backend in E2E_ENGINES:
+        _sync(run_pipeline(trace, engine=engine, backend=backend, **kw).output)
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = run_pipeline(trace, engine=engine, backend=backend, **kw)
+            _sync(res.output)
+            _sync(res.sorted_payload)
+            times.append(time.perf_counter() - t0)
+        np.testing.assert_array_equal(res.output, expected)
+        np.testing.assert_array_equal(res.payload_row_order, order)
+        np.testing.assert_array_equal(res.sorted_payload, payload[order])
+        if ref_passes is None:
+            ref_passes = res.passes
+        else:
+            assert res.passes == ref_passes, "epoch engines disagree on passes"
+        secs = float(np.min(times))
+        by_engine[engine] = secs
+        rows.append(
+            {
+                "engine": engine,
+                "backend": backend,
+                "seconds": secs,
+                "keys_per_sec": n / secs,
+                "records_per_sec": n / secs,
+                "payload_cols": int(cfg["payload_cols"]),
+            }
+        )
+    return {
+        "config": cfg,
+        "rows": rows,
+        "speedup_device_vs_fused": by_engine["fused"] / by_engine["device"],
+    }
 
 
 def hop_throughput(n: int, repeats: int, seed: int = 0) -> dict:
@@ -281,6 +392,7 @@ def server_throughput(n: int, repeats: int, seed: int = 0) -> dict:
             t0 = time.perf_counter()
             server.ingest_batch(delivered)
             out, passes = server.finish()
+            out = _sync(out)  # arena backend: device-resident tournament
             times.append(time.perf_counter() - t0)
         np.testing.assert_array_equal(out, expected)
         if ref is None:
@@ -550,6 +662,19 @@ def main() -> None:
         "the tick-counted network makespan is deterministic)",
     )
     ap.add_argument(
+        "--e2e-n", type=int, default=10_000_000,
+        help="trace size for the end-to-end device-residency sweep (the "
+        "ISSUE gate cell is 10M keys with payload attached; not reduced "
+        "by --quick — per-hop dispatch overhead only shows at scale)",
+    )
+    ap.add_argument(
+        "--e2e-repeats", type=int, default=1,
+        help="timed repeats for the end-to-end sweep (min-time wins; a "
+        "separate warm-up run per engine pays the jit compiles first, so "
+        "one warm repeat suffices — the per-hop fused run is ~7 minutes "
+        "at 10M keys; raise for tighter timings)",
+    )
+    ap.add_argument(
         "--seed", type=int, default=0,
         help="base RNG seed: trace synthesis (offset per workload), flow "
         "interleave, and control-plane sampling all derive from it, so a "
@@ -752,6 +877,21 @@ def main() -> None:
         flush=True,
     )
 
+    e2e = end_to_end(args.e2e_n, args.e2e_repeats, seed=args.seed)
+    for r in e2e["rows"]:
+        emit(
+            f"e2e_{r['engine']}_{e2e['config']['topology']}",
+            r["seconds"] * 1e6,
+            f"keys_per_sec={r['keys_per_sec']:.0f};"
+            f"records_per_sec={r['records_per_sec']:.0f};"
+            f"payload_cols={r['payload_cols']};n={e2e['config']['n']}",
+        )
+    print(
+        f"# end-to-end speedup device vs fused (per-hop): "
+        f"{e2e['speedup_device_vs_fused']:.2f}x",
+        flush=True,
+    )
+
     if args.out:
         config = {
             "n": n,
@@ -766,7 +906,7 @@ def main() -> None:
         write_net_bench(
             args.out, config, rows, hop_throughput=hop,
             server_scaling=scaling, server_throughput=server,
-            telemetry=telemetry, network_sweep=network,
+            telemetry=telemetry, network_sweep=network, end_to_end=e2e,
         )
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 

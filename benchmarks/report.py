@@ -10,9 +10,11 @@ Two artifact kinds, detected by shape:
   egress server-pool scaling sweep (makespan per pool size), the server
   merge-backend sweep (numpy ladder vs run-arena keys/sec), the
   telemetry-overhead sweep (null tracer vs recording tracer vs INT
-  columns, with the traced run's per-hop time/keys breakdown), and the
+  columns, with the traced run's per-hop time/keys breakdown), the
   network timing sweep (sorted keys/sec per link rate × buffer depth,
-  locating the compute↔network crossover).
+  locating the compute↔network crossover), and the end-to-end
+  device-residency sweep (whole-epoch compiled device engine vs the
+  per-hop fused path at 10M keys with payload records attached).
 
     PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
     PYTHONPATH=src:. python -m benchmarks.report BENCH_net.json
@@ -251,6 +253,27 @@ def render_net(doc: dict) -> str:
         f"{'yes' if net['all_lossless_identical'] else 'NO'}; the network "
         f"binds at <= {net['crossover_keys_per_tick']:.2f} keys/tick "
         f"(unbounded buffer)"
+    )
+    e2e = doc["end_to_end"]
+    xc = e2e["config"]
+    out += [
+        "",
+        f"## end-to-end device residency ({xc['trace']} trace, n={xc['n']}, "
+        f"{xc['topology']} fabric, {xc['segments']}x{xc['length']} switch, "
+        f"{xc['payload_cols']}-col int64 payload, "
+        f"{xc['num_servers']}-server {xc['merge_backend']} pool)",
+        "",
+        "| engine | backend | seconds | keys/sec | records/sec |",
+        "|---|---|---|---|---|",
+    ]
+    for r in e2e["rows"]:
+        out.append(
+            f"| {r['engine']} | {r['backend']} | {r['seconds']:.3f} "
+            f"| {r['keys_per_sec']:,.0f} | {r['records_per_sec']:,.0f} |"
+        )
+    out.append(
+        f"\nwhole-epoch device vs per-hop fused: "
+        f"{e2e['speedup_device_vs_fused']:.2f}x"
     )
     return "\n".join(out)
 

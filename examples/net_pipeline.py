@@ -6,10 +6,22 @@ packet arrival and never holds the unsorted stream in memory.
 
     python examples/net_pipeline.py [--n 400000] [--trace drifting]
         [--topology single|leaf_spine|tree] [--interleave bursty]
+        [--engine fused|segment|faithful|device] [--payload-bytes 16]
         [--jitter 8] [--ranges static|oracle|sampled] [--servers 4]
         [--merge-backend numpy|arena] [--trace-out out.json] [--metrics]
         [--link-latency 2] [--link-rate 4/1] [--buffer 4]
         [--loss-rate 0.02] [--loss-policy drop|backpressure]
+
+``--engine`` picks the hop implementation at every switch: the production
+``fused`` batched engine, the per-segment ``segment`` loops, the
+element-at-a-time ``faithful`` Alg. 3 (slow — small ``--n``), or the
+whole-epoch compiled ``device`` program (one jitted program for the whole
+fabric, keys device-resident from ingest to the run-arena tournament,
+exactly one host↔device transfer each way).  ``--payload-bytes N``
+attaches an N-byte payload to every key — carried as packed key+row-index
+records through the fabric (``fused``/``device`` only) and gathered
+exactly once at egress — and the summary line reports keys/sec and
+records/sec through the full pipeline.
 
 ``--servers S`` shards the egress across a segment-affinity pool of S
 independent streaming servers (the paper's "sort each range separately and
@@ -42,6 +54,7 @@ never keys.
 
 import argparse
 import json
+import time
 
 import numpy as np
 
@@ -71,6 +84,17 @@ def main() -> None:
                     choices=["single", "leaf_spine", "tree"])
     ap.add_argument("--interleave", default="bursty",
                     choices=["round_robin", "bursty", "weighted_fair"])
+    ap.add_argument("--engine", default="fused",
+                    choices=["fused", "segment", "faithful", "device"],
+                    help="hop implementation: fused batched (default), "
+                    "per-segment loops, element-at-a-time faithful Alg. 3, "
+                    "or the whole-epoch compiled device program (one jitted "
+                    "program per fabric, one host<->device transfer each way)")
+    ap.add_argument("--payload-bytes", type=int, default=0, metavar="N",
+                    help="attach an N-byte payload to every key (rounded up "
+                    "to whole int64 columns); rides as packed key+row-index "
+                    "records and is gathered once at egress "
+                    "(fused/device engines only)")
     ap.add_argument("--segments", type=int, default=16)
     ap.add_argument("--length", type=int, default=64)
     ap.add_argument("--payload", type=int, default=256)
@@ -158,15 +182,30 @@ def main() -> None:
         else {}
     )
 
+    payload = None
+    if args.payload_bytes > 0:
+        cols = -(-args.payload_bytes // 8)  # whole int64 columns
+        payload = np.empty((trace.size, cols), dtype=np.int64)
+        payload[:, 0] = trace * 7 + 3
+        for c in range(1, cols):
+            payload[:, c] = np.arange(trace.size) + c
+        print(
+            f"payload: {args.payload_bytes} bytes/key "
+            f"({cols} int64 column(s)), gathered once at egress"
+        )
+
     out, passes, t_plain = plain_stream_sort(trace, args.payload)
     np.testing.assert_array_equal(out, np.sort(trace))
     print(f"no switch: server {t_plain:.3f}s, {passes[0]} merge passes")
 
     tracer = Tracer() if args.trace_out else None
     metrics = MetricsRegistry() if args.metrics else None
+    t_wall = time.perf_counter()
     res = run_pipeline(
         trace,
         topology=args.topology,
+        engine=args.engine,
+        payload=payload,
         interleave_mode=args.interleave,
         num_segments=args.segments,
         segment_length=args.length,
@@ -185,18 +224,25 @@ def main() -> None:
         verify=True,
         **topo_kw,
     )
+    t_wall = time.perf_counter() - t_wall
     egress = (
         "server" if args.servers == 1
         else f"{args.servers}-server pool makespan"
     )
     print(
-        f"{args.topology} fabric ({len(res.hop_stats)} hops, "
+        f"{args.topology} fabric ({args.engine} engine, "
+        f"{len(res.hop_stats)} hops, "
         f"{args.interleave} arrivals, jitter {args.jitter}, "
         f"{res.range_mode} ranges, {res.num_epochs} epoch(s), "
         f"{args.merge_backend} merge): "
         f"{egress} {res.server_seconds:.3f}s, max {max(res.passes)} passes "
         f"-> {100 * (1 - res.server_seconds / t_plain):.1f}% faster"
     )
+    rate = trace.size / t_wall
+    summary = f"pipeline wall {t_wall:.3f}s, {rate:,.0f} keys/sec"
+    if payload is not None:
+        summary += f", {rate:,.0f} records/sec ({args.payload_bytes} B payload)"
+    print(summary)
     if args.servers > 1:
         for s, (secs, keys) in enumerate(
             zip(res.per_server_seconds, res.server_keys)
@@ -251,6 +297,11 @@ def main() -> None:
             f"wrote {args.trace_out} ({len(tracer.spans)} spans, "
             f"{len(tracer.instants)} instants) — open at ui.perfetto.dev"
         )
+    if payload is not None:
+        np.testing.assert_array_equal(
+            res.sorted_payload[:, 0], res.output * 7 + 3
+        )
+        print("payload row gathered with its key at egress ✓")
     print("output == np.sort(input) ✓")
 
 

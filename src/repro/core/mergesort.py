@@ -94,12 +94,16 @@ def _device_dtype(lo: int, hi: int) -> np.dtype | None:
 
     Mirrors :func:`repro.net.engine.pallas_row_sort`'s overflow rule: a real
     key at the sentinel would be indistinguishable from padding, so it drops
-    to the numpy ladder rather than lean on multiset arguments.
+    to the numpy ladder rather than lean on multiset arguments.  Keys beyond
+    int32 — the packed key+payload-row records of the device dataplane —
+    merge as int64, which the tournament runs under an x64 scope.
     """
     if 0 <= lo and hi < np.iinfo(np.uint16).max:
         return np.dtype(np.uint16)
     if np.iinfo(np.int32).min < lo and hi < np.iinfo(np.int32).max:
         return np.dtype(np.int32)
+    if np.iinfo(np.int64).min < lo and hi < np.iinfo(np.int64).max:
+        return np.dtype(np.int64)
     return None
 
 
@@ -155,6 +159,14 @@ def merge_runs_flat(
         )
     from ..kernels import ops  # deferred: jax import is heavy
 
+    if dtype.itemsize == 8:
+        # 64-bit keys (packed key+payload-row records): the tournament must
+        # run under an x64 scope, or jax would silently truncate to int32.
+        from jax.experimental import enable_x64 as _merge_scope
+    else:
+        import contextlib
+
+        _merge_scope = contextlib.nullcontext
     pad = dtype.type(np.iinfo(dtype).max)
     # Vectorized next-pow2 (float64 log2 is exact for any realistic length).
     buckets = (2 ** np.ceil(np.log2(lengths))).astype(np.int64)
@@ -175,9 +187,10 @@ def merge_runs_flat(
             mat.flat[_ragged_gather(np.arange(P) * int(B), sl)] = buf[
                 _ragged_gather(starts[sel], sl)
             ]
-            merged = np.asarray(
-                ops.merge_tournament(mat, interpret=interpret)
-            )
+            with _merge_scope():
+                merged = np.asarray(
+                    ops.merge_tournament(mat, interpret=interpret)
+                )
             winners.append(merged[: int(sl.sum())])
     if len(winners) == 1:
         return winners[0].astype(np.int64)

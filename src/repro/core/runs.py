@@ -119,6 +119,36 @@ class RunArena:
             self._starts[self._num_runs : self._num_runs + r] = new_starts
             self._num_runs += r
 
+    def feed_runs(self, arr: np.ndarray, starts: np.ndarray) -> None:
+        """Append a payload whose run starts are already known.
+
+        The compiled-epoch dataplane detects run breaks on device as part
+        of the hop statistics, so its egress handoff carries ``starts``
+        (the payload-relative break positions, ``starts[0] == 0`` for a
+        non-empty payload) instead of making the arena re-scan the keys.
+        Identical to :meth:`feed` of the same array — the open run still
+        continues across the boundary when the first key does not descend.
+        """
+        arr = np.asarray(arr)
+        m = int(arr.size)
+        if m == 0:
+            return
+        starts = np.asarray(starts, dtype=np.int64)
+        if starts.size == 0 or int(starts[0]) != 0:
+            raise ValueError("run starts must begin at payload position 0")
+        opens_new = self._n == 0 or int(arr[0]) < int(self._buf[self._n - 1])
+        new_starts = starts + self._n
+        if not opens_new:
+            new_starts = new_starts[1:]
+        self._buf = self._grow(self._buf, self._n + m)
+        self._buf[self._n : self._n + m] = arr
+        self._n += m
+        r = int(new_starts.size)
+        if r:
+            self._starts = self._grow(self._starts, self._num_runs + r)
+            self._starts[self._num_runs : self._num_runs + r] = new_starts
+            self._num_runs += r
+
     @property
     def keys(self) -> np.ndarray:
         """The contiguous key buffer (a view; runs are adjacent slices)."""

@@ -136,6 +136,13 @@ def tournament_merge_array(x: jax.Array) -> jax.Array:
     P, B = x.shape
     if P & (P - 1) or B & (B - 1):
         raise ValueError(f"tournament shape must be powers of two, got {x.shape}")
+    if jnp.dtype(x.dtype).kind not in "iu":
+        # The row pads are the dtype max; only integer keys have a total
+        # order in which that sentinel is guaranteed maximal (float NaNs
+        # break the compare-exchange invariant silently).
+        raise TypeError(
+            f"tournament merges integer keys only, got dtype {x.dtype}"
+        )
     while x.shape[0] > 1:
         x = bitonic_merge_rows(x[0::2], x[1::2])
     return x[0]

@@ -28,6 +28,30 @@ def _next_pow2(n: int) -> int:
     return 1 << (int(n) - 1).bit_length()
 
 
+def _check_sort_keys(x, op: str) -> None:
+    """Key-dtype guard for the sorting/merging entry points.
+
+    The bitonic networks compare integer keys and use the dtype max as the
+    pad sentinel; float keys (NaN ordering) and non-numeric dtypes have no
+    such sentinel.  64-bit keys — the dataplane's packed key+payload-row
+    records — are valid but only under an x64 scope: without it jax would
+    silently truncate them to 32 bits at the jit boundary, so the guard
+    runs *before* dispatch and raises instead.
+    """
+    dtype = np.dtype(x.dtype)
+    if dtype.kind not in "iu":
+        raise TypeError(
+            f"{op} sorts integer keys only, got dtype {dtype}; the bitonic "
+            "network needs an integer pad sentinel"
+        )
+    if dtype.itemsize == 8 and not jax.config.jax_enable_x64:
+        raise TypeError(
+            f"{op}: 64-bit keys require an x64 scope "
+            "(jax.experimental.enable_x64()); without it the jit boundary "
+            "would silently truncate them to 32 bits"
+        )
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def blockwise_sort(
     x: jax.Array, block: int, interpret: bool | None = None
@@ -59,7 +83,6 @@ def _row_tile(rows: int, target: int = 8) -> int:
     return 1
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def sort_rows_padded(x: jax.Array, interpret: bool | None = None) -> jax.Array:
     """Row sort for an arbitrary row count: the fused hop engine's one
     device call per switch hop.
@@ -69,7 +92,19 @@ def sort_rows_padded(x: jax.Array, interpret: bool | None = None) -> jax.Array:
     to 1-row tiles whenever the row count is prime), sorts, and slices the
     padding back off.  Column count must be a power of two (the bitonic
     contract); ragged *columns* are the caller's padding, done once per hop.
+    Keys must be integers narrow enough for the active precision
+    (:func:`_check_sort_keys`) — the guard runs pre-dispatch so a 64-bit
+    column without an x64 scope raises instead of truncating.
     """
+    _check_sort_keys(x, "sort_rows_padded")
+    b = x.shape[1]
+    if b & (b - 1):
+        raise ValueError(f"column count must be a power of two, got {b}")
+    return _sort_rows_padded(x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _sort_rows_padded(x: jax.Array, interpret: bool | None = None) -> jax.Array:
     rows, b = x.shape
     if rows == 0:
         return x
@@ -121,7 +156,6 @@ def merge_rows(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def merge_tournament(x: jax.Array, interpret: bool | None = None) -> jax.Array:
     """Merge ``P`` padded sorted rows (P, B) into one sorted (P*B,) stream —
     the run-arena engine's one device call per segment.
@@ -140,9 +174,16 @@ def merge_tournament(x: jax.Array, interpret: bool | None = None) -> jax.Array:
     is orders of magnitude slower, which matters because this op backs a
     benchmarked server hot path (unlike the validation-only kernel tests).
     """
+    _check_sort_keys(x, "merge_tournament")
     P, B = x.shape
     if P & (P - 1) or B & (B - 1):
         raise ValueError(f"tournament shape must be powers of two, got {x.shape}")
+    return _merge_tournament(x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _merge_tournament(x: jax.Array, interpret: bool | None = None) -> jax.Array:
+    P, B = x.shape
     if _interpret_default(interpret) or P * B > bitonic.TOURNAMENT_MAX_ELEMS:
         return bitonic.tournament_merge_array(x)
     return bitonic.tournament_tiles(x, interpret=False)

@@ -5,8 +5,9 @@ packets (:mod:`packet`) carried as columnar :class:`~repro.net.wire.WireBatch`
 streams (:mod:`wire` — struct-of-arrays, one row per key), an arrival model
 interleaves concurrent flows (:mod:`flow`), one or more programmable switches
 partially sort in flight — fabrics are declarative hop-graphs
-(:mod:`topology`) whose hops run one of three property-tested-identical
-engines (:mod:`engine`: fused batched, per-segment legacy, faithful Alg. 3) —
+(:mod:`topology`) whose hops run one of four property-tested-identical
+engines (:mod:`engine`: fused batched, per-segment legacy, faithful Alg. 3,
+and the whole-epoch compiled ``device`` program of :mod:`device_epoch`) —
 under ranges dictated by the control plane (:mod:`control` — static
 equal-width, oracle quantile, or adaptive sampled with epoched mid-stream
 re-partitioning on batch columns), and a streaming compute server overlaps
@@ -30,6 +31,12 @@ from .control import (
     AdaptiveControlPlane,
     ControlPlane,
     ReservoirSampler,
+)
+from .device_epoch import (
+    DeviceDelivery,
+    device_hop,
+    device_self_check,
+    run_graph_device,
 )
 from .egress import ServerPool, segment_affinity
 from .engine import (
@@ -99,6 +106,10 @@ __all__ = [
     "AdaptiveControlPlane",
     "ControlPlane",
     "ReservoirSampler",
+    "DeviceDelivery",
+    "device_hop",
+    "device_self_check",
+    "run_graph_device",
     "ServerPool",
     "segment_affinity",
     "ENGINES",

@@ -1,0 +1,680 @@
+"""Whole-topology device residency: one compiled program per fabric epoch.
+
+The per-hop engines (:mod:`repro.net.engine`) realise the paper's line-rate
+claim one switch at a time, but the simulator still pays a host round-trip
+between every hop: route, rank, sort, packetize, materialize numpy columns,
+hand them to the next hop.  Related work (Cheetah; "Programmable Switch as a
+Parallel Computing Device") treats the *fabric* as one pipelined computing
+device — the jax_pallas analogue is this module: ``engine="device"`` lowers
+an entire :class:`~repro.net.topology.HopGraph` epoch — route → rank →
+padded segment block-sort → emission order → ship-order packetization at
+every hop, leaf→spine→egress in topological order, round-robin uplink
+merges included — into **one** jitted program with donated buffers.  Keys
+(and, in record mode, their payload row indices) enter the device once at
+ingest and leave once at egress; the transfer counters below prove it.
+
+Stage math (per hop, all static-shape jnp over ``n`` arrival keys):
+
+* route: ``searchsorted`` over the shared range bounds (the parse cascade);
+* rank: one stable argsort by segment + a scatter — grouping permutation,
+  per-segment counts/starts, per-arrival ranks;
+* block sort: every segment's L-blocks laid out as rows of one padded
+  ``(n//L + S, L)`` matrix.  Bare keys sort with ``jnp.sort`` — or with the
+  Pallas bitonic kernel (:func:`repro.kernels.ops.sort_rows_padded`) under
+  the same fallback rules as the per-hop fused path; record mode uses a
+  stable row argsort so each key's payload row follows it through the sort;
+* emission order: the slot→emission-index map built by two predicated
+  scatters (per-arrival emissions in arrival order, then the flush tails in
+  segment-major order — exactly Alg. 3's two flush passes);
+* wire order: a packet ships when its last key is emitted, vectorized as a
+  stable argsort of per-key ship indices (all keys of a packet share their
+  packet's ship index, so the stable sort reproduces the fused engine's
+  packet-granular permutation byte for byte);
+* uplink merge: the fair round-robin interleave is a stable argsort of
+  per-key packet ordinals over the parents' concatenated outputs.
+
+Byte-identity with the ``fused``/``segment``/``faithful`` engines — wire
+columns, HopStats scalars, and server pass counts — is pinned by
+``tests/test_device_epoch.py`` across the scenario × topology × range-mode
+matrix.
+
+Observability: with no tracer/metrics/network attached the program returns
+only the egress columns + per-hop stat scalars (one fetch).  When the run
+is observed, the *same single fetch* additionally carries every hop's
+output columns and per-key ship indices; the host then replays the
+bookkeeping — per-hop spans, metrics counters, and the
+:class:`~repro.net.timing.GraphTimer` emission cuts — over reconstructed
+:class:`~repro.net.wire.WireBatch` objects, so the timing overlay sees
+exactly what the per-hop loop would have shown it.
+
+The egress result is a :class:`DeviceDelivery`: a wire batch that also
+carries the segment-grouped emission streams and their run-break flags, so
+the server pool can feed each segment's run arena directly
+(:meth:`repro.net.egress.ServerPool.ingest_grouped`) without re-deriving
+packet boundaries or re-detecting runs on the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+from repro.obs.trace import NULL_TRACER
+
+from .engine import HopSpec, HopStats
+from .wire import (
+    WireBatch,
+    empty_batch,
+    merge_round_robin_batches,
+    split_by_flow,
+)
+
+#: Host↔device transfers performed by this module (one ``device_put`` of the
+#: ingress pytree in, one ``device_get`` of the result pytree out, per
+#: epoch).  The transfer-count acceptance check reads and resets these.
+TRANSFER_COUNTS = {"to_device": 0, "to_host": 0}
+
+#: Test/CI hook: force the Pallas block-sort kernel's interpret mode
+#: (None = the platform default chosen by :mod:`repro.kernels.ops`).
+KERNEL_INTERPRET: bool | None = None
+
+_PROGRAM_CACHE: dict = {}
+_PROGRAM_CACHE_MAX = 64
+
+
+def reset_transfer_counts() -> None:
+    TRANSFER_COUNTS["to_device"] = 0
+    TRANSFER_COUNTS["to_host"] = 0
+
+
+def _to_device(tree):
+    import jax
+
+    TRANSFER_COUNTS["to_device"] += 1
+    return jax.device_put(tree)
+
+
+def _fetch(tree):
+    import jax
+
+    TRANSFER_COUNTS["to_host"] += 1
+    return jax.device_get(tree)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DeviceDelivery(WireBatch):
+    """The device epoch's egress wire batch plus its grouped handoff view.
+
+    ``grouped_values`` is the egress hop's emitted stream grouped by
+    segment (each segment's slice is its emission-order stream — exactly
+    the order the server's reorder buffer would restore), ``seg_counts``
+    the per-segment key counts, and ``run_flags`` the maximal-ascending-run
+    start flags the device already computed for the hop statistics.  Any
+    row gather (``take``/``slice_keys``/jitter) degrades to a plain
+    :class:`WireBatch`, which makes the pool's fast-path condition a simple
+    ``isinstance``-free ``getattr`` check.
+    """
+
+    grouped_values: np.ndarray | None = None
+    grouped_rows: np.ndarray | None = None
+    seg_counts: np.ndarray | None = None
+    run_flags: np.ndarray | None = None
+
+
+# ---------------------------------------------------------------------------
+# Traced per-hop math
+# ---------------------------------------------------------------------------
+
+
+def _stable_perm(key, n: int):
+    """Permutation of ``jnp.argsort(key, stable=True)`` via one *key-only*
+    sort of ``(key << ibits) | index``.
+
+    The packed index is unique, so the plain sort's tie order equals the
+    stable argsort's arrival order exactly — but a monolithic-key sort is
+    several times faster than a variadic key+payload sort on the CPU/TPU
+    sort lowering, and this permutation is the hot operation of every hop
+    stage.  Requires non-negative keys and ``bits(key) + bits(n)`` ≤ 63,
+    which the program builder guarantees before choosing this path.
+    """
+    import jax.numpy as jnp
+
+    i64 = jnp.int64
+    ibits = max(1, (n - 1).bit_length()) if n > 1 else 1
+    packed = jnp.sort(
+        (key.astype(i64) << ibits) | jnp.arange(n, dtype=i64)
+    )
+    return packed & ((1 << ibits) - 1), packed >> ibits
+
+
+def _device_hop(vals, rows, bounds, S: int, L: int, P: int,
+                vbits: int, use_kernel: bool, interpret: bool | None):
+    """One hop, traced: returns the hop's wire columns + stat scalars.
+
+    ``vals``/``rows`` are the arrival stream (rows is None outside record
+    mode); every shape is static, so the whole epoch lowers to one XLA
+    program.  The math mirrors :func:`repro.core.marathon.marathon_emission`
+    + :func:`repro.net.engine._wire_from_grouped` exactly — see the module
+    docstring for the correspondence proof obligations.
+
+    ``vbits`` is the key domain's bit width (0 when packed sorts are
+    infeasible — huge domains fall back to stable argsorts, byte-identical
+    but slower).
+    """
+    import jax.numpy as jnp
+
+    i64 = jnp.int64
+    n = int(vals.shape[0])
+    packable = vbits > 0
+    seg = jnp.searchsorted(bounds, vals, side="right").astype(i64)
+    if packable:
+        order, seg_g = _stable_perm(seg, n)
+    else:
+        order = jnp.argsort(seg, stable=True)
+        seg_g = seg[order]
+    counts = jnp.bincount(seg, length=S).astype(i64)
+    starts = jnp.concatenate([jnp.zeros(1, i64), jnp.cumsum(counts)[:-1]])
+    q = jnp.arange(n, dtype=i64) - starts[seg_g]  # in-segment position
+    ranks = jnp.zeros(n, i64).at[order].set(q)
+    grouped = vals[order]
+
+    # -- block sort: rows of one padded (R, L) matrix -------------------
+    nblk = -(-counts // L)
+    blk_base = jnp.concatenate([jnp.zeros(1, i64), jnp.cumsum(nblk)[:-1]])
+    R = n // L + S  # static row budget; used rows are 0..sum(nblk)-1
+    row_of = blk_base[seg_g] + q // L
+    col_of = q % L
+    row_len = jnp.zeros(R, i64).at[row_of].add(1)
+    # Rows are (segment, block)-ordered and contiguous in grouped layout.
+    row_start = jnp.concatenate([jnp.zeros(1, i64), jnp.cumsum(row_len)[:-1]])
+    valid = jnp.arange(L, dtype=i64)[None, :] < row_len[:, None]
+    tgt = jnp.where(
+        valid, row_start[:, None] + jnp.arange(L, dtype=i64)[None, :], n
+    ).reshape(-1)
+    cbits = max(1, (L - 1).bit_length())
+    if rows is not None and packable and vbits + cbits <= 63:
+        # Record mode, packed: each cell carries ``(value << cbits) | col``
+        # so one key-only row sort both orders the values and tells every
+        # key which grouped slot it came from (``row_start[row] + col``) —
+        # the provenance gather that routes payload rows.  Pad cells keep
+        # the all-ones value with their own column in the low bits: they
+        # sort after every real key (ties with a real max-valued key break
+        # toward the real key's smaller column — the same stable tie-break
+        # as the fused engine's provenance lexsort) and land on dropped
+        # (``tgt == n``) output slots.
+        pad_val = (1 << vbits) - 1
+        cmask = (1 << cbits) - 1
+        cols = jnp.arange(L, dtype=i64)[None, :]
+        pk = jnp.broadcast_to((pad_val << cbits) | cols, (R, L))
+        pk = pk.at[row_of, col_of].set((grouped << cbits) | col_of)
+        spk = jnp.sort(pk, axis=1)
+        sorted_vals = spk >> cbits
+        src = jnp.clip(row_start[:, None] + (spk & cmask), 0, max(n - 1, 0))
+        stream = jnp.zeros(n + 1, i64).at[tgt].set(sorted_vals.reshape(-1))[:n]
+        src_slot = jnp.zeros(n + 1, i64).at[tgt].set(src.reshape(-1))[:n]
+        stream_rows = rows[order][src_slot]
+    elif rows is not None:
+        # Record mode, wide keys: a stable row argsort keeps the
+        # within-block arrival order on ties — the same tie-break as the
+        # fused engine's provenance lexsort — so payload rows follow their
+        # keys exactly.
+        pad = jnp.iinfo(i64).max
+        mat = jnp.full((R, L), pad, i64).at[row_of, col_of].set(grouped)
+        pmat = jnp.full((R, L), n, i64).at[row_of, col_of].set(
+            jnp.arange(n, dtype=i64)
+        )
+        perm = jnp.argsort(mat, axis=1, stable=True)
+        sorted_vals = jnp.take_along_axis(mat, perm, axis=1)
+        sorted_pos = jnp.take_along_axis(pmat, perm, axis=1)
+        stream = jnp.zeros(n + 1, i64).at[tgt].set(sorted_vals.reshape(-1))[:n]
+        src_slot = jnp.zeros(n + 1, i64).at[tgt].set(sorted_pos.reshape(-1))[:n]
+        stream_rows = rows[order][src_slot]
+    elif use_kernel:
+        from ..kernels import ops  # deferred: only when the backend asks
+
+        pad32 = jnp.iinfo(jnp.int32).max
+        mat32 = jnp.full((R, L), pad32, jnp.int32).at[row_of, col_of].set(
+            grouped.astype(jnp.int32)
+        )
+        sorted32 = ops.sort_rows_padded(mat32, interpret=interpret)
+        stream = jnp.zeros(n + 1, i64).at[tgt].set(
+            sorted32.astype(i64).reshape(-1)
+        )[:n]
+        stream_rows = None
+    else:
+        pad = jnp.iinfo(i64).max
+        mat = jnp.full((R, L), pad, i64).at[row_of, col_of].set(grouped)
+        sorted_vals = jnp.sort(mat, axis=1)
+        stream = jnp.zeros(n + 1, i64).at[tgt].set(sorted_vals.reshape(-1))[:n]
+        stream_rows = None
+
+    # -- emission order: slot → emission index --------------------------
+    emit_mask = ranks >= L
+    emit_slot = starts[seg] + ranks - L
+    emit_ord = jnp.cumsum(emit_mask).astype(i64) - 1
+    n_emitted = jnp.maximum(counts - L, 0)
+    n_emit_total = n_emitted.sum()
+    flush_mask = q >= n_emitted[seg_g]
+    flush_ord = n_emit_total + jnp.cumsum(flush_mask).astype(i64) - 1
+    eidx = (
+        jnp.zeros(n + 1, i64)
+        .at[jnp.where(emit_mask, emit_slot, n)]
+        .set(jnp.where(emit_mask, emit_ord, 0))
+        .at[jnp.where(flush_mask, jnp.arange(n, dtype=i64), n)]
+        .set(jnp.where(flush_mask, flush_ord, 0))
+    )[:n]
+
+    # -- wire order: packets ship at their last key's emission ----------
+    pkt_j = q // P
+    last_q = jnp.minimum((pkt_j + 1) * P, counts[seg_g]) - 1
+    ship_key = eidx[jnp.clip(starts[seg_g] + last_q, 0, max(n - 1, 0))]
+    if packable:
+        out_perm, _ = _stable_perm(ship_key, n)  # ship index < n: fits
+    else:
+        out_perm = jnp.argsort(ship_key, stable=True)
+    vals_out = stream[out_perm]
+    sid_out = seg_g[out_perm]
+    seq_out = pkt_j[out_perm]
+
+    # -- per-key packet ordinal (the next hop's round-robin turn) -------
+    if n:
+        chg = jnp.concatenate([
+            jnp.ones(1, bool),
+            (seq_out[1:] != seq_out[:-1]) | (sid_out[1:] != sid_out[:-1]),
+        ])
+        turn = jnp.cumsum(chg).astype(i64) - 1
+        seg_chg = jnp.concatenate([jnp.ones(1, bool), seg_g[1:] != seg_g[:-1]])
+        desc = jnp.concatenate([jnp.zeros(1, bool), stream[1:] < stream[:-1]])
+        brk = seg_chg | desc
+    else:
+        turn = jnp.zeros(0, i64)
+        brk = jnp.zeros(0, bool)
+
+    hop = {
+        "vals": vals_out,
+        "seq": seq_out,
+        "sid": sid_out,
+        "turn": turn,
+        "ship": ship_key[out_perm],
+        "counts": counts,
+        "runs": brk.sum().astype(i64),
+        "stream": stream,
+        "brk": brk,
+    }
+    if stream_rows is not None:
+        hop["rows"] = stream_rows[out_perm]
+        hop["stream_rows"] = stream_rows
+    return hop
+
+
+def _rr_merge(parts, carry_rows: bool, packable: bool):
+    """Round-robin uplink interleave, traced.
+
+    Parents concatenate in parent order; a stable argsort by per-key packet
+    ordinal then equals ``lexsort((pos, src, turn))`` — the exact order
+    :func:`repro.net.wire.merge_round_robin_batches` produces.  Packet
+    ordinals are bounded by the merged key count, so the packed key-only
+    sort (:func:`_stable_perm`) applies whenever the hop math is packable.
+    """
+    import jax.numpy as jnp
+
+    if len(parts) == 1:
+        p = parts[0]
+        return p["vals"], (p["rows"] if carry_rows else None)
+    turn = jnp.concatenate([p["turn"] for p in parts])
+    m = int(turn.shape[0])
+    if packable:
+        order, _ = _stable_perm(turn, m)
+    else:
+        order = jnp.argsort(turn, stable=True)
+    vals = jnp.concatenate([p["vals"] for p in parts])[order]
+    rows = None
+    if carry_rows:
+        rows = jnp.concatenate([p["rows"] for p in parts])[order]
+    return vals, rows
+
+
+def _epoch_program(graph, spec: HopSpec, ranges: np.ndarray,
+                   group_ns: tuple, carry_rows: bool, use_kernel: bool,
+                   interpret: bool | None, taps: bool):
+    """Build (or fetch from cache) the jitted whole-epoch program.
+
+    ``ranges`` participates in the key by value — HopSpec deliberately
+    excludes it from comparison, but two specs differing only in their
+    installed ranges compile different routing cascades.
+    """
+    key = (
+        graph, spec.num_segments, spec.segment_length, spec.payload_size,
+        ranges.tobytes(), group_ns, carry_rows, use_kernel, interpret,
+        taps,
+    )
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    S, L, P = spec.num_segments, spec.segment_length, spec.payload_size
+    bounds_np = np.ascontiguousarray(ranges[:, 1], dtype=np.int64)
+    nodes = graph.nodes
+    # Packed-sort feasibility: every stable permutation in the epoch rides
+    # a key-only sort of ``(key << bits(n)) | index`` when the domain is
+    # non-negative and key+index fit in 63 bits; otherwise vbits=0 selects
+    # the (byte-identical, slower) stable-argsort fallbacks.
+    vmax_dom = int(ranges[-1, 1]) - 1
+    n_total = int(sum(group_ns))
+    nbits = max(1, (n_total - 1).bit_length()) if n_total > 1 else 1
+    vbits = max(1, vmax_dom.bit_length())
+    if int(ranges[0, 0]) < 0 or vmax_dom < 0 or nbits > 31:
+        vbits = 0
+
+    def epoch_fn(ingress_vals, ingress_rows):
+        bounds = jnp.asarray(bounds_np)
+        hops = []
+        for node in nodes:
+            if node.parents:
+                vals, rows = _rr_merge(
+                    [hops[p] for p in node.parents], carry_rows, vbits > 0
+                )
+            else:
+                vals = ingress_vals[node.group]
+                rows = ingress_rows[node.group] if carry_rows else None
+            hops.append(
+                _device_hop(
+                    vals, rows, bounds, S, L, P, vbits, use_kernel, interpret
+                )
+            )
+        eg = hops[-1]
+        res = {
+            "vals": eg["vals"],
+            "seq": eg["seq"],
+            "sid": eg["sid"],
+            "counts": tuple(h["counts"] for h in hops),
+            "runs": tuple(h["runs"] for h in hops),
+            "stream": eg["stream"],
+            "brk": eg["brk"],
+        }
+        if carry_rows:
+            res["rows"] = eg["rows"]
+            res["stream_rows"] = eg["stream_rows"]
+        if taps:
+            res["taps"] = tuple(
+                {
+                    k: h[k]
+                    for k in (
+                        ("vals", "seq", "sid", "ship", "rows")
+                        if carry_rows
+                        else ("vals", "seq", "sid", "ship")
+                    )
+                }
+                for h in hops
+            )
+        return res
+
+    fn = jax.jit(epoch_fn, donate_argnums=(0, 1))
+    if len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
+        _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
+    _PROGRAM_CACHE[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Host orchestration
+# ---------------------------------------------------------------------------
+
+
+def _stats_from_device(name: str, counts: np.ndarray, runs: int,
+                       L: int) -> HopStats:
+    """HopStats scalars from the device-computed per-hop reductions —
+    field-for-field equal to :meth:`HopStats._from_grouped`'s scalars."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    runs = int(runs)
+    recirc = int(
+        np.where(
+            counts == 0,
+            0,
+            np.where((counts <= L) | (counts % L == 0), 1, 2),
+        ).sum()
+    )
+    return HopStats(
+        name=name,
+        arrivals=total,
+        segment_loads=counts,
+        load_imbalance=float(counts.max() / counts.mean()) if total else 1.0,
+        emitted_runs=runs,
+        mean_run_len=(total / runs) if runs else 0.0,
+        recirculations=recirc,
+    )
+
+
+def run_graph_device(
+    graph,
+    batch: WireBatch,
+    spec: HopSpec,
+    *,
+    tracer=None,
+    metrics=None,
+    int_telemetry: bool = False,
+    network=None,
+):
+    """Execute a fabric epoch as one compiled device program.
+
+    Drop-in for :func:`repro.net.topology.run_graph` with
+    ``engine="device"`` — same return contract, byte-identical outputs and
+    (scalar-)equal per-hop stats.  Exactly one host→device transfer (the
+    donated ingress buffers) and one device→host transfer (the result
+    pytree) happen per call, counted in :data:`TRANSFER_COUNTS`.
+    """
+    tr = tracer or NULL_TRACER
+    if int_telemetry or batch.int_meta is not None:
+        raise ValueError(
+            "engine 'device' does not support INT telemetry — the compiled "
+            "epoch never materializes the per-hop streams the stamp needs; "
+            "use the 'fused' engine for INT runs"
+        )
+    if len(batch) == 0:
+        # Nothing to compile for a drained epoch; the per-hop loop on an
+        # empty stream is already output- and stats-identical.
+        from .topology import run_graph
+
+        return run_graph(
+            graph, batch, spec, "fused",
+            tracer=tracer, metrics=metrics, network=network,
+        )
+    from jax.experimental import enable_x64
+
+    from ..core.partition import set_ranges
+
+    carry_rows = batch.row_index is not None
+    collect = network is not None or metrics is not None or tr.enabled
+    ingress = split_by_flow(batch, graph.num_groups)
+    group_ns = tuple(len(g) for g in ingress)
+    ranges = spec.ranges
+    if ranges is None:
+        ranges = set_ranges(spec.max_value, spec.num_segments)
+
+    # Domain check once at ingress (interior hops see the same multiset).
+    vmin = int(batch.values.min())
+    vmax = int(batch.values.max())
+    if vmin < int(ranges[0, 0]) or vmax >= int(ranges[-1, 1]):
+        raise ValueError("value outside the switch domain")
+    L = spec.segment_length
+    use_kernel = (
+        spec.backend == "pallas"
+        and not carry_rows
+        and L > 1
+        and not (L & (L - 1))
+        and vmin >= 0
+        and vmax < np.iinfo(np.int32).max
+    )
+
+    fn = _epoch_program(
+        graph, spec, ranges, group_ns, carry_rows, use_kernel,
+        KERNEL_INTERPRET, collect,
+    )
+    with enable_x64():
+        dev_args = _to_device((
+            tuple(np.ascontiguousarray(g.values) for g in ingress),
+            tuple(np.ascontiguousarray(g.row_index) for g in ingress)
+            if carry_rows
+            else (),
+        ))
+        with warnings.catch_warnings():
+            # The CPU backend cannot always reuse donated input buffers and
+            # says so; donation is a no-op there, not an error.  On real
+            # accelerators the ingress buffers are consumed in place.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            res = _fetch(fn(*dev_args))
+
+    n_out = int(res["vals"].size)
+    egress_flow = len(graph.nodes) - 1
+    stats = [
+        _stats_from_device(node.name, res["counts"][i], res["runs"][i], L)
+        for i, node in enumerate(graph.nodes)
+    ]
+    delivery = DeviceDelivery(
+        res["vals"],
+        np.full(n_out, egress_flow, dtype=np.int64),
+        res["seq"],
+        res["sid"],
+        epoch=batch.epoch,
+        row_index=res.get("rows"),
+        grouped_values=res["stream"],
+        grouped_rows=res.get("stream_rows"),
+        seg_counts=np.asarray(res["counts"][-1], dtype=np.int64),
+        run_flags=res["brk"],
+    )
+    if not collect:
+        return delivery, stats
+
+    # -- observed run: replay the per-hop bookkeeping from the taps -----
+    from .topology import _emitted_run_lengths
+
+    timer = None
+    if network is not None:
+        from .timing import GraphTimer
+
+        timer = GraphTimer(
+            graph, batch, network, tracer=tracer, metrics=metrics
+        )
+    outs: list[WireBatch] = []
+    for i, node in enumerate(graph.nodes):
+        tap = res["taps"][i]
+        out = WireBatch(
+            tap["vals"],
+            np.full(int(tap["vals"].size), i, dtype=np.int64),
+            tap["seq"],
+            tap["sid"],
+            epoch=batch.epoch,
+            row_index=tap.get("rows"),
+        )
+        if node.parents:
+            inp = merge_round_robin_batches([outs[p] for p in node.parents])
+        else:
+            inp = ingress[node.group]
+        with tr.span(
+            f"hop:{node.name}", cat="hop", keys=len(inp)
+        ) as hop_sp:
+            hop_sp.set(keys_out=len(out))
+        pstarts = out.packet_starts()
+        stats[i] = dataclasses.replace(
+            stats[i], ship_emission=np.asarray(tap["ship"])[pstarts]
+        )
+        st = stats[i]
+        if metrics is not None:
+            metrics.counter("hop_keys_in", node.name).inc(len(inp))
+            metrics.counter("hop_keys_out", node.name).inc(len(out))
+            metrics.counter("hop_packets_out", node.name).inc(out.num_packets)
+            metrics.counter("hop_recirculations", node.name).inc(
+                st.recirculations
+            )
+            metrics.gauge("hop_segment_loads", node.name).set(st.segment_loads)
+            metrics.gauge("hop_load_imbalance", node.name).set(
+                st.load_imbalance
+            )
+            metrics.histogram("hop_emitted_run_length", node.name).observe_many(
+                _emitted_run_lengths(out)
+            )
+        if timer is not None:
+            timer.after_hop(i, node, inp, out, st, outs)
+        outs.append(out)
+    if timer is not None:
+        delivered, report = timer.egress_deliver(outs[-1])
+        return delivered, stats, report
+    return delivery, stats
+
+
+def device_hop(
+    batch: WireBatch,
+    spec: HopSpec,
+    name: str,
+    *,
+    tracer=None,
+    hop_id: int = 0,
+    int_telemetry: bool = False,
+) -> tuple[WireBatch, HopStats]:
+    """Single-hop view of the compiled epoch (the ``run_hop`` contract:
+    output flow ids are 0; the graph scheduler restamps them)."""
+    del hop_id
+    from .topology import HopGraph, HopNode
+
+    if len(batch) == 0:
+        out = empty_batch(batch.epoch)
+        if batch.row_index is not None:
+            out = out.with_row_index(np.zeros(0, dtype=np.int64))
+        st = _stats_from_device(
+            name,
+            np.zeros(spec.num_segments, dtype=np.int64),
+            0,
+            spec.segment_length,
+        )
+        st = dataclasses.replace(
+            st, ship_emission=np.zeros(0, dtype=np.int64)
+        )
+        return out, st
+    graph = HopGraph((HopNode(name),), num_groups=1)
+    if int_telemetry or batch.int_meta is not None:
+        raise ValueError(
+            "engine 'device' does not support INT telemetry — use 'fused'"
+        )
+    out, stats = run_graph_device(graph, batch, spec, tracer=tracer)
+    return out, stats[0]
+
+
+def device_self_check(interpret: bool = True, n: int = 4096,
+                      seed: int = 0) -> None:
+    """CI probe: run a small epoch with the Pallas block-sort kernel forced
+    (``interpret=True`` exercises the kernel path on CPU-only runners) and
+    assert byte-identity against the fused per-hop engine.
+    """
+    global KERNEL_INTERPRET
+    from .topology import leaf_spine_graph, run_graph
+    from ..core.partition import set_ranges
+
+    rng = np.random.default_rng(seed)
+    max_value = (1 << 20) - 1
+    values = rng.integers(0, max_value + 1, n)
+    from .flow import interleave_batch, split_flows
+
+    arrivals = interleave_batch(split_flows(values, 4, 32), "round_robin")
+    spec = HopSpec(
+        8, 32, max_value, set_ranges(max_value, 8),
+        payload_size=32, backend="pallas",
+    )
+    graph = leaf_spine_graph(2)
+    ref, ref_stats = run_graph(graph, arrivals, spec, "fused")
+    prev = KERNEL_INTERPRET
+    KERNEL_INTERPRET = interpret
+    try:
+        out, stats = run_graph_device(graph, arrivals, spec)
+    finally:
+        KERNEL_INTERPRET = prev
+    np.testing.assert_array_equal(out.values, ref.values)
+    np.testing.assert_array_equal(out.seq, ref.seq)
+    np.testing.assert_array_equal(out.segment_id, ref.segment_id)
+    assert stats == ref_stats, "device stats diverge from fused"

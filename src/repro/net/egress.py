@@ -215,6 +215,56 @@ class ServerPool:
                 self.servers[s].ingest_batch(sub)
             self.per_server_seconds[s] += t.seconds
 
+    def ingest_grouped(
+        self,
+        values: np.ndarray,
+        seg_counts: np.ndarray,
+        run_flags: np.ndarray,
+    ) -> None:
+        """Segment-grouped handoff from the compiled-epoch dataplane.
+
+        ``values`` holds every segment's complete emission-order stream
+        contiguously (segment-ascending — the device program's grouped
+        layout), ``seg_counts`` the per-virtual-segment key counts, and
+        ``run_flags`` marks maximal-ascending-run starts within the grouped
+        stream (the device already computed them for the hop statistics).
+        Each server receives its segments as whole in-order streams via
+        :meth:`StreamingServer.ingest_segment` — byte-identical to demuxing
+        and re-assembling the equivalent packet wire, without touching
+        packet headers.  Single-epoch pools only: the multi-epoch handoff
+        interleaves epochs on the wire, which this layout cannot express.
+        """
+        if self.num_epochs != 1:
+            raise ValueError(
+                "grouped handoff supports single-epoch pools only"
+            )
+        values = np.asarray(values)
+        if values.size == 0:
+            return
+        seg_counts = np.asarray(seg_counts, dtype=np.int64)
+        if seg_counts.size != self.eff_segments:
+            raise ValueError(
+                f"seg_counts length {seg_counts.size} != "
+                f"{self.eff_segments} segments"
+            )
+        if int(seg_counts.sum()) != int(values.size):
+            raise ValueError("seg_counts do not sum to the stream length")
+        bounds = np.concatenate([[0], np.cumsum(seg_counts)])
+        flags = np.asarray(run_flags, dtype=bool)
+        for v in range(self.eff_segments):
+            a, b = int(bounds[v]), int(bounds[v + 1])
+            if a == b:
+                continue
+            s = int(self._affinity[v])
+            starts = np.flatnonzero(flags[a:b]).astype(np.int64)
+            with self._tr.timed(
+                f"server{s}:wall", cat="egress", tid=1 + s
+            ) as t:
+                self.servers[s].ingest_segment(
+                    int(self._local_of[v]), values[a:b], starts
+                )
+            self.per_server_seconds[s] += t.seconds
+
     # -- completion -----------------------------------------------------
     def finish(self) -> tuple[np.ndarray, list[int]]:
         """Drain every server; distributed-merge the shard outputs.

@@ -45,7 +45,9 @@ from .packet import DEFAULT_PAYLOAD, Packet
 from .wire import WireBatch, empty_batch, ragged_arange, ragged_gather
 
 #: Engine registry: how a hop turns an arrival batch into a wire batch.
-ENGINES = ("fused", "segment", "faithful")
+#: "device" lowers whole epochs to one compiled program
+#: (:mod:`repro.net.device_epoch`); the other three run per hop on the host.
+ENGINES = ("fused", "segment", "faithful", "device")
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +342,8 @@ def fused_hop(
         if int_telemetry or batch.int_meta is not None:
             depth = 0 if batch.int_meta is None else batch.int_meta.depth
             out = out.with_int_meta(IntColumns.empty(0, depth + 1))
+        if batch.row_index is not None:
+            out = out.with_row_index(np.zeros(0, dtype=np.int64))
         stats = dataclasses.replace(
             stats, ship_emission=np.zeros(0, dtype=np.int64)
         )
@@ -353,10 +357,38 @@ def fused_hop(
             em.streams, eidx, em.counts, spec.payload_size, batch.epoch
         )
     stats = dataclasses.replace(stats, ship_emission=ship)
-    if int_telemetry or batch.int_meta is not None:
-        with tr.span("int_stamp", cat="stage"):
-            out = _stamp_int(batch, em, out, idx, spec, hop_id)
+    want_int = int_telemetry or batch.int_meta is not None
+    if want_int or batch.row_index is not None:
+        in_rows = _provenance_rows(batch, em, idx, spec.segment_length)
+        if batch.row_index is not None:
+            out = out.with_row_index(batch.row_index[in_rows])
+        if want_int:
+            with tr.span("int_stamp", cat="stage"):
+                out = _stamp_int(batch, em, out, idx, spec, hop_id, in_rows)
     return out, stats
+
+
+def _provenance_rows(
+    batch: WireBatch,
+    em: MarathonEmission,
+    idx: np.ndarray,
+    L: int,
+) -> np.ndarray:
+    """Exact per-row provenance of a fused hop: ``in_rows[j]`` is the input
+    batch row whose key landed on output wire row ``j``.
+
+    Sorting grouped positions by (segment, block, key value, arrival
+    position) redoes the stable per-block value sort, so ``src`` maps sorted
+    grouped position → arrival grouped position, i.e.
+    ``em.streams == batch.values[em.order][src]``.  Both the INT telemetry
+    stamp and the payload row-index carry ride this one lexsort.
+    """
+    counts, starts = em.counts, em.starts
+    n = len(batch)
+    seg_of_pos = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+    pos = np.arange(n, dtype=np.int64) - starts[seg_of_pos]
+    src = np.lexsort((pos, batch.values[em.order], pos // L, seg_of_pos))
+    return em.order[src[idx]]
 
 
 def _stamp_int(
@@ -366,20 +398,12 @@ def _stamp_int(
     idx: np.ndarray,
     spec: HopSpec,
     hop_id: int,
+    in_rows: np.ndarray,
 ) -> WireBatch:
     """Append this hop's INT column, carrying the arrival stack forward."""
     counts, starts, L = em.counts, em.starts, spec.segment_length
     n = len(batch)
     seg_of_pos = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
-    pos = np.arange(n, dtype=np.int64) - starts[seg_of_pos]
-    # Within-block sort permutation, reconstructed exactly: sorting grouped
-    # positions by (segment, block, key value, arrival position) redoes the
-    # stable per-block value sort, so src maps sorted grouped position →
-    # arrival grouped position, i.e. em.streams == batch.values[em.order][src].
-    src = np.lexsort(
-        (pos, batch.values[em.order], pos // L, seg_of_pos)
-    )
-    in_rows = em.order[src[idx]]  # output wire row j ← input batch row
     sid_out = seg_of_pos[idx]
     # Register occupancy when each key left: its segment's keys not yet
     # emitted at that point, capped at the 2·L pipeline capacity.
@@ -400,6 +424,12 @@ def _reject_int(batch: WireBatch, int_telemetry: bool, engine: str) -> None:
             f"engine {engine!r} does not support INT telemetry — only the "
             "'fused' engine exposes the exact emission permutation the "
             "stamp needs"
+        )
+    if batch.row_index is not None:
+        raise ValueError(
+            f"engine {engine!r} cannot carry payload row indices — only the "
+            "'fused' and 'device' engines track per-key provenance through "
+            "the hop"
         )
 
 
@@ -556,10 +586,30 @@ def _pallas_block_sort(values: np.ndarray, block: int) -> np.ndarray:
     return out[:n].astype(np.int64)
 
 
+def _device_hop_entry(
+    batch: WireBatch,
+    spec: HopSpec,
+    name: str,
+    *,
+    tracer=None,
+    hop_id: int = 0,
+    int_telemetry: bool = False,
+) -> tuple[WireBatch, HopStats]:
+    """Single-hop view of the compiled-epoch engine (deferred import: the
+    device module pulls in jax, which is heavy and optional per hop)."""
+    from .device_epoch import device_hop
+
+    return device_hop(
+        batch, spec, name,
+        tracer=tracer, hop_id=hop_id, int_telemetry=int_telemetry,
+    )
+
+
 HOP_ENGINES = {
     "fused": fused_hop,
     "segment": segment_hop,
     "faithful": faithful_hop,
+    "device": _device_hop_entry,
 }
 
 

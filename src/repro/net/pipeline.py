@@ -99,6 +99,12 @@ class PipelineResult:
     dup_packets_dropped: int = 0
     spilled_packets: int = 0
     spilled_keys: int = 0
+    # Record mode (a payload table attached): the payload rows permuted
+    # into key order, and the stable sort permutation that produced them —
+    # ``sorted_payload = payload[payload_row_order]``, gathered exactly
+    # once at egress.  None for key-only runs.
+    sorted_payload: np.ndarray | None = None
+    payload_row_order: np.ndarray | None = None
 
 
 def jitter_delivery(
@@ -169,6 +175,7 @@ def run_pipeline(
     num_servers: int = 1,
     merge_backend: str = "numpy",
     pool_backend: str = "numpy",
+    payload: np.ndarray | None = None,
     verify: bool = False,
     tracer=None,
     metrics=None,
@@ -216,6 +223,15 @@ def run_pipeline(
     ``PipelineResult.network``; ``recovery`` can be forced on/off explicitly
     (off + a lossy egress link raises on the first duplicate — the PR-4
     detection behaviour).
+
+    ``payload`` attaches a record table (one row per key, any trailing
+    shape): the fabric sorts **records**, not bare keys.  The payload bytes
+    never ride the wire — each key carries its input-row index as a wire
+    column (``fused`` and ``device`` engines only), the server sorts keys
+    packed with their row (ties resolve by arrival order, i.e. a stable
+    sort), and the table is gathered exactly once at egress into
+    ``PipelineResult.sorted_payload``.  The key domain must leave room for
+    the row bits: ``max_value < 2**(63 - ceil(log2(n)))``.
     """
     values = np.asarray(values, dtype=np.int64)
     if max_value is None:
@@ -248,6 +264,35 @@ def run_pipeline(
     with tr.span("pipeline", cat="pipeline", n=int(values.size)):
         flows = split_flows(values, num_flows, payload_size)
         arrivals = interleave_batch(flows, interleave_mode, seed=seed)
+        nbits = 0
+        if payload is not None:
+            payload = np.asarray(payload)
+            if payload.shape[0] != int(values.size):
+                raise ValueError(
+                    f"payload rows {payload.shape[0]} != "
+                    f"{values.size} keys"
+                )
+            nbits = max(1, int(values.size - 1).bit_length())
+            if int(max_value) >= 1 << (63 - nbits):
+                raise ValueError(
+                    f"cannot pack {values.size} payload rows next to keys "
+                    f"up to {max_value} in 63 bits"
+                )
+            # Thread each key's input row through the same shard split and
+            # interleave schedule the keys took (the schedule depends only
+            # on flow sizes and the seed), so the row column lands on its
+            # key's arrival row.  The payload table itself stays put until
+            # the one egress gather.
+            rows = interleave_batch(
+                split_flows(
+                    np.arange(values.size, dtype=np.int64),
+                    num_flows,
+                    payload_size,
+                ),
+                interleave_mode,
+                seed=seed,
+            )
+            arrivals = arrivals.with_row_index(rows.values)
 
         def _run_topology(ranges: np.ndarray, batch: WireBatch):
             topo = make_topology(
@@ -348,11 +393,60 @@ def run_pipeline(
             tracer=tracer,
             metrics=metrics,
         )
-        pool.ingest_batch(delivered)
+        if payload is not None and delivered.row_index is None:
+            raise ValueError(
+                f"engine {engine!r} dropped the payload row column"
+            )
+        grouped = getattr(delivered, "grouped_values", None)
+        if (
+            grouped is not None
+            and not recovery
+            and (reorder_capacity is None or reorder_capacity >= 1)
+            and eff_segments == num_segments
+        ):
+            # Compiled-epoch fast path: the device delivery already carries
+            # each segment's emission stream and its run breaks — feed the
+            # arenas directly instead of re-deriving packet boundaries.
+            seg_counts = delivered.seg_counts
+            flags = np.asarray(delivered.run_flags, dtype=bool)
+            if payload is not None:
+                grouped = (grouped << nbits) | delivered.grouped_rows
+                # Row tie-breaks can split runs the key-only flags did not
+                # see; one vectorized compare re-detects them.
+                flags = np.zeros(grouped.size, dtype=bool)
+                seg_starts = np.concatenate([[0], np.cumsum(seg_counts)[:-1]])
+                flags[seg_starts[seg_counts > 0]] = True
+                flags[1:] |= grouped[1:] < grouped[:-1]
+            pool.ingest_grouped(grouped, seg_counts, flags)
+        elif payload is not None:
+            # Pack (key << rowbits) | row: key order is preserved and ties
+            # resolve by input row, so the server's merge is a stable sort
+            # of the records without ever touching the payload bytes.
+            pool.ingest_batch(
+                WireBatch(
+                    (delivered.values << nbits) | delivered.row_index,
+                    delivered.flow_id,
+                    delivered.seq,
+                    delivered.segment_id,
+                    epoch=delivered.epoch,
+                )
+            )
+        else:
+            pool.ingest_batch(delivered)
         out, passes = pool.finish()
+        row_order = None
+        sorted_payload = None
+        if payload is not None:
+            row_order = out & ((1 << nbits) - 1)
+            out = out >> nbits
+            sorted_payload = payload[row_order]
 
     if verify:
         np.testing.assert_array_equal(out, np.sort(values))
+        if payload is not None:
+            np.testing.assert_array_equal(
+                row_order, np.argsort(values, kind="stable")
+            )
 
     telemetry = None
     if metrics is not None or delivered.int_meta is not None:
@@ -388,6 +482,8 @@ def run_pipeline(
         dup_packets_dropped=pool.dup_packets_dropped,
         spilled_packets=pool.spilled_packets,
         spilled_keys=pool.spilled_keys,
+        sorted_payload=sorted_payload,
+        payload_row_order=row_order,
     )
 
 

@@ -284,6 +284,45 @@ class StreamingServer:
                         int(s), int(batch.seq[a]), batch.values[a:b]
                     )
 
+    def ingest_segment(
+        self,
+        sid: int,
+        values: np.ndarray,
+        run_starts: np.ndarray | None = None,
+    ) -> None:
+        """Whole-segment in-order handoff from the compiled-epoch dataplane.
+
+        ``values`` is the segment's complete emission-order stream for the
+        epoch — what the reorder buffer would have reassembled from the
+        segment's packets — so the packet machinery is skipped entirely.
+        ``run_starts`` (payload-relative, ``run_starts[0] == 0``) carries
+        the run boundaries the device already detected; the arena backend
+        consumes them via :meth:`repro.core.runs.RunArena.feed_runs`, other
+        backends re-detect (one vectorized compare).  Byte-identical to
+        ingesting the same stream packet by packet in order.
+        """
+        values = np.asarray(values)
+        m = int(values.size)
+        if m == 0:
+            return
+        if sid < 0 or sid >= self.num_segments:
+            raise ValueError(f"packet with invalid segment id {sid}")
+        if self._pending[sid] or self._spilled[sid]:
+            raise ValueError(
+                f"segment {sid} has buffered packets; the grouped handoff "
+                "requires a clean in-order stream"
+            )
+        with self._tr.span(
+            f"{self.name}:ingest", cat="server", tid=self.lane, keys=m
+        ):
+            # The packet path would have held one packet at a time.
+            self.max_reorder_depth = max(self.max_reorder_depth, 1)
+            if run_starts is not None and self._arenas is not None:
+                self._ingested += m
+                self._arenas[sid].feed_runs(values, run_starts)
+            else:
+                self._feed(sid, values)
+
     def _feed(self, sid: int, arr: np.ndarray) -> None:
         """Continue natural-run detection over one in-order payload."""
         if arr.size == 0:

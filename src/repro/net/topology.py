@@ -214,6 +214,17 @@ def run_graph(
     retransmits included — so the return becomes a three-tuple
     ``(delivered, stats, NetworkReport)``.
     """
+    if engine == "device":
+        # Compiled-epoch fast path: the whole graph lowers to one jitted
+        # device program (same return contract, byte-identical output; the
+        # observability planes are fed from the program's taps).
+        from .device_epoch import run_graph_device
+
+        return run_graph_device(
+            graph, batch, spec,
+            tracer=tracer, metrics=metrics,
+            int_telemetry=int_telemetry, network=network,
+        )
     tr = tracer or NULL_TRACER
     timer = None
     if network is not None:
@@ -263,6 +274,7 @@ def run_graph(
             out.segment_id,
             epoch=out.epoch,
             int_meta=out.int_meta,
+            row_index=out.row_index,
         )
         if timer is not None:
             # Flow re-stamping does not move packet boundaries, so the

@@ -61,6 +61,11 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
     segment_id: np.ndarray  # (n,) the paper's port number (UNTAGGED pre-switch)
     epoch: int = 0  # control-plane epoch this batch routes under
     int_meta: IntColumns | None = None  # INT per-hop telemetry stack (opt-in)
+    # Payload provenance: original input row of each key, for engines that
+    # carry whole records (key + payload columns) through the fabric.  The
+    # payload bytes themselves never ride the wire — they are gathered once
+    # at egress by indexing the storage-side payload table with this column.
+    row_index: np.ndarray | None = None  # (n,) int64, opt-in
 
     def __post_init__(self) -> None:
         for name in ("values", "flow_id", "seq", "segment_id"):
@@ -75,6 +80,15 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             raise ValueError(
                 f"int_meta rows {len(self.int_meta)} != values length {n}"
             )
+        if self.row_index is not None:
+            object.__setattr__(
+                self, "row_index", np.asarray(self.row_index, dtype=np.int64)
+            )
+            if self.row_index.size != n:
+                raise ValueError(
+                    f"row_index length {self.row_index.size} != values "
+                    f"length {n}"
+                )
 
     def __len__(self) -> int:
         return int(self.values.size)
@@ -109,7 +123,8 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
     def take(self, idx: np.ndarray) -> "WireBatch":
         """Row gather (boolean mask or index array), order-preserving.
 
-        The INT telemetry stack follows its keys through the same gather.
+        The INT telemetry stack and the payload row-index column follow
+        their keys through the same gather.
         """
         return WireBatch(
             self.values[idx],
@@ -118,6 +133,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             self.segment_id[idx],
             epoch=self.epoch,
             int_meta=None if self.int_meta is None else self.int_meta.take(idx),
+            row_index=None if self.row_index is None else self.row_index[idx],
         )
 
     def slice_keys(self, lo: int, hi: int) -> "WireBatch":
@@ -129,6 +145,9 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             epoch=self.epoch,
             int_meta=(
                 None if self.int_meta is None else self.int_meta.slice(lo, hi)
+            ),
+            row_index=(
+                None if self.row_index is None else self.row_index[lo:hi]
             ),
         )
 
@@ -142,6 +161,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             self.segment_id + epoch * num_segments,
             epoch=epoch,
             int_meta=self.int_meta,
+            row_index=self.row_index,
         )
 
     def with_int_meta(self, int_meta: IntColumns | None) -> "WireBatch":
@@ -153,6 +173,19 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             self.segment_id,
             epoch=self.epoch,
             int_meta=int_meta,
+            row_index=self.row_index,
+        )
+
+    def with_row_index(self, row_index: np.ndarray | None) -> "WireBatch":
+        """The same wire rows carrying a (different) payload row column."""
+        return WireBatch(
+            self.values,
+            self.flow_id,
+            self.seq,
+            self.segment_id,
+            epoch=self.epoch,
+            int_meta=self.int_meta,
+            row_index=row_index,
         )
 
     # -- Packet interop (the thin boundary view) ------------------------
@@ -225,6 +258,9 @@ def concat_batches(batches: list[WireBatch]) -> WireBatch:
     int_meta = None
     if carrying and all(b.int_meta is not None for b in carrying):
         int_meta = IntColumns.concat([b.int_meta for b in carrying])
+    row_index = None
+    if carrying and all(b.row_index is not None for b in carrying):
+        row_index = np.concatenate([b.row_index for b in carrying])
     return WireBatch(
         np.concatenate([b.values for b in batches]),
         np.concatenate([b.flow_id for b in batches]),
@@ -232,6 +268,7 @@ def concat_batches(batches: list[WireBatch]) -> WireBatch:
         np.concatenate([b.segment_id for b in batches]),
         epoch=epochs.pop() if len(epochs) == 1 else 0,
         int_meta=int_meta,
+        row_index=row_index,
     )
 
 

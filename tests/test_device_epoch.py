@@ -1,0 +1,261 @@
+"""The whole-epoch compiled device engine: identity, residency, payloads.
+
+The load-bearing claims (ISSUE tentpole):
+
+1. ``engine="device"`` is byte-identical to the fused / segment / faithful
+   engines — all four wire columns, per-hop stats, and server pass counts —
+   across scenario × topology × pool size.
+2. The epoch is device-resident: exactly one host→device transfer (the
+   ingress columns) and one device→host transfer (the egress fetch) per
+   epoch, counted at the ``device_put``/``device_get`` choke points.
+3. Payload records ride as packed key+row-index 64-bit columns and the
+   payload itself is gathered exactly once at egress: ``sorted_payload``
+   equals ``payload[np.argsort(values, kind="stable")]``.
+4. Engines without per-key provenance (segment, faithful) *reject* payload
+   rows rather than silently dropping them.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: property tests skip, the rest run
+    from _hypstub import given, settings, st
+
+from repro.data.scenarios import SCENARIOS, scenario_max_value
+from repro.net import (
+    DeviceDelivery,
+    HopSpec,
+    WireBatch,
+    interleave_batch,
+    leaf_spine_graph,
+    run_graph,
+    run_pipeline,
+    split_flows,
+    tree_graph,
+)
+from repro.net.device_epoch import (
+    TRANSFER_COUNTS,
+    device_self_check,
+    reset_transfer_counts,
+)
+from repro.net.engine import run_hop
+
+TOPO_CASES = [
+    ("single", {}),
+    ("leaf_spine", {"num_leaves": 4}),
+    ("tree", {"branching": 2, "height": 3}),
+]
+N = 3000
+SEGS, LENGTH = 8, 16
+
+
+def _common(scenario, **over):
+    kw = dict(
+        num_segments=SEGS,
+        segment_length=LENGTH,
+        max_value=scenario_max_value(scenario),
+        num_flows=4,
+        payload_size=32,
+    )
+    kw.update(over)
+    return kw
+
+
+def _assert_batches_equal(a, b, msg=""):
+    for col in ("values", "flow_id", "seq", "segment_id"):
+        np.testing.assert_array_equal(
+            getattr(a, col), getattr(b, col), err_msg=f"{msg}:{col}"
+        )
+
+
+# -- four-way engine identity -------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", ["adversarial_skew", "drifting"])
+@pytest.mark.parametrize("topo,topo_kw", TOPO_CASES)
+@pytest.mark.parametrize("num_servers", [1, 4])
+def test_four_way_engine_identity(scenario, topo, topo_kw, num_servers):
+    vals = SCENARIOS[scenario](N, seed=7)
+    kw = _common(scenario, num_servers=num_servers, verify=True)
+    results = {
+        eng: run_pipeline(vals, topology=topo, engine=eng, **kw, **topo_kw)
+        for eng in ("faithful", "segment", "fused", "device")
+    }
+    ref = results["faithful"]
+    for eng, res in results.items():
+        np.testing.assert_array_equal(res.output, ref.output, err_msg=eng)
+        assert res.passes == ref.passes, eng
+        _assert_batches_equal(res.delivered, ref.delivered, eng)
+        assert len(res.hop_stats) == len(ref.hop_stats)
+        for sd, sf in zip(res.hop_stats, ref.hop_stats):
+            assert sd == sf  # frozen dataclass: every scalar stat
+            np.testing.assert_array_equal(sd.segment_loads, sf.segment_loads)
+
+
+@pytest.mark.parametrize("range_mode", ["oracle", "sampled"])
+def test_device_matches_fused_across_range_modes(range_mode):
+    vals = SCENARIOS["drifting"](N, seed=3)
+    kw = _common("drifting", range_mode=range_mode, verify=True)
+    rd = run_pipeline(vals, topology="leaf_spine", num_leaves=4, engine="device", **kw)
+    rf = run_pipeline(vals, topology="leaf_spine", num_leaves=4, engine="fused", **kw)
+    np.testing.assert_array_equal(rd.output, rf.output)
+    assert rd.passes == rf.passes
+    assert rd.num_epochs == rf.num_epochs
+    _assert_batches_equal(rd.delivered, rf.delivered)
+
+
+# -- device residency: one transfer each way ----------------------------
+
+
+def test_one_transfer_each_way_per_epoch():
+    vals = SCENARIOS["adversarial_skew"](N, seed=1)
+    graph = tree_graph(2, 3)
+    flows = split_flows(vals, 4, 32)
+    batch = interleave_batch(flows, "round_robin", seed=0)
+    spec = HopSpec(SEGS, LENGTH, max_value=scenario_max_value("adversarial_skew"))
+    reset_transfer_counts()
+    out, stats = run_graph(graph, batch, spec, engine="device")
+    assert TRANSFER_COUNTS == {"to_device": 1, "to_host": 1}
+    assert isinstance(out, DeviceDelivery)
+    # The grouped columns degrade to a plain WireBatch on any mutation, so
+    # downstream consumers that slice or reorder never see stale groupings.
+    assert out.take(np.arange(out.values.size)).__class__ is WireBatch
+    ref, _ = run_graph(graph, batch, spec, engine="fused")
+    _assert_batches_equal(out, ref)
+
+
+def test_observed_mode_still_one_fetch():
+    from repro.obs import Tracer
+
+    vals = SCENARIOS["drifting"](N, seed=5)
+    flows = split_flows(vals, 4, 32)
+    batch = interleave_batch(flows, "round_robin", seed=0)
+    spec = HopSpec(SEGS, LENGTH, max_value=scenario_max_value("drifting"))
+    graph = leaf_spine_graph(4)
+    reset_transfer_counts()
+    tr = Tracer()
+    out, stats = run_graph(graph, batch, spec, engine="device", tracer=tr)
+    assert TRANSFER_COUNTS == {"to_device": 1, "to_host": 1}
+    assert tr.find(cat="hop"), "replay should emit hop spans"
+    ref, rstats = run_graph(graph, batch, spec, engine="fused")
+    _assert_batches_equal(out, ref)
+    for sd, sf in zip(stats, rstats):
+        np.testing.assert_array_equal(sd.ship_emission, sf.ship_emission)
+
+
+# -- payload records ----------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["fused", "device"])
+@pytest.mark.parametrize("merge_backend", ["numpy", "arena"])
+def test_payload_gathered_once_at_egress(engine, merge_backend):
+    vals = SCENARIOS["adversarial_skew"](N, seed=11)
+    payload = (vals * 7 + 3).reshape(-1, 1).repeat(3, axis=1)
+    payload[:, 1] = np.arange(vals.size)
+    res = run_pipeline(
+        vals,
+        topology="tree",
+        branching=2,
+        height=3,
+        engine=engine,
+        payload=payload,
+        merge_backend=merge_backend,
+        num_servers=4,
+        verify=True,
+        **_common("adversarial_skew"),
+    )
+    order = np.argsort(vals, kind="stable")
+    np.testing.assert_array_equal(res.payload_row_order, order)
+    np.testing.assert_array_equal(res.sorted_payload, payload[order])
+    np.testing.assert_array_equal(res.sorted_payload[:, 0], res.output * 7 + 3)
+
+
+def test_payload_identity_fused_vs_device():
+    vals = SCENARIOS["drifting"](N, seed=2)
+    payload = np.arange(vals.size, dtype=np.int64)[:, None]
+    kw = _common("drifting", payload=payload, verify=True)
+    rd = run_pipeline(vals, topology="leaf_spine", num_leaves=4, engine="device", **kw)
+    rf = run_pipeline(vals, topology="leaf_spine", num_leaves=4, engine="fused", **kw)
+    np.testing.assert_array_equal(rd.sorted_payload, rf.sorted_payload)
+    np.testing.assert_array_equal(rd.payload_row_order, rf.payload_row_order)
+    np.testing.assert_array_equal(
+        rd.delivered.row_index, rf.delivered.row_index
+    )
+
+
+@pytest.mark.parametrize("engine", ["segment", "faithful"])
+def test_provenance_free_engines_reject_payload(engine):
+    vals = SCENARIOS["adversarial_skew"](N, seed=0)
+    payload = vals.reshape(-1, 1)
+    with pytest.raises(ValueError, match="row indices"):
+        run_pipeline(
+            vals, engine=engine, payload=payload, **_common("adversarial_skew")
+        )
+
+
+def test_payload_domain_guard():
+    vals = np.arange(100, dtype=np.int64)
+    with pytest.raises(ValueError, match="63 bits"):
+        run_pipeline(
+            vals,
+            payload=vals.reshape(-1, 1),
+            num_segments=4,
+            segment_length=8,
+            max_value=1 << 60,
+        )
+
+
+# -- single-hop property sweep ------------------------------------------
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4), st.sampled_from([8, 16, 32]))
+@settings(max_examples=25, deadline=None)
+def test_device_hop_matches_fused_hop(seed, num_flows, length):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(64, 1200))
+    mv = int(rng.integers(100, 1 << 24))
+    vals = rng.integers(0, mv + 1, n)
+    flows = split_flows(vals, num_flows, 32)
+    batch = interleave_batch(flows, "round_robin", seed=seed % 97)
+    spec = HopSpec(SEGS, length, max_value=mv)
+    of, sf = run_hop(batch, spec, "sw", engine="fused")
+    od, sd = run_hop(batch, spec, "sw", engine="device")
+    _assert_batches_equal(od, of)
+    np.testing.assert_array_equal(sd.ship_emission, sf.ship_emission)
+    assert sd == sf
+    np.testing.assert_array_equal(sd.segment_loads, sf.segment_loads)
+
+
+def test_device_hop_empty_batch():
+    spec = HopSpec(SEGS, LENGTH, max_value=1000)
+    empty = interleave_batch(split_flows(np.zeros(0, np.int64), 2, 32), "round_robin")
+    out, stats = run_hop(empty, spec, "sw", engine="device")
+    assert out.values.size == 0 and stats.arrivals == 0
+
+
+# -- guard rails --------------------------------------------------------
+
+
+def test_device_rejects_int_telemetry():
+    vals = SCENARIOS["adversarial_skew"](512, seed=0)
+    with pytest.raises(ValueError, match="telemetry"):
+        run_pipeline(
+            vals, engine="device", int_telemetry=True, **_common("adversarial_skew")
+        )
+
+
+def test_device_rejects_out_of_domain_values():
+    spec = HopSpec(SEGS, LENGTH, max_value=100)
+    batch = interleave_batch(
+        split_flows(np.asarray([5, 500]), 1, 32), "round_robin"
+    )
+    with pytest.raises(ValueError, match="domain"):
+        run_hop(batch, spec, "sw", engine="device")
+
+
+def test_self_check_interpret():
+    """The CI entry point: the Pallas block-sort kernel inside the compiled
+    epoch, run in interpret mode, still produces the fused engine's bytes."""
+    device_self_check(interpret=True, n=2048, seed=4)

@@ -129,6 +129,79 @@ def test_flash_attention_noncausal():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-3)
 
 
+def test_sort_guards_reject_float_keys():
+    """The bitonic pad sentinel is the dtype max; floats have no usable one
+    (NaN ordering), so the entry points raise instead of mis-sorting."""
+    with pytest.raises(TypeError, match="integer keys"):
+        ops.sort_rows_padded(jnp.ones((2, 4), jnp.float32))
+    with pytest.raises(TypeError, match="integer keys"):
+        ops.merge_tournament(jnp.ones((2, 4), jnp.float32))
+    with pytest.raises(TypeError, match="integer keys"):
+        bitonic.tournament_merge_array(jnp.ones((2, 4), jnp.float32))
+
+
+def test_sort_guards_reject_int64_without_x64():
+    """Without an x64 scope jax truncates int64 at the jit boundary; the
+    guard fires pre-dispatch so packed key+payload records never silently
+    lose their top 32 bits."""
+    x = np.arange(8, dtype=np.int64).reshape(2, 4)
+    with pytest.raises(TypeError, match="x64"):
+        ops.sort_rows_padded(x)
+    with pytest.raises(TypeError, match="x64"):
+        ops.merge_tournament(x)
+
+
+def test_sort_rows_padded_int64_packed_payload_records():
+    """64-bit packed (key << nbits) | row records, non-pow2 row count: the
+    row padding stays distinct and the payload row indices ride the sort."""
+    from jax.experimental import enable_x64
+
+    rng = np.random.default_rng(0)
+    rows, b, nbits = 5, 16, 20  # 5 rows: exercises the pad-to-8 path
+    keys = rng.integers(0, 1 << 40, size=(rows, b)).astype(np.int64)
+    rec = (keys << nbits) | np.arange(rows * b, dtype=np.int64).reshape(rows, b)
+    with enable_x64():
+        out = np.asarray(ops.sort_rows_padded(jnp.asarray(rec)))
+    np.testing.assert_array_equal(out, np.sort(rec, axis=1))
+    # unpacked keys sorted; every payload row index survives the pack
+    assert (np.diff(out >> nbits, axis=1) >= 0).all()
+    np.testing.assert_array_equal(
+        np.sort((out & ((1 << nbits) - 1)).ravel()), np.arange(rows * b)
+    )
+
+
+def test_merge_tournament_int64_packed_runs():
+    from jax.experimental import enable_x64
+
+    rng = np.random.default_rng(1)
+    P, B, nbits = 4, 32, 12
+    pad = np.iinfo(np.int64).max
+    lens = rng.integers(1, B + 1, size=P)  # ragged runs inside padded rows
+    mat = np.full((P, B), pad, np.int64)
+    want = []
+    row = 0
+    for i, ln in enumerate(lens):
+        k = np.sort(rng.integers(0, 1 << 40, size=ln).astype(np.int64))
+        packed = (k << nbits) | (row + np.arange(ln))
+        mat[i, :ln] = packed
+        want.append(packed)
+        row += int(ln)
+    with enable_x64():
+        out = np.asarray(ops.merge_tournament(jnp.asarray(mat)))
+    total = int(lens.sum())
+    np.testing.assert_array_equal(out[:total], np.sort(np.concatenate(want)))
+    assert (out[total:] == pad).all()
+
+
+def test_merge_tournament_non_pow2_shapes_raise():
+    with pytest.raises(ValueError, match="powers of two"):
+        ops.merge_tournament(jnp.ones((3, 8), jnp.int32))
+    with pytest.raises(ValueError, match="powers of two"):
+        ops.merge_tournament(jnp.ones((4, 6), jnp.int32))
+    with pytest.raises(ValueError, match="power of two"):
+        ops.sort_rows_padded(jnp.ones((2, 6), jnp.int32))
+
+
 def test_bitonic_network_stage_count():
     """log²: n=1024 -> 10 rounds, 55 compare-exchange stages (the paper's
     'pipeline stages' budget on TPU)."""
