@@ -1,11 +1,11 @@
 """BENCH_*.json artifact schema: write, validate, and gate bench results.
 
 Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
-trajectory across PRs.  The schema (version 7) is hand-validated here — no
+trajectory across PRs.  The schema (version 8) is hand-validated here — no
 external dependency — and documented in README "Reproducing the numbers":
 
     {
-      "schema_version": 7,
+      "schema_version": 8,
       "bench": "net",
       "config":  {"n", "repeats", "segments", "length", "payload", "k",
                   "quick": bool, "seed": int},
@@ -89,6 +89,23 @@ external dependency — and documented in README "Reproducing the numbers":
                   "records_per_sec": float,  # key + payload row together
                   "payload_cols": int}],
         "speedup_device_vs_fused": float,  # one program vs per-hop dispatch
+      },
+      "multi_tenant": {         # concurrent-job serving sweep (v8)
+        "config": {"segments", "length", "payload", "n",   # n = keys/job
+                   "engine": str,        # shared-fabric epoch engine
+                   "max_inflight": int,  # admission budget
+                   "repeats": int},
+        "rows": [{"num_jobs": int,           # J concurrent tenants
+                  "elapsed_seconds": float,  # fastest repeat's wall-clock
+                  "jobs_per_sec": float,
+                  "p50_latency_s": float,    # submit → delivery, queue wait
+                  "p99_latency_s": float,    #   included
+                  "fairness": float,         # min tenant epoch share [0, 1]
+                  "rounds": int, "fabric_calls": int,
+                  "packed_calls": int,       # rounds fused into shared calls
+                  "isolation_ok": bool}],    # every tenant == its solo run
+        "fairness_at_j4": float,   # the CI-gated share (0.0 if no J=4 row)
+        "all_isolated": bool,
       }
     }
 
@@ -104,12 +121,16 @@ pipeline on the 1M-key wire (ISSUE 6), and — under the network timing
 sweep's loss and buffer grid — every cell's delivered output byte-identical
 to the lossless run (``--require-lossless-identical``, ISSUE 7), and the
 whole-epoch ``device`` engine at least ``--min-e2e-speedup``× the per-hop
-fused path's keys/sec on the 10M-key payload-attached tree run (ISSUE 8):
+fused path's keys/sec on the 10M-key payload-attached tree run (ISSUE 8),
+and the J=4 multi-tenant round-robin share at least
+``--min-tenant-fairness`` with every tenant byte-identical to its solo run
+(ISSUE 9):
 
     python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \\
         --min-hop-speedup 3.0 --min-server-scaling 1.0 \\
         --min-server-speedup 2.0 --max-trace-overhead 1.10 \\
-        --require-lossless-identical --min-e2e-speedup 2.0
+        --require-lossless-identical --min-e2e-speedup 2.0 \\
+        --min-tenant-fairness 0.5
 """
 
 from __future__ import annotations
@@ -122,7 +143,7 @@ try:
 except ImportError:  # pragma: no cover - python -m benchmarks.emit
     from benchmarks import _bootstrap  # noqa: F401
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 
 _CONFIG_FIELDS = {
     "n": int,
@@ -255,6 +276,31 @@ _E2E_ROW_FIELDS = {
 }
 
 _E2E_ENGINES = {"fused", "device"}
+
+_MT_CONFIG_FIELDS = {
+    "segments": int,
+    "length": int,
+    "payload": int,
+    "n": int,
+    "engine": str,
+    "max_inflight": int,
+    "repeats": int,
+}
+
+_MT_ROW_FIELDS = {
+    "num_jobs": int,
+    "elapsed_seconds": float,
+    "jobs_per_sec": float,
+    "p50_latency_s": float,
+    "p99_latency_s": float,
+    "fairness": float,
+    "rounds": int,
+    "fabric_calls": int,
+    "packed_calls": int,
+    "isolation_ok": bool,
+}
+
+_MT_ENGINES = {"fused", "device"}
 
 
 def _check_type(path: str, value, want: type) -> None:
@@ -570,6 +616,63 @@ def validate_net_bench(doc: dict) -> None:
     )
     if e2e["speedup_device_vs_fused"] <= 0:
         raise ValueError("$.end_to_end.speedup_device_vs_fused: <= 0")
+    mt = doc.get("multi_tenant")
+    _check_type("$.multi_tenant", mt, dict)
+    _check_type("$.multi_tenant.config", mt.get("config"), dict)
+    for key, want in _MT_CONFIG_FIELDS.items():
+        if key not in mt["config"]:
+            raise ValueError(f"$.multi_tenant.config.{key}: missing")
+        _check_type(f"$.multi_tenant.config.{key}", mt["config"][key], want)
+    if mt["config"]["engine"] not in _MT_ENGINES:
+        raise ValueError(
+            f"$.multi_tenant.config.engine: {mt['config']['engine']!r} "
+            f"not in {sorted(_MT_ENGINES)} (packing needs a batched engine)"
+        )
+    if mt["config"]["max_inflight"] < 1:
+        raise ValueError("$.multi_tenant.config.max_inflight: < 1")
+    _check_type("$.multi_tenant.rows", mt.get("rows"), list)
+    if not mt["rows"]:
+        raise ValueError("$.multi_tenant.rows: empty")
+    j4_fairness = None
+    for i, row in enumerate(mt["rows"]):
+        _check_type(f"$.multi_tenant.rows[{i}]", row, dict)
+        for key, want in _MT_ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.multi_tenant.rows[{i}].{key}: missing")
+            _check_type(f"$.multi_tenant.rows[{i}].{key}", row[key], want)
+        if row["num_jobs"] < 1:
+            raise ValueError(f"$.multi_tenant.rows[{i}].num_jobs: < 1")
+        if row["elapsed_seconds"] <= 0 or row["jobs_per_sec"] <= 0:
+            raise ValueError(
+                f"$.multi_tenant.rows[{i}]: non-positive timing"
+            )
+        if not 0 < row["p50_latency_s"] <= row["p99_latency_s"]:
+            raise ValueError(
+                f"$.multi_tenant.rows[{i}]: latency percentiles out of order"
+            )
+        if not 0.0 <= row["fairness"] <= 1.0:
+            raise ValueError(
+                f"$.multi_tenant.rows[{i}].fairness: not in [0, 1]"
+            )
+        for key in ("rounds", "fabric_calls", "packed_calls"):
+            if row[key] < 0:
+                raise ValueError(f"$.multi_tenant.rows[{i}].{key}: negative")
+        if row["packed_calls"] > row["fabric_calls"]:
+            raise ValueError(
+                f"$.multi_tenant.rows[{i}]: packed_calls > fabric_calls"
+            )
+        if row["num_jobs"] == 4:
+            j4_fairness = row["fairness"]
+    _check_type(
+        "$.multi_tenant.fairness_at_j4", mt.get("fairness_at_j4"), float
+    )
+    if j4_fairness is not None and mt["fairness_at_j4"] != j4_fairness:
+        raise ValueError(
+            "$.multi_tenant.fairness_at_j4: disagrees with the J=4 row"
+        )
+    _check_type("$.multi_tenant.all_isolated", mt.get("all_isolated"), bool)
+    if mt["all_isolated"] != all(r["isolation_ok"] for r in mt["rows"]):
+        raise ValueError("$.multi_tenant.all_isolated: disagrees with rows")
 
 
 def hop_speedup(doc: dict) -> float:
@@ -605,10 +708,20 @@ def e2e_speedup(doc: dict) -> float:
     return float(doc["end_to_end"]["speedup_device_vs_fused"])
 
 
+def tenant_fairness(doc: dict) -> float:
+    """The artifact's minimum fair epoch share at J=4 concurrent tenants."""
+    return float(doc["multi_tenant"]["fairness_at_j4"])
+
+
+def tenants_isolated(doc: dict) -> bool:
+    """Whether every tenant matched its solo run on every J in the sweep."""
+    return bool(doc["multi_tenant"]["all_isolated"])
+
+
 def write_net_bench(
     path: str, config: dict, results: list[dict], hop_throughput: dict,
     server_scaling: dict, server_throughput: dict, telemetry: dict,
-    network_sweep: dict, end_to_end: dict,
+    network_sweep: dict, end_to_end: dict, multi_tenant: dict,
 ) -> dict:
     """Assemble, validate, and write a net-bench artifact; return the doc."""
     doc = {
@@ -622,6 +735,7 @@ def write_net_bench(
         "telemetry": telemetry,
         "network_sweep": network_sweep,
         "end_to_end": end_to_end,
+        "multi_tenant": multi_tenant,
     }
     validate_net_bench(doc)
     with open(path, "w") as fh:
@@ -704,6 +818,13 @@ def main() -> None:
         "this many times the per-hop fused path's keys/sec on the 10M-key "
         "payload-attached tree run (ISSUE 8 acceptance: 2.0)",
     )
+    ap.add_argument(
+        "--min-tenant-fairness", type=float, default=None,
+        help="gate: every tenant's epoch share at J=4 concurrent jobs must "
+        "reach this fraction of the fair share, and every tenant must be "
+        "byte-identical to its solo run (ISSUE 9 acceptance: 0.5; the "
+        "round-robin scheduler is structurally 1.0)",
+    )
     args = ap.parse_args()
     with open(args.artifact) as fh:
         doc = json.load(fh)
@@ -774,6 +895,25 @@ def main() -> None:
             raise SystemExit(
                 f"whole-epoch device engine is only {speedup:.2f}x the "
                 f"per-hop fused path (need {args.min_e2e_speedup}x)"
+            )
+    if args.min_tenant_fairness is not None:
+        fairness = tenant_fairness(doc)
+        isolated = tenants_isolated(doc)
+        ok = fairness >= args.min_tenant_fairness and isolated
+        status = "OK" if ok else "FAIL"
+        print(
+            f"  multi-tenant fairness at J=4: {fairness:.2f} "
+            f"(isolated: {'yes' if isolated else 'NO'}) {status}"
+        )
+        if fairness < args.min_tenant_fairness:
+            raise SystemExit(
+                f"J=4 tenant epoch share is {fairness:.2f} of fair "
+                f"(need {args.min_tenant_fairness})"
+            )
+        if not isolated:
+            raise SystemExit(
+                "multi-tenant sweep: at least one tenant's output diverged "
+                "from its solo run"
             )
     if args.min_sampled_ratio is not None:
         ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))

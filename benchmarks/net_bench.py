@@ -53,16 +53,21 @@ host↔device round-trip *per hop*) vs the ``device`` engine (one compiled
 epoch program, keys resident from ingest to the run-arena tournament,
 exactly one transfer each way) — outputs and gathered payloads asserted
 byte-identical, keys/sec and records/sec per engine, and their speedup
-ratio, which ``--min-e2e-speedup`` gates in CI.  Every device-path timer
-stops its clock only after ``jax.block_until_ready`` (async dispatch
+ratio, which ``--min-e2e-speedup`` gates in CI; and the **multi-tenant
+serving sweep** (schema v8): J ∈ {1, 2, 4} concurrent jobs through the
+fair round-robin scheduler over one shared fabric (cross-job packing on),
+reporting sustained jobs/sec, p50/p99 job latency, the minimum fair epoch
+share, and per-J isolation (every tenant byte-identical to its solo run)
+— ``--min-tenant-fairness`` gates the J=4 share in CI.  Every device-path
+timer stops its clock only after ``jax.block_until_ready`` (async dispatch
 otherwise credits device work to whoever touches the buffer next).  All
 RNG (trace synthesis, interleave, control plane, wire loss) derives from
 ``--seed``, so an artifact reproduces across invocations.
 
 Usage:  python benchmarks/net_bench.py [--quick] [--n N] [--scenarios]
             [--faithful-check] [--hop-n N] [--scaling-n N] [--server-n N]
-            [--telemetry-n N] [--network-n N] [--e2e-n N] [--seed S]
-            [--out BENCH_net.json]
+            [--telemetry-n N] [--network-n N] [--e2e-n N] [--mt-n N]
+            [--seed S] [--out BENCH_net.json]
 """
 
 from __future__ import annotations
@@ -174,6 +179,22 @@ E2E_BENCH = dict(
     topology="tree", branching=2, height=3,
     payload_cols=2, num_servers=4, merge_backend="arena",
 )
+
+# Multi-tenant serving sweep (schema v8 `multi_tenant`): J ∈ {1, 2, 4}
+# concurrent jobs — scenario-cycled with mixed range modes, the first
+# tenant always adversarial_skew under the adaptive plane — admitted into
+# one shared single-switch fabric through the fair round-robin scheduler
+# (:mod:`repro.net.scheduler`), a round's grants packed into shared fused
+# calls.  Per J: sustained jobs/sec, p50/p99 job latency (admission wait
+# included), the minimum fair epoch share across tenants, and an isolation
+# check — every tenant's (output, passes) byte-identical to its solo
+# ``run_pipeline`` twin.  CI gates fairness at J=4 via
+# ``emit.py --min-tenant-fairness`` (which also requires all_isolated).
+MT_JOBS = (1, 2, 4)
+MT_SCENARIOS = ("adversarial_skew", "drifting", "sorted50", "duplicate_heavy")
+MT_MODES = ("sampled", "sampled", "oracle", "static")
+MT_BENCH = {"segments": 16, "length": 64, "payload": 64,
+            "engine": "fused", "max_inflight": 4}
 
 
 def _sync(x):
@@ -567,6 +588,83 @@ def network_sweep(n: int, repeats: int, seed: int = 0) -> dict:
     }
 
 
+def multi_tenant(n: int, repeats: int, seed: int = 0) -> dict:
+    """Jobs/sec, latency percentiles, fairness, and isolation per J.
+
+    Each repeat rebuilds the job set (the scheduler consumes per-job
+    control-plane state); the fastest wall-clock repeat's figures are
+    reported.  The isolation column then re-runs every tenant solo through
+    ``run_pipeline`` with identical fabric parameters and compares
+    ``(output, passes)`` byte-for-byte — concurrency and cross-job packing
+    must never change a tenant's bytes.
+    """
+    from repro.net import Job, run_job_solo, run_jobs
+
+    cfg = dict(MT_BENCH, n=n, repeats=repeats)
+    fabric = dict(
+        topology="single",
+        num_segments=cfg["segments"],
+        segment_length=cfg["length"],
+        payload_size=cfg["payload"],
+        engine=cfg["engine"],
+        max_inflight=cfg["max_inflight"],
+    )
+
+    def make_jobs(J: int) -> list:
+        jobs = []
+        for t in range(J):
+            name = MT_SCENARIOS[t % len(MT_SCENARIOS)]
+            jobs.append(
+                Job(
+                    t,
+                    SCENARIOS[name](n, seed=seed + t),
+                    seed=seed + t,
+                    range_mode=MT_MODES[t % len(MT_MODES)],
+                    max_value=scenario_max_value(name),
+                )
+            )
+        return jobs
+
+    rows = []
+    fairness_at_j4 = 0.0
+    for J in MT_JOBS:
+        best = None
+        for _ in range(repeats):
+            res = run_jobs(make_jobs(J), **fabric)
+            if best is None or res.elapsed_seconds < best.elapsed_seconds:
+                best = res
+        isolated = True
+        for job in make_jobs(J):
+            solo = run_job_solo(job, **fabric)
+            jr = best.by_tenant(job.tenant_id)
+            isolated &= bool(
+                np.array_equal(jr.output, solo.output)
+                and jr.passes == solo.passes
+            )
+        rows.append(
+            {
+                "num_jobs": J,
+                "elapsed_seconds": float(best.elapsed_seconds),
+                "jobs_per_sec": float(best.jobs_per_sec),
+                "p50_latency_s": float(best.p50_latency_s),
+                "p99_latency_s": float(best.p99_latency_s),
+                "fairness": float(best.fairness),
+                "rounds": int(best.rounds),
+                "fabric_calls": int(best.fabric_calls),
+                "packed_calls": int(best.packed_calls),
+                "isolation_ok": isolated,
+            }
+        )
+        if J == 4:
+            fairness_at_j4 = float(best.fairness)
+    return {
+        "config": cfg,
+        "rows": rows,
+        "fairness_at_j4": fairness_at_j4,
+        "all_isolated": all(r["isolation_ok"] for r in rows),
+    }
+
+
 def _best(fn, repeats: int):
     """Min-time over repeats (noise-robust) + the last result."""
     times, out = [], None
@@ -673,6 +771,16 @@ def main() -> None:
         "separate warm-up run per engine pays the jit compiles first, so "
         "one warm repeat suffices — the per-hop fused run is ~7 minutes "
         "at 10M keys; raise for tighter timings)",
+    )
+    ap.add_argument(
+        "--mt-n", type=int, default=200_000,
+        help="keys per job for the multi-tenant serving sweep (per tenant; "
+        "not reduced by --quick — the fairness/isolation gate needs "
+        "multi-epoch adaptive jobs)",
+    )
+    ap.add_argument(
+        "--mt-repeats", type=int, default=2,
+        help="repeats for the multi-tenant sweep (fastest wall-clock wins)",
     )
     ap.add_argument(
         "--seed", type=int, default=0,
@@ -877,6 +985,24 @@ def main() -> None:
         flush=True,
     )
 
+    mt = multi_tenant(args.mt_n, args.mt_repeats, seed=args.seed)
+    for r in mt["rows"]:
+        emit(
+            f"mt_j{r['num_jobs']}_{mt['config']['engine']}",
+            r["elapsed_seconds"] * 1e6,
+            f"jobs_per_sec={r['jobs_per_sec']:.2f};"
+            f"p50_s={r['p50_latency_s']:.3f};"
+            f"p99_s={r['p99_latency_s']:.3f};"
+            f"fairness={r['fairness']:.2f};"
+            f"packed={r['packed_calls']}/{r['fabric_calls']};"
+            f"isolated={int(r['isolation_ok'])}",
+        )
+    print(
+        f"# multi-tenant: fairness at J=4: {mt['fairness_at_j4']:.2f}; "
+        f"all tenants byte-identical to solo: {mt['all_isolated']}",
+        flush=True,
+    )
+
     e2e = end_to_end(args.e2e_n, args.e2e_repeats, seed=args.seed)
     for r in e2e["rows"]:
         emit(
@@ -907,6 +1033,7 @@ def main() -> None:
             args.out, config, rows, hop_throughput=hop,
             server_scaling=scaling, server_throughput=server,
             telemetry=telemetry, network_sweep=network, end_to_end=e2e,
+            multi_tenant=mt,
         )
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 

@@ -12,9 +12,11 @@ Two artifact kinds, detected by shape:
   telemetry-overhead sweep (null tracer vs recording tracer vs INT
   columns, with the traced run's per-hop time/keys breakdown), the
   network timing sweep (sorted keys/sec per link rate × buffer depth,
-  locating the compute↔network crossover), and the end-to-end
+  locating the compute↔network crossover), the end-to-end
   device-residency sweep (whole-epoch compiled device engine vs the
-  per-hop fused path at 10M keys with payload records attached).
+  per-hop fused path at 10M keys with payload records attached), and the
+  multi-tenant serving sweep (jobs/sec, latency percentiles, fair epoch
+  share, and per-tenant isolation at J concurrent jobs).
 
     PYTHONPATH=src:. python -m benchmarks.report dryrun_singlepod.json
     PYTHONPATH=src:. python -m benchmarks.report BENCH_net.json
@@ -274,6 +276,31 @@ def render_net(doc: dict) -> str:
     out.append(
         f"\nwhole-epoch device vs per-hop fused: "
         f"{e2e['speedup_device_vs_fused']:.2f}x"
+    )
+    mt = doc["multi_tenant"]
+    mc = mt["config"]
+    out += [
+        "",
+        f"## multi-tenant serving ({mc['n']:,} keys/job, {mc['engine']} "
+        f"engine, {mc['segments']}x{mc['length']} switch, admission budget "
+        f"{mc['max_inflight']})",
+        "",
+        "| jobs | elapsed s | jobs/sec | p50 s | p99 s | fairness |"
+        " packed/fabric calls | isolated |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in mt["rows"]:
+        out.append(
+            f"| {r['num_jobs']} | {r['elapsed_seconds']:.3f} "
+            f"| {r['jobs_per_sec']:.2f} | {r['p50_latency_s']:.3f} "
+            f"| {r['p99_latency_s']:.3f} | {r['fairness']:.2f} "
+            f"| {r['packed_calls']}/{r['fabric_calls']} "
+            f"| {'Y' if r['isolation_ok'] else 'N'} |"
+        )
+    out.append(
+        f"\nfair epoch share at J=4: {mt['fairness_at_j4']:.2f}; all "
+        f"tenants byte-identical to solo: "
+        f"{'yes' if mt['all_isolated'] else 'NO'}"
     )
     return "\n".join(out)
 

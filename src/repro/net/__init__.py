@@ -14,7 +14,11 @@ re-partitioning on batch columns), and a streaming compute server overlaps
 its k-way merge with arrival, ingesting batches directly (:mod:`server`) —
 or a segment-affinity pool of them (:mod:`egress` — each server sorts only
 its range shard; a distributed merge concatenates the shard outputs).
-:mod:`pipeline` wires it end to end.  :mod:`timing` makes the network
+:mod:`pipeline` wires it end to end for one job; :mod:`scheduler` serves
+many — concurrent tenant jobs admission-controlled onto the shared fabric,
+epoch-interleaved round-robin and (on the batched single-switch engines)
+packed into one fused device call, with per-tenant demux at egress.
+:mod:`timing` makes the network
 itself cost something: a token-based per-link model (latency, bandwidth
 numer/denom throttle, bounded output buffers with drop-NACK-retransmit or
 backpressure overflow policies, wire loss/duplication) whose raw egress
@@ -64,6 +68,15 @@ from .pipeline import (
     jitter_delivery_batch,
     plain_stream_sort,
     run_pipeline,
+)
+from .scheduler import (
+    PACKABLE_ENGINES,
+    AdmissionController,
+    Job,
+    JobResult,
+    MultiTenantResult,
+    run_job_solo,
+    run_jobs,
 )
 from .server import MERGE_BACKENDS, StreamingServer, stream_sort
 from .timing import (
@@ -136,6 +149,13 @@ __all__ = [
     "jitter_delivery_batch",
     "plain_stream_sort",
     "run_pipeline",
+    "PACKABLE_ENGINES",
+    "AdmissionController",
+    "Job",
+    "JobResult",
+    "MultiTenantResult",
+    "run_job_solo",
+    "run_jobs",
     "MERGE_BACKENDS",
     "StreamingServer",
     "stream_sort",

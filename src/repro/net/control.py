@@ -161,6 +161,7 @@ class AdaptiveControlPlane:
         seed: int = 0,
         tracer=None,
         metrics=None,
+        label: str = "",
     ) -> None:
         if num_segments <= 0:
             raise ValueError("num_segments must be positive")
@@ -180,6 +181,10 @@ class AdaptiveControlPlane:
         self.reservoir = ReservoirSampler(sample_capacity, seed)
         self._tr = tracer or NULL_TRACER
         self._metrics = metrics
+        # Emitting-site label for the observability plane — the multi-tenant
+        # scheduler sets it per job so each tenant's control-plane counters
+        # and trace instants stay distinguishable on a shared fabric.
+        self.label = label
         self.installed: np.ndarray | None = None
         self.epoch = 0  # number of installed range-sets
         self._since_check = 0
@@ -227,9 +232,10 @@ class AdaptiveControlPlane:
         self._tr.instant(
             "control:install", cat="control",
             epoch=self.epoch, keys_seen=self.reservoir.seen,
+            **({"tenant": self.label} if self.label else {}),
         )
         if self._metrics is not None:
-            self._metrics.counter("control_installs").inc()
+            self._metrics.counter("control_installs", self.label).inc()
 
     def observe(self, payload: np.ndarray) -> bool:
         """Feed one payload; return ``True`` when the epoch should close."""
@@ -265,10 +271,11 @@ class AdaptiveControlPlane:
         """Record an epoch-close decision (warmup or drift) as telemetry."""
         self._tr.instant(
             f"control:handoff:{kind}", cat="control",
-            epoch=self.epoch, keys_seen=self.reservoir.seen, **args,
+            epoch=self.epoch, keys_seen=self.reservoir.seen,
+            **({"tenant": self.label} if self.label else {}), **args,
         )
         if self._metrics is not None:
-            self._metrics.counter(f"control_{kind}_handoffs").inc()
+            self._metrics.counter(f"control_{kind}_handoffs", self.label).inc()
 
     def propose(self) -> np.ndarray:
         """Ranges for the next epoch (does not install them)."""

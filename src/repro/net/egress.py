@@ -42,7 +42,7 @@ from repro.obs.trace import NULL_TRACER
 
 from ..core.distributed import pool_concat
 from .server import StreamingServer
-from .wire import WireBatch
+from .wire import WireBatch, ragged_gather
 
 
 def segment_affinity(num_segments: int, num_servers: int) -> np.ndarray:
@@ -142,6 +142,7 @@ class ServerPool:
         self.num_servers = num_servers
         self.num_epochs = num_epochs
         self.eff_segments = num_segments * num_epochs
+        self.recovery = recovery
         self.merge_backend = merge_backend
         self.pool_backend = pool_backend
         # Local segment numbering: server s's virtual segments, ascending,
@@ -179,10 +180,16 @@ class ServerPool:
         """Demux a delivered wire batch by segment affinity; feed each
         server its shard with segment ids renumbered into its local space.
 
-        Masking is row-order-preserving and packets are header-contiguous,
-        so every server sees exactly the sub-sequence of the wire its NIC
-        would have received — per-segment seq order, and therefore the
-        reorder-buffer and run-detection behaviour, are unchanged.
+        The demux is packet-granular: masking rows is order-preserving and
+        packets are header-contiguous, so every server sees exactly the
+        sub-sequence of the wire its NIC would have received — per-segment
+        seq order, and therefore the reorder-buffer and run-detection
+        behaviour, are unchanged.  In recovery mode, a retransmit copy on
+        the raw wire separated from its original only by *other servers'*
+        packets would land adjacent to it after the strip and fuse into one
+        double-length packet (boundaries are header runs), hiding the
+        duplicate from seq dedup — the demux applies the egress link's
+        coalescing rule first: adjacent identical copies deliver once.
         """
         if len(batch) == 0:
             return
@@ -195,12 +202,28 @@ class ServerPool:
                 self.servers[0].ingest_batch(batch)
             self.per_server_seconds[0] += t.seconds
             return
-        srv = self._affinity[sids]
+        starts = batch.packet_starts()
+        sizes = np.diff(np.concatenate([starts, [len(batch)]]))
+        pflow = batch.flow_id[starts]
+        pseq = batch.seq[starts]
+        pseg = batch.segment_id[starts]
+        pserv = self._affinity[pseg]
         for s in range(self.num_servers):
-            mask = srv == s
-            if not mask.any():
+            sel = np.nonzero(pserv == s)[0]
+            if not sel.size:
                 continue
-            sub = batch.take(mask)
+            if self.recovery and sel.size > 1:
+                dup = (
+                    (pflow[sel][1:] == pflow[sel][:-1])
+                    & (pseq[sel][1:] == pseq[sel][:-1])
+                    & (pseg[sel][1:] == pseg[sel][:-1])
+                )
+                if dup.any():
+                    keep = np.ones(sel.size, dtype=bool)
+                    keep[1:] = ~dup
+                    self.servers[s].dup_packets_dropped += int(dup.sum())
+                    sel = sel[keep]
+            sub = batch.take(ragged_gather(starts[sel], sizes[sel]))
             sub = WireBatch(
                 sub.values,
                 sub.flow_id,
@@ -332,12 +355,17 @@ class ServerPool:
     @property
     def server_imbalance(self) -> float:
         """Peak-over-mean per-server key load; 1.0 is a perfect shard
-        (also reported for an empty or degenerate pool)."""
+        (also reported for an empty or degenerate pool).
+
+        The mean is taken over servers that *own* at least one segment in
+        the affinity map — dividing by ``num_servers`` would deflate the
+        figure whenever an (epoch-sliced) affinity leaves servers idle."""
         keys = self.server_keys
         total = sum(keys)
-        if total == 0 or not self.num_servers:
+        owners = int(np.unique(self._affinity).size) if total else 0
+        if total == 0 or not owners:
             return 1.0
-        return max(keys) / (total / self.num_servers)
+        return max(keys) / (total / owners)
 
     @property
     def makespan_seconds(self) -> float:

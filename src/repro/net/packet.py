@@ -36,6 +36,7 @@ class Packet:
     flow_id: int  # originating storage server / emitting hop
     seq: int  # per-(flow, segment) emission sequence number
     segment_id: int = UNTAGGED  # the paper's port number; set by the switch
+    tenant_id: int = 0  # owning job; per-tenant demux key at egress
 
     def __post_init__(self) -> None:
         object.__setattr__(

@@ -123,11 +123,15 @@ class LinkSpec:
         return self.rto if self.rto is not None else 2 * self.latency + 4
 
     def transmission_ticks(self, sizes: np.ndarray) -> np.ndarray:
-        """Serializer occupancy per packet: ``ceil(keys * denom / numer)``."""
+        """Serializer occupancy per packet: ``ceil(keys * denom / numer)``,
+        clamped to ≥1 tick — an empty packet (heartbeat/epoch marker) still
+        occupies the serializer for a slot, so it cannot bypass the
+        bandwidth token or slip through a full bounded buffer for free.
+        The infinite-rate branch stays at zero (the ideal-network anchor)."""
         sizes = np.asarray(sizes, dtype=np.int64)
         if self.rate_numer is None:
             return np.zeros(sizes.size, dtype=np.int64)
-        return -(-(sizes * self.rate_denom) // self.rate_numer)
+        return np.maximum(-(-(sizes * self.rate_denom) // self.rate_numer), 1)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -66,6 +66,11 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
     # payload bytes themselves never ride the wire — they are gathered once
     # at egress by indexing the storage-side payload table with this column.
     row_index: np.ndarray | None = None  # (n,) int64, opt-in
+    # Owning job of each key (the multi-tenant serving plane's demux key).
+    # Carried at ingress and egress; inside the fabric tenancy lives in the
+    # per-tenant segment-id blocks instead (P4DB/Cheetah-style per-query
+    # switch state), so engines may drop the column mid-fabric.
+    tenant: np.ndarray | None = None  # (n,) int64, opt-in
 
     def __post_init__(self) -> None:
         for name in ("values", "flow_id", "seq", "segment_id"):
@@ -89,6 +94,14 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
                     f"row_index length {self.row_index.size} != values "
                     f"length {n}"
                 )
+        if self.tenant is not None:
+            object.__setattr__(
+                self, "tenant", np.asarray(self.tenant, dtype=np.int64)
+            )
+            if self.tenant.size != n:
+                raise ValueError(
+                    f"tenant length {self.tenant.size} != values length {n}"
+                )
 
     def __len__(self) -> int:
         return int(self.values.size)
@@ -104,6 +117,10 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             | (self.seq[1:] != self.seq[:-1])
             | (self.segment_id[1:] != self.segment_id[:-1])
         )
+        if self.tenant is not None:
+            # Adjacent packets from different jobs may otherwise share a
+            # header tuple (e.g. raw storage traffic, all UNTAGGED) and fuse.
+            change = change | (self.tenant[1:] != self.tenant[:-1])
         return np.concatenate([[0], np.nonzero(change)[0] + 1]).astype(np.int64)
 
     def packet_ordinal(self) -> np.ndarray:
@@ -134,6 +151,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             epoch=self.epoch,
             int_meta=None if self.int_meta is None else self.int_meta.take(idx),
             row_index=None if self.row_index is None else self.row_index[idx],
+            tenant=None if self.tenant is None else self.tenant[idx],
         )
 
     def slice_keys(self, lo: int, hi: int) -> "WireBatch":
@@ -149,6 +167,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             row_index=(
                 None if self.row_index is None else self.row_index[lo:hi]
             ),
+            tenant=None if self.tenant is None else self.tenant[lo:hi],
         )
 
     def with_epoch(self, epoch: int, num_segments: int) -> "WireBatch":
@@ -162,6 +181,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             epoch=epoch,
             int_meta=self.int_meta,
             row_index=self.row_index,
+            tenant=self.tenant,
         )
 
     def with_int_meta(self, int_meta: IntColumns | None) -> "WireBatch":
@@ -174,6 +194,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             epoch=self.epoch,
             int_meta=int_meta,
             row_index=self.row_index,
+            tenant=self.tenant,
         )
 
     def with_row_index(self, row_index: np.ndarray | None) -> "WireBatch":
@@ -186,6 +207,26 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
             epoch=self.epoch,
             int_meta=self.int_meta,
             row_index=row_index,
+            tenant=self.tenant,
+        )
+
+    def with_tenant(self, tenant) -> "WireBatch":
+        """The same wire rows stamped with a tenant column.
+
+        ``tenant`` may be a scalar job id (broadcast down the rows), a
+        per-row array, or ``None`` to strip the column.
+        """
+        if tenant is not None and np.ndim(tenant) == 0:
+            tenant = np.full(len(self), int(tenant), dtype=np.int64)
+        return WireBatch(
+            self.values,
+            self.flow_id,
+            self.seq,
+            self.segment_id,
+            epoch=self.epoch,
+            int_meta=self.int_meta,
+            row_index=self.row_index,
+            tenant=tenant,
         )
 
     # -- Packet interop (the thin boundary view) ------------------------
@@ -194,12 +235,16 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
         if not packets:
             return empty_batch(epoch)
         sizes = [p.size for p in packets]
+        tenant = None
+        if any(p.tenant_id for p in packets):
+            tenant = np.repeat([p.tenant_id for p in packets], sizes)
         return cls(
             np.concatenate([p.payload for p in packets]),
             np.repeat([p.flow_id for p in packets], sizes),
             np.repeat([p.seq for p in packets], sizes),
             np.repeat([p.segment_id for p in packets], sizes),
             epoch=epoch,
+            tenant=tenant,
         )
 
     def to_packets(self) -> list[Packet]:
@@ -211,6 +256,7 @@ class WireBatch:  # __eq__/__hash__ would raise; compare columns explicitly
                 int(self.flow_id[a]),
                 int(self.seq[a]),
                 int(self.segment_id[a]),
+                tenant_id=0 if self.tenant is None else int(self.tenant[a]),
             )
             for a, b in zip(bounds[:-1], bounds[1:])
         ]
@@ -261,6 +307,9 @@ def concat_batches(batches: list[WireBatch]) -> WireBatch:
     row_index = None
     if carrying and all(b.row_index is not None for b in carrying):
         row_index = np.concatenate([b.row_index for b in carrying])
+    tenant = None
+    if carrying and all(b.tenant is not None for b in carrying):
+        tenant = np.concatenate([b.tenant for b in carrying])
     return WireBatch(
         np.concatenate([b.values for b in batches]),
         np.concatenate([b.flow_id for b in batches]),
@@ -269,6 +318,7 @@ def concat_batches(batches: list[WireBatch]) -> WireBatch:
         epoch=epochs.pop() if len(epochs) == 1 else 0,
         int_meta=int_meta,
         row_index=row_index,
+        tenant=tenant,
     )
 
 

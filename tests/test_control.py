@@ -56,6 +56,61 @@ def test_reservoir_tracks_the_whole_prefix():
     assert 0.2 < frac_late < 0.8  # ~uniform over the prefix → ~0.5
 
 
+def test_reservoir_inclusion_uniform_chi_square():
+    """Batched offers keep inclusion uniform across stream position.
+
+    The acceptance draw must use per-element positions ``t+1 .. t+len(v)``
+    — a whole-batch draw against the first element's position would accept
+    every key of a large batch with the prefix's (too-high) probability and
+    over-weight early stream positions.  Feed a 3-batch stream of positions,
+    bin the surviving sample by position, and chi-square the inclusion
+    counts against the uniform expectation (deterministic seeds: the
+    statistic is exact; the bound is the df=7 99.5% quantile with margin).
+    """
+    N, C, B, T = 6144, 256, 8, 200
+    counts = np.zeros(B)
+    for trial in range(T):
+        r = ReservoirSampler(C, seed=1000 + trial)
+        for part in np.split(np.arange(N, dtype=np.int64), 3):
+            r.offer(part)
+        assert r.seen == N
+        counts += np.bincount(r.snapshot() // (N // B), minlength=B)
+    expected = T * C / B
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 20.3, f"inclusion not uniform across positions: {chi2=}"
+    # The batch prefix specifically must not dominate (the failure mode a
+    # single-position acceptance draw produces).
+    rates = counts / (T * C)
+    assert rates[0] < 1.5 * rates[1:].mean()
+
+
+def test_reservoir_quantile_ranges_drifting_regression():
+    """Seed-pinned: sampled splitters on the drifting scenario.
+
+    Any change to the reservoir's acceptance math shifts the surviving
+    sample and therefore these exact splitter boundaries — byte-pinning
+    them turns a silent statistical skew into a loud diff.
+    """
+    vals = drifting(20_000, seed=3)
+    r = ReservoirSampler(512, seed=11)
+    for i in range(0, vals.size, 64):
+        r.offer(vals[i : i + 64])
+    ranges = quantile_ranges(r.snapshot(), 8, MAXV)
+    np.testing.assert_array_equal(
+        ranges,
+        [
+            [0, 8856],
+            [8856, 18068],
+            [18068, 25674],
+            [25674, 33925],
+            [33925, 42695],
+            [42695, 49906],
+            [49906, 58482],
+            [58482, 65536],
+        ],
+    )
+
+
 # -- drift detection -----------------------------------------------------
 
 

@@ -177,6 +177,59 @@ def test_pool_rejects_bad_affinity():
         ServerPool(8, 2, affinity=np.array([0, 0, 0, 0, 1, 1, 1, 9]))
 
 
+def test_pool_as_wide_as_segments_imbalance_over_owners():
+    """S == num_segments: one segment per server, the affinity's edge.
+    server_imbalance must equal the per-segment peak-over-mean (computed
+    over the 8 owners), and the sort stays byte-identical."""
+    vals = SCENARIOS["drifting"](2000, seed=17)
+    got = _assert_pool_matches_single(
+        vals, scenario_max_value("drifting"), "single", {}, "static", SEGS
+    )
+    keys = got.server_keys
+    want = max(keys) / (sum(keys) / len(keys))
+    assert got.server_imbalance == pytest.approx(want)
+
+
+def test_pool_wider_than_segments_rejected_end_to_end():
+    """More servers than segments cannot be sharded contiguously — the
+    pipeline must refuse at construction (the segment_affinity guard),
+    not silently leave servers idle."""
+    with pytest.raises(ValueError, match="exceeds"):
+        run_pipeline(
+            np.arange(100),
+            num_segments=4,
+            segment_length=8,
+            num_servers=8,
+        )
+
+
+def test_pool_imbalance_counts_only_owning_servers():
+    """An explicit affinity that leaves servers idle (the epoch-sliced
+    shape) must not deflate the mean: peak-over-mean is taken over the
+    servers that own segments, so a perfectly even two-owner split reports
+    ~1.0 — not the ~2.0 a divide-by-num_servers would produce."""
+    vals = TRACES["network"](3000, seed=9)
+    res = run_pipeline(
+        vals,
+        num_segments=SEGS,
+        segment_length=LENGTH,
+        max_value=trace_max_value("network"),
+        num_flows=4,
+        payload_size=32,
+    )
+    affinity = np.repeat([0, 3], SEGS // 2)  # servers 1 and 2 idle
+    pool = ServerPool(SEGS, 4, affinity=affinity)
+    pool.ingest_batch(res.delivered)
+    out, _ = pool.finish()
+    np.testing.assert_array_equal(out, np.sort(vals))
+    keys = pool.server_keys
+    assert keys[1] == keys[2] == 0
+    owners = [keys[0], keys[3]]
+    want = max(owners) / (sum(owners) / 2)
+    assert pool.server_imbalance == pytest.approx(want)
+    assert pool.server_imbalance < 2.0  # the deflated figure's floor
+
+
 def test_control_plane_pool_affinity_tiles_per_epoch():
     """Epoch handoff re-shards virtual ids onto the same affinity blocks."""
     plane = AdaptiveControlPlane(SEGS, 63, warmup=8, max_epochs=3)

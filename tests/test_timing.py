@@ -278,6 +278,52 @@ def test_twin_single_packet_flow_exact_makespan():
     assert len(ingress) == 1 and ingress[0].packets == 1
 
 
+def test_twin_all_empty_packets_makespan_floor():
+    """All-empty-packet flow on a finite-rate link: each packet still holds
+    the serializer ≥1 tick (``ceil(0 * denom / numer)`` would be 0 — a
+    zero-tick occupancy lets heartbeat/epoch-marker packets bypass the
+    bandwidth token entirely), so n packets serialize over ≥ n−1 ticks —
+    the same floor the ideal-config anchor pins for n keys."""
+    n = 8
+    spec = LinkSpec(rate_numer=1, rate_denom=2)
+    assert spec.transmission_ticks(np.zeros(n, dtype=np.int64)).min() == 1
+    res = simulate_link(np.zeros(n, dtype=np.int64),
+                        np.zeros(n, dtype=np.int64), spec)
+    np.testing.assert_array_equal(res.order, np.arange(n))
+    assert int(res.ticks.max()) >= n - 1
+    assert np.all(np.diff(res.ticks) >= 1)  # one per serializer slot
+
+
+def test_twin_empty_packets_ideal_link_stays_transparent():
+    """The infinite-rate branch keeps zero occupancy — the all-defaults
+    config must stay the byte- and tick-transparent anchor."""
+    n = 5
+    spec = LinkSpec()
+    np.testing.assert_array_equal(
+        spec.transmission_ticks(np.zeros(n, dtype=np.int64)), np.zeros(n)
+    )
+    res = simulate_link(np.zeros(n, dtype=np.int64),
+                        np.arange(n, dtype=np.int64), spec)
+    np.testing.assert_array_equal(res.ticks, np.arange(n))
+
+
+def test_twin_empty_packets_cannot_skip_a_bounded_buffer():
+    """With one buffer slot, empty packets queue like full ones: the
+    serializer drains them one tick apiece instead of flushing the burst
+    in zero time (pre-clamp they all departed instantly, understating
+    stall_ticks)."""
+    spec = LinkSpec(
+        rate_numer=1, rate_denom=1, buffer_packets=1, policy="backpressure"
+    )
+    n = 6
+    res = simulate_link(np.zeros(n, dtype=np.int64),
+                        np.zeros(n, dtype=np.int64), spec)
+    np.testing.assert_array_equal(res.order, np.arange(n))
+    assert int(res.ticks.max()) >= n - 1
+    assert res.stats.stall_ticks > 0
+    assert res.stats.drops_overflow == 0
+
+
 def test_twin_buffer_of_one_every_packet_overflows():
     """buffer_packets=1 with all packets ready at once: every packet beyond
     the head finds the buffer full and is NACKed at least once — packet i

@@ -108,6 +108,55 @@ def test_concat_and_split_by_flow():
     _assert_batches_equal(parts[1], b, "flow 1")
 
 
+def test_tenant_column_roundtrip_and_boundaries():
+    """The tenant id is a wire column next to flow/seq/segment: it survives
+    the Packet ↔ WireBatch round trip, splits packets on tenant change
+    (two tenants' packets never fuse), and rides through row gathers."""
+    pkts = [
+        Packet([1, 2], 0, 0, segment_id=4, tenant_id=0),
+        Packet([3, 4], 0, 0, segment_id=4, tenant_id=1),  # header-identical
+        Packet([5, 6], 0, 1, segment_id=4, tenant_id=1),
+    ]
+    batch = WireBatch.from_packets(pkts)
+    assert batch.tenant is not None
+    np.testing.assert_array_equal(batch.tenant, [0, 0, 1, 1, 1, 1])
+    # only the tenant column separates the first two packets
+    np.testing.assert_array_equal(batch.packet_starts(), [0, 2, 4])
+    back = batch.to_packets()
+    assert [p.tenant_id for p in back] == [0, 1, 1]
+    np.testing.assert_array_equal(
+        [p.payload for p in back], [[1, 2], [3, 4], [5, 6]]
+    )
+    # row gathers keep tenant aligned with values
+    sub = batch.take(np.array([1, 2, 5]))
+    np.testing.assert_array_equal(sub.tenant, [0, 1, 1])
+    np.testing.assert_array_equal(sub.values, [2, 3, 6])
+    np.testing.assert_array_equal(
+        batch.slice_keys(2, 4).tenant, [1, 1]
+    )
+
+
+def test_tenant_column_defaults_broadcast_and_concat():
+    """tenant is None for single-tenant traffic (zero cost on the hot
+    path); with_tenant broadcasts a scalar; concat carries the column only
+    when every key-carrying part has it — a mixed stream degrades to no
+    column, same as the other optional columns."""
+    a = packetize_batch(np.arange(6), 2, flow_id=0)
+    assert a.tenant is None
+    assert all(p.tenant_id == 0 for p in a.to_packets())
+    b = packetize_batch(np.arange(6, 10), 2, flow_id=1).with_tenant(3)
+    np.testing.assert_array_equal(b.tenant, [3, 3, 3, 3])
+    assert concat_batches([a, b]).tenant is None  # mixed → degrade
+    cat = concat_batches([a.with_tenant(0), b])
+    np.testing.assert_array_equal(cat.tenant, [0] * 6 + [3] * 4)
+    # epoch shift preserves the column
+    np.testing.assert_array_equal(
+        b.with_epoch(1, num_segments=4).tenant, b.tenant
+    )
+    with pytest.raises(ValueError):
+        a.with_tenant(np.zeros(5, dtype=np.int64))  # length mismatch
+
+
 # -- columnar twins of the packet-list operators -------------------------
 
 
