@@ -1,11 +1,11 @@
 """BENCH_*.json artifact schema: write, validate, and gate bench results.
 
 Every `net_bench.py` run writes a ``BENCH_net.json`` the repo can track as a
-trajectory across PRs.  The schema (version 8) is hand-validated here — no
+trajectory across PRs.  The schema (version 9) is hand-validated here — no
 external dependency — and documented in README "Reproducing the numbers":
 
     {
-      "schema_version": 8,
+      "schema_version": 9,
       "bench": "net",
       "config":  {"n", "repeats", "segments", "length", "payload", "k",
                   "quick": bool, "seed": int},
@@ -106,6 +106,22 @@ external dependency — and documented in README "Reproducing the numbers":
                   "isolation_ok": bool}],    # every tenant == its solo run
         "fairness_at_j4": float,   # the CI-gated share (0.0 if no J=4 row)
         "all_isolated": bool,
+      },
+      "fault_tolerance": {      # fail-open degradation sweep (v9)
+        "config": {"segments", "length", "payload", "n", "trace",
+                   "range_mode", "repeats",
+                   "servers": int},       # egress pool size (failover target)
+        "rows": [{"plan": str,            # ladder point ("fault_free", ...)
+                  "spec": str,            # the FaultPlan CLI string ("" = none)
+                  "seconds": float,       # min over repeats
+                  "keys_per_sec": float,
+                  "throughput_ratio": float,  # vs the fault-free row
+                  "identical": bool,          # byte-equal to fault-free run
+                  "hops_dead": int, "hops_degraded": int,
+                  "servers_failed_over": int, "range_fallbacks": int}],
+        "all_faults_identical": bool,
+        "degraded_ratio_single_hop": float,  # CI-gated >= 0.5
+        "floor_ratio": float,     # all-pass-through (plain-sort) baseline
       }
     }
 
@@ -124,13 +140,17 @@ whole-epoch ``device`` engine at least ``--min-e2e-speedup``× the per-hop
 fused path's keys/sec on the 10M-key payload-attached tree run (ISSUE 8),
 and the J=4 multi-tenant round-robin share at least
 ``--min-tenant-fairness`` with every tenant byte-identical to its solo run
-(ISSUE 9):
+(ISSUE 9), and — under the fail-open fault ladder — every faulted run
+byte-identical to the fault-free run (``--require-fault-identical``) with
+the single-hop-degraded point keeping at least ``--min-degraded-ratio`` of
+the fault-free throughput (ISSUE 10):
 
     python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \\
         --min-hop-speedup 3.0 --min-server-scaling 1.0 \\
         --min-server-speedup 2.0 --max-trace-overhead 1.10 \\
         --require-lossless-identical --min-e2e-speedup 2.0 \\
-        --min-tenant-fairness 0.5
+        --min-tenant-fairness 0.5 --require-fault-identical \\
+        --min-degraded-ratio 0.5
 """
 
 from __future__ import annotations
@@ -143,7 +163,7 @@ try:
 except ImportError:  # pragma: no cover - python -m benchmarks.emit
     from benchmarks import _bootstrap  # noqa: F401
 
-SCHEMA_VERSION = 8
+SCHEMA_VERSION = 9
 
 _CONFIG_FIELDS = {
     "n": int,
@@ -301,6 +321,24 @@ _MT_ROW_FIELDS = {
 }
 
 _MT_ENGINES = {"fused", "device"}
+
+_FAULT_CONFIG_FIELDS = dict(_SCALING_CONFIG_FIELDS, servers=int)
+
+_FAULT_ROW_FIELDS = {
+    "plan": str,
+    "spec": str,
+    "seconds": float,
+    "keys_per_sec": float,
+    "throughput_ratio": float,
+    "identical": bool,
+    "hops_dead": int,
+    "hops_degraded": int,
+    "servers_failed_over": int,
+    "range_fallbacks": int,
+}
+
+#: Ladder points the sweep must always report (the two CI-gated anchors).
+_FAULT_REQUIRED_PLANS = {"fault_free", "one_hop_degraded", "all_degraded"}
 
 
 def _check_type(path: str, value, want: type) -> None:
@@ -673,6 +711,65 @@ def validate_net_bench(doc: dict) -> None:
     _check_type("$.multi_tenant.all_isolated", mt.get("all_isolated"), bool)
     if mt["all_isolated"] != all(r["isolation_ok"] for r in mt["rows"]):
         raise ValueError("$.multi_tenant.all_isolated: disagrees with rows")
+    ft = doc.get("fault_tolerance")
+    _check_type("$.fault_tolerance", ft, dict)
+    _check_type("$.fault_tolerance.config", ft.get("config"), dict)
+    for key, want in _FAULT_CONFIG_FIELDS.items():
+        if key not in ft["config"]:
+            raise ValueError(f"$.fault_tolerance.config.{key}: missing")
+        _check_type(f"$.fault_tolerance.config.{key}", ft["config"][key], want)
+    if ft["config"]["servers"] < 1:
+        raise ValueError("$.fault_tolerance.config.servers: < 1")
+    _check_type("$.fault_tolerance.rows", ft.get("rows"), list)
+    if not ft["rows"]:
+        raise ValueError("$.fault_tolerance.rows: empty")
+    plans = set()
+    for i, row in enumerate(ft["rows"]):
+        _check_type(f"$.fault_tolerance.rows[{i}]", row, dict)
+        for key, want in _FAULT_ROW_FIELDS.items():
+            if key not in row:
+                raise ValueError(f"$.fault_tolerance.rows[{i}].{key}: missing")
+            _check_type(f"$.fault_tolerance.rows[{i}].{key}", row[key], want)
+        if row["seconds"] <= 0 or row["keys_per_sec"] <= 0:
+            raise ValueError(
+                f"$.fault_tolerance.rows[{i}]: non-positive timing"
+            )
+        if row["throughput_ratio"] <= 0:
+            raise ValueError(
+                f"$.fault_tolerance.rows[{i}].throughput_ratio: <= 0"
+            )
+        for key in ("hops_dead", "hops_degraded", "servers_failed_over",
+                    "range_fallbacks"):
+            if row[key] < 0:
+                raise ValueError(
+                    f"$.fault_tolerance.rows[{i}].{key}: negative"
+                )
+        if row["plan"] == "fault_free" and (
+            row["spec"] or row["hops_dead"] or row["hops_degraded"]
+            or row["servers_failed_over"] or row["range_fallbacks"]
+        ):
+            raise ValueError(
+                f"$.fault_tolerance.rows[{i}]: fault_free row reports faults"
+            )
+        plans.add(row["plan"])
+    missing = _FAULT_REQUIRED_PLANS - plans
+    if missing:
+        raise ValueError(
+            f"$.fault_tolerance.rows: missing ladder points {sorted(missing)}"
+        )
+    _check_type(
+        "$.fault_tolerance.all_faults_identical",
+        ft.get("all_faults_identical"),
+        bool,
+    )
+    if ft["all_faults_identical"] != all(r["identical"] for r in ft["rows"]):
+        raise ValueError(
+            "$.fault_tolerance.all_faults_identical: disagrees with rows"
+        )
+    for key in ("degraded_ratio_single_hop", "floor_ratio"):
+        _check_type(f"$.fault_tolerance.{key}", ft.get(key), float)
+        if ft[key] <= 0:
+            raise ValueError(f"$.fault_tolerance.{key}: <= 0")
 
 
 def hop_speedup(doc: dict) -> float:
@@ -718,10 +815,23 @@ def tenants_isolated(doc: dict) -> bool:
     return bool(doc["multi_tenant"]["all_isolated"])
 
 
+def faulted_runs_not_identical(doc: dict) -> list[dict]:
+    """Fault-ladder rows whose output diverged from the fault-free run."""
+    return [
+        r for r in doc["fault_tolerance"]["rows"] if not r["identical"]
+    ]
+
+
+def degraded_throughput_ratio(doc: dict) -> float:
+    """The single-hop-degraded point's keys/sec as a fraction of fault-free."""
+    return float(doc["fault_tolerance"]["degraded_ratio_single_hop"])
+
+
 def write_net_bench(
     path: str, config: dict, results: list[dict], hop_throughput: dict,
     server_scaling: dict, server_throughput: dict, telemetry: dict,
     network_sweep: dict, end_to_end: dict, multi_tenant: dict,
+    fault_tolerance: dict,
 ) -> dict:
     """Assemble, validate, and write a net-bench artifact; return the doc."""
     doc = {
@@ -736,6 +846,7 @@ def write_net_bench(
         "network_sweep": network_sweep,
         "end_to_end": end_to_end,
         "multi_tenant": multi_tenant,
+        "fault_tolerance": fault_tolerance,
     }
     validate_net_bench(doc)
     with open(path, "w") as fh:
@@ -824,6 +935,17 @@ def main() -> None:
         "reach this fraction of the fair share, and every tenant must be "
         "byte-identical to its solo run (ISSUE 9 acceptance: 0.5; the "
         "round-robin scheduler is structurally 1.0)",
+    )
+    ap.add_argument(
+        "--require-fault-identical", action="store_true",
+        help="gate: every fault-ladder run's delivered output must be "
+        "byte-identical to the fault-free run — faults cost throughput, "
+        "never keys (ISSUE 10 acceptance)",
+    )
+    ap.add_argument(
+        "--min-degraded-ratio", type=float, default=None,
+        help="gate: the single-hop-degraded point must keep at least this "
+        "fraction of the fault-free keys/sec (ISSUE 10 acceptance: 0.5)",
     )
     args = ap.parse_args()
     with open(args.artifact) as fh:
@@ -914,6 +1036,33 @@ def main() -> None:
             raise SystemExit(
                 "multi-tenant sweep: at least one tenant's output diverged "
                 "from its solo run"
+            )
+    if args.require_fault_identical:
+        bad = faulted_runs_not_identical(doc)
+        plans = len(doc["fault_tolerance"]["rows"])
+        status = "OK" if not bad else "FAIL"
+        print(
+            f"  fault ladder byte-identical: "
+            f"{plans - len(bad)}/{plans} plans {status}"
+        )
+        if bad:
+            raise SystemExit(
+                f"{len(bad)} fault-ladder run(s) diverged from the "
+                f"fault-free output (first: {bad[0]['plan']!r})"
+            )
+    if args.min_degraded_ratio is not None:
+        ratio = degraded_throughput_ratio(doc)
+        floor = float(doc["fault_tolerance"]["floor_ratio"])
+        ok = ratio >= args.min_degraded_ratio
+        status = "OK" if ok else "FAIL"
+        print(
+            f"  degraded throughput (one hop pass-through): {ratio:.2f}x "
+            f"fault-free (floor {floor:.2f}x) {status}"
+        )
+        if not ok:
+            raise SystemExit(
+                f"one-hop-degraded throughput is {ratio:.2f}x fault-free "
+                f"(need {args.min_degraded_ratio}x)"
             )
     if args.min_sampled_ratio is not None:
         ratios = sampled_vs_oracle(doc, tuple(args.traces.split(",")))

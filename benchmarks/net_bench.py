@@ -165,6 +165,33 @@ NETWORK_RATES = (
 NETWORK_BUFFERS = (0, 4, 1)  # output-buffer packets
 NETWORK_BENCH = dict(SCALING_BENCH, loss_rate=0.02, policy="drop")
 
+# Fail-open degradation sweep (schema v9 `fault_tolerance`): the deepest
+# stock fabric (tree, 7 hops) run under a ladder of fault plans — fault-free,
+# one interior hop in pass-through, half the fabric degraded, every switch
+# degraded (the paper's plain-sort baseline: the fabric forwards, the server
+# sorts), plus the recovery paths (interior/leaf hop crash with reroute,
+# mid-stream egress shard failover, corrupted range table falling back to
+# static Alg. 2).  Every row's output is compared byte-for-byte against the
+# fault-free run: faults cost throughput, never keys.  CI gates
+# `--require-fault-identical` and `--min-degraded-ratio` (the
+# one-hop-degraded point must keep >= 0.5x the fault-free keys/sec), and the
+# sweep pins that throughput falls *toward* — never below — the
+# all-pass-through floor.
+FAULT_BENCH = dict(SCALING_BENCH, servers=4)
+FAULT_PLANS = (
+    ("fault_free", ""),
+    ("one_hop_degraded", "degrade:l1n0@0"),
+    ("half_degraded", "degrade:l1n0@0;degrade:l0n0@0;degrade:l0n1@0"),
+    ("all_degraded", "degrade:all@0"),
+    ("dead_interior", "crash:l1n0@0"),
+    ("dead_leaf", "crash:l0n3@0"),
+    ("shard_failover", "server_crash:1@0.5"),
+    (
+        "kitchen_sink",
+        "crash:l1n0@0;degrade:l0n0@0;server_crash:2@0.3;corrupt_ranges@0",
+    ),
+)
+
 # End-to-end device-residency sweep (schema v7 `end_to_end`): the deepest
 # stock fabric (tree, 7 hops) at 10M keys with a 2-column int64 payload
 # riding as packed key+row-index records, drained by the 4-server arena
@@ -665,6 +692,75 @@ def multi_tenant(n: int, repeats: int, seed: int = 0) -> dict:
     }
 
 
+def fault_tolerance(n: int, repeats: int, seed: int = 0) -> dict:
+    """Keys/sec and byte-identity per fault plan on the deep tree fabric.
+
+    The fault-free row anchors both the reference output and the reference
+    throughput; every faulted row must reproduce the bytes exactly and is
+    reported as a throughput ratio against that anchor.  The all-degraded
+    row is the floor — the fabric contributes nothing and the server does
+    every merge, i.e. the paper's plain-sort baseline running over the same
+    wire — and graceful degradation means every partial-fault ratio sits
+    between the floor and 1.0 (modulo timer noise; the CI gate holds the
+    single-hop point at >= 0.5x).
+    """
+    cfg = dict(FAULT_BENCH, n=n, repeats=repeats)
+    trace = TRACES[cfg["trace"]](n, seed=seed)
+    maxv = trace_max_value(cfg["trace"])
+    kw = dict(
+        topology="tree",
+        branching=2,
+        height=3,
+        num_segments=cfg["segments"],
+        segment_length=cfg["length"],
+        max_value=maxv,
+        payload_size=cfg["payload"],
+        num_flows=8,
+        k=K,
+        range_mode=cfg["range_mode"],
+        num_servers=cfg["servers"],
+        seed=seed,
+    )
+    rows = []
+    ref_output = None
+    ref_kps = 0.0
+    for name, spec in FAULT_PLANS:
+        t, res = _best(
+            lambda: run_pipeline(trace, fault_plan=spec or None, **kw),
+            repeats,
+        )
+        kps = n / t
+        if name == "fault_free":
+            ref_output = res.output
+            ref_kps = kps
+            np.testing.assert_array_equal(ref_output, np.sort(trace))
+        identical = bool(np.array_equal(res.output, ref_output))
+        rows.append(
+            {
+                "plan": name,
+                "spec": spec,
+                "seconds": float(t),
+                "keys_per_sec": float(kps),
+                "throughput_ratio": float(kps / ref_kps),
+                "identical": identical,
+                "hops_dead": int(res.fault_hops_dead),
+                "hops_degraded": int(res.fault_hops_degraded),
+                "servers_failed_over": int(res.servers_failed_over),
+                "range_fallbacks": int(res.range_fallbacks),
+            }
+        )
+    by_plan = {r["plan"]: r for r in rows}
+    return {
+        "config": cfg,
+        "rows": rows,
+        "all_faults_identical": all(r["identical"] for r in rows),
+        "degraded_ratio_single_hop": by_plan["one_hop_degraded"][
+            "throughput_ratio"
+        ],
+        "floor_ratio": by_plan["all_degraded"]["throughput_ratio"],
+    }
+
+
 def _best(fn, repeats: int):
     """Min-time over repeats (noise-robust) + the last result."""
     times, out = [], None
@@ -771,6 +867,16 @@ def main() -> None:
         "separate warm-up run per engine pays the jit compiles first, so "
         "one warm repeat suffices — the per-hop fused run is ~7 minutes "
         "at 10M keys; raise for tighter timings)",
+    )
+    ap.add_argument(
+        "--fault-n", type=int, default=1_000_000,
+        help="trace size for the fail-open degradation sweep (>= 1M keys; "
+        "not reduced by --quick — the degraded-throughput ratio gate needs "
+        "fabric work that dwarfs dispatch overhead)",
+    )
+    ap.add_argument(
+        "--fault-repeats", type=int, default=2,
+        help="repeats for the fail-open degradation sweep (min-time wins)",
     )
     ap.add_argument(
         "--mt-n", type=int, default=200_000,
@@ -985,6 +1091,28 @@ def main() -> None:
         flush=True,
     )
 
+    faults = fault_tolerance(
+        args.fault_n, args.fault_repeats, seed=args.seed
+    )
+    for r in faults["rows"]:
+        emit(
+            f"fault_{r['plan']}",
+            r["seconds"] * 1e6,
+            f"keys_per_sec={r['keys_per_sec']:.0f};"
+            f"ratio={r['throughput_ratio']:.2f};"
+            f"identical={int(r['identical'])};"
+            f"dead={r['hops_dead']};degraded={r['hops_degraded']};"
+            f"failovers={r['servers_failed_over']}",
+        )
+    print(
+        f"# fail-open: byte-identical under all "
+        f"{len(faults['rows'])} fault plans: "
+        f"{faults['all_faults_identical']}; one hop degraded keeps "
+        f"{faults['degraded_ratio_single_hop']:.2f}x throughput "
+        f"(all-pass-through floor: {faults['floor_ratio']:.2f}x)",
+        flush=True,
+    )
+
     mt = multi_tenant(args.mt_n, args.mt_repeats, seed=args.seed)
     for r in mt["rows"]:
         emit(
@@ -1033,7 +1161,7 @@ def main() -> None:
             args.out, config, rows, hop_throughput=hop,
             server_scaling=scaling, server_throughput=server,
             telemetry=telemetry, network_sweep=network, end_to_end=e2e,
-            multi_tenant=mt,
+            multi_tenant=mt, fault_tolerance=faults,
         )
         print(f"# wrote {args.out} ({len(rows)} rows)", flush=True)
 

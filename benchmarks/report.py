@@ -302,6 +302,31 @@ def render_net(doc: dict) -> str:
         f"tenants byte-identical to solo: "
         f"{'yes' if mt['all_isolated'] else 'NO'}"
     )
+    ft = doc["fault_tolerance"]
+    fc = ft["config"]
+    out += [
+        "",
+        f"## fail-open fault ladder ({fc['n']:,} keys, tree fabric, "
+        f"{fc['servers']}-server pool, {fc['trace']} trace)",
+        "",
+        "| plan | seconds | keys/sec | vs fault-free | identical |"
+        " dead | degraded | failovers | range fallbacks |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in ft["rows"]:
+        out.append(
+            f"| {r['plan']} | {r['seconds']:.3f} "
+            f"| {r['keys_per_sec']:,.0f} | {r['throughput_ratio']:.2f}x "
+            f"| {'Y' if r['identical'] else 'N'} "
+            f"| {r['hops_dead']} | {r['hops_degraded']} "
+            f"| {r['servers_failed_over']} | {r['range_fallbacks']} |"
+        )
+    out.append(
+        f"\nall fault plans byte-identical: "
+        f"{'yes' if ft['all_faults_identical'] else 'NO'}; one hop "
+        f"degraded keeps {ft['degraded_ratio_single_hop']:.2f}x fault-free "
+        f"throughput (all-pass-through floor: {ft['floor_ratio']:.2f}x)"
+    )
     return "\n".join(out)
 
 

@@ -52,12 +52,18 @@ echo "== BENCH_net.json schema + gates (benchmarks/emit.py) =="
 # per-hop fused path's keys/sec on the 10M-key payload-attached tree run
 # (ISSUE 8); at J=4 concurrent tenants every job's epoch share reaches
 # >= 0.5 of fair (the round-robin scheduler is structurally 1.0) and every
-# tenant's output is byte-identical to its solo run (ISSUE 9).
+# tenant's output is byte-identical to its solo run (ISSUE 9); every
+# fail-open fault-ladder run (degraded/crashed hops, shard failover,
+# corrupted range table) is byte-identical to the fault-free run, and one
+# hop in pass-through keeps >= 0.5x the fault-free throughput (ISSUE 10 —
+# faults cost throughput, never keys, and degradation is graceful down to
+# the all-pass-through plain-sort floor).
 python benchmarks/emit.py BENCH_net.json --min-sampled-ratio 0.8 \
     --min-hop-speedup 3.0 --min-server-scaling 1.0 \
     --min-server-speedup 2.0 --max-trace-overhead 1.10 \
     --require-lossless-identical --min-e2e-speedup 2.0 \
-    --min-tenant-fairness 0.5
+    --min-tenant-fairness 0.5 --require-fault-identical \
+    --min-degraded-ratio 0.5
 
 echo "== benchmark report render (benchmarks/report.py) =="
 python benchmarks/report.py BENCH_net.json

@@ -35,6 +35,7 @@ from .control import (
     AdaptiveControlPlane,
     ControlPlane,
     ReservoirSampler,
+    ranges_valid,
 )
 from .device_epoch import (
     DeviceDelivery,
@@ -51,7 +52,16 @@ from .engine import (
     emission_to_wire,
     fused_hop,
     pallas_row_sort,
+    passthrough_hop,
     run_hop,
+)
+from .faults import (
+    FAULT_KINDS,
+    HOP_STATES,
+    EpochFaults,
+    Fault,
+    FaultPlan,
+    parse_fault_plan,
 )
 from .flow import INTERLEAVES, Flow, interleave, interleave_batch, split_flows
 from .packet import (
@@ -119,6 +129,13 @@ __all__ = [
     "AdaptiveControlPlane",
     "ControlPlane",
     "ReservoirSampler",
+    "ranges_valid",
+    "FAULT_KINDS",
+    "HOP_STATES",
+    "EpochFaults",
+    "Fault",
+    "FaultPlan",
+    "parse_fault_plan",
     "DeviceDelivery",
     "device_hop",
     "device_self_check",
@@ -132,6 +149,7 @@ __all__ = [
     "emission_to_wire",
     "fused_hop",
     "pallas_row_sort",
+    "passthrough_hop",
     "run_hop",
     "INTERLEAVES",
     "Flow",

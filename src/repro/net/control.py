@@ -44,6 +44,29 @@ from ..core.partition import load_imbalance, quantile_ranges, set_ranges
 RANGE_MODES = ("oracle", "sampled", "static")
 
 
+def ranges_valid(
+    ranges: np.ndarray, num_segments: int, max_value: int
+) -> bool:
+    """Whether a range table is safe to program into the fabric.
+
+    A valid table is ``(num_segments, 2)`` rows of ``[lo, hi)`` that start
+    at 0, are non-empty and contiguous, and cover the key domain.  The
+    pipeline runs this check before installing any table; a corrupted one
+    (e.g. a ``range_corrupt`` fault collapsing a row) fails it and the
+    control plane fails open to the static equal-width Alg. 2 table —
+    degraded balance, never a wrong sort.
+    """
+    r = np.asarray(ranges)
+    if r.shape != (num_segments, 2):
+        return False
+    lo, hi = r[:, 0], r[:, 1]
+    if int(lo[0]) != 0 or int(hi[-1]) < int(max_value) + 1:
+        return False
+    if not np.all(hi > lo):
+        return False
+    return bool(np.all(lo[1:] == hi[:-1]))
+
+
 @dataclasses.dataclass(frozen=True)
 class ControlPlane:
     """One-shot control plane: computes the ranges every hop uses (PR 1).

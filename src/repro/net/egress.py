@@ -106,6 +106,8 @@ class ServerPool:
         merge_backend: str = "numpy",
         pool_backend: str = "numpy",
         recovery: bool = False,
+        crash_schedule=None,
+        replay_packets: int | None = None,
         tracer=None,
         metrics=None,
     ) -> None:
@@ -174,6 +176,35 @@ class ServerPool:
         ]
         self.per_server_seconds = [0.0] * num_servers
         self.merge_seconds = 0.0
+        # -- shard-failover state (the fault plane's server_crash path) --
+        # ``crash_schedule`` is [(server, at_packets)]: shard s dies after
+        # the pool has ingested ``at_packets`` packets (any still pending
+        # at finish() fire then).  While a shard has a pending crash, its
+        # ingested sub-batches are retained in a bounded replay buffer so
+        # the adopting neighbor can rebuild its state.
+        self._crash_at: dict[int, int] = {}
+        for s, at in crash_schedule or []:
+            s = int(s)
+            if not 0 <= s < num_servers:
+                raise ValueError(
+                    f"crash_schedule names server {s}; pool has "
+                    f"{num_servers}"
+                )
+            if num_servers == 1:
+                raise ValueError(
+                    "cannot schedule a crash on a single-server pool — "
+                    "there is no shard to fail over to"
+                )
+            self._crash_at[s] = int(at)
+        self._replay_cap = replay_packets
+        self._replay: dict[int, list[WireBatch]] = {
+            s: [] for s in self._crash_at
+        }
+        self._replay_len: dict[int, int] = {s: 0 for s in self._crash_at}
+        self._replay_lost: dict[int, int] = {s: 0 for s in self._crash_at}
+        self._dead: set[int] = set()
+        self._packets_seen = 0
+        self.servers_failed_over = 0
 
     # -- ingestion ------------------------------------------------------
     def ingest_batch(self, batch: WireBatch) -> None:
@@ -197,19 +228,50 @@ class ServerPool:
         if sids.min() < 0 or sids.max() >= self.eff_segments:
             bad = int(sids.min()) if sids.min() < 0 else int(sids.max())
             raise ValueError(f"packet with invalid segment id {bad}")
-        if self.num_servers == 1:
+        if self.num_servers == 1 and not self._crash_at:
             with self._tr.timed("server0:wall", cat="egress", tid=1) as t:
                 self.servers[0].ingest_batch(batch)
             self.per_server_seconds[0] += t.seconds
             return
         starts = batch.packet_starts()
         sizes = np.diff(np.concatenate([starts, [len(batch)]]))
+        P = int(starts.size)
+        # Shard crashes trigger at global packet ordinals: split this
+        # batch's packet window at every pending cut, failing the shard
+        # over *between* the chunks so packets before the cut land on the
+        # dying shard and packets after it follow the updated affinity.
+        cuts = sorted(
+            (max(at - self._packets_seen, 0), s)
+            for s, at in self._crash_at.items()
+            if s not in self._dead and at < self._packets_seen + P
+        )
+        lo = 0
+        for cut, s in cuts:
+            cut = max(cut, lo)
+            if cut > lo:
+                self._ingest_packets(batch, starts, sizes, lo, cut)
+            self._crash(s)
+            lo = cut
+        if lo < P:
+            self._ingest_packets(batch, starts, sizes, lo, P)
+        self._packets_seen += P
+
+    def _ingest_packets(
+        self,
+        batch: WireBatch,
+        starts: np.ndarray,
+        sizes: np.ndarray,
+        plo: int,
+        phi: int,
+    ) -> None:
+        """Demux one contiguous packet window ``[plo, phi)`` of ``batch``."""
         pflow = batch.flow_id[starts]
         pseq = batch.seq[starts]
         pseg = batch.segment_id[starts]
         pserv = self._affinity[pseg]
+        window = np.arange(plo, phi, dtype=np.int64)
         for s in range(self.num_servers):
-            sel = np.nonzero(pserv == s)[0]
+            sel = window[pserv[window] == s]
             if not sel.size:
                 continue
             if self.recovery and sel.size > 1:
@@ -224,6 +286,28 @@ class ServerPool:
                     self.servers[s].dup_packets_dropped += int(dup.sum())
                     sel = sel[keep]
             sub = batch.take(ragged_gather(starts[sel], sizes[sel]))
+            if s in self._crash_at and s not in self._dead:
+                # Retain the shard's history (virtual segment ids — local
+                # renumbering changes at failover) for replay, up to the
+                # bounded buffer; anything beyond the bound is lost and
+                # makes a later crash unrecoverable (checked loudly there).
+                if (
+                    self._replay_cap is not None
+                    and self._replay_len[s] + sel.size > self._replay_cap
+                ):
+                    room = max(self._replay_cap - self._replay_len[s], 0)
+                    self._replay_lost[s] += int(sel.size) - room
+                    if room:
+                        keep_sel = sel[:room]
+                        self._replay[s].append(
+                            batch.take(
+                                ragged_gather(starts[keep_sel], sizes[keep_sel])
+                            )
+                        )
+                        self._replay_len[s] += room
+                else:
+                    self._replay[s].append(sub)
+                    self._replay_len[s] += int(sel.size)
             sub = WireBatch(
                 sub.values,
                 sub.flow_id,
@@ -237,6 +321,76 @@ class ServerPool:
             ) as t:
                 self.servers[s].ingest_batch(sub)
             self.per_server_seconds[s] += t.seconds
+
+    def _crash(self, s: int) -> None:
+        """Kill shard ``s``; the nearest alive neighbor adopts its segment
+        range and re-ingests its history from the replay buffer.
+
+        Replay in original ingestion order rebuilds the dead shard's
+        per-segment state exactly (run detection and the merge ladder are
+        order-deterministic), so the pool's final output stays
+        byte-identical to the fault-free run — the cost is the adopter's
+        extra merge work and a k-way (no longer disjoint) pool merge.
+        """
+        if s in self._dead:
+            return
+        alive = [
+            t
+            for t in range(self.num_servers)
+            if t != s and t not in self._dead
+        ]
+        if not alive:
+            raise ValueError(
+                f"server{s} crashed with no alive server left to adopt "
+                f"its shard — an unsurvivable fault plan"
+            )
+        if self._replay_lost.get(s, 0):
+            raise ValueError(
+                f"server{s} crashed but its replay buffer (capacity "
+                f"{self._replay_cap} packets) had dropped "
+                f"{self._replay_lost[s]} packets — shard unrecoverable; "
+                f"raise replay_packets"
+            )
+        t = min(alive, key=lambda a: (abs(a - s), a))
+        self._dead.add(s)
+        self.servers_failed_over += 1
+        vsegs = np.flatnonzero(self._affinity == s)
+        self._tr.instant(
+            f"fault:server{s}", cat="fault",
+            packets_seen=self._packets_seen,
+            virtual_segments=[int(v) for v in vsegs],
+        )
+        self._tr.instant(f"reroute:server{s}->server{t}", cat="fault")
+        if self._metrics is not None:
+            self._metrics.counter("pool_failovers", f"server{s}").inc()
+        if vsegs.size:
+            # Adopted segments get fresh ports appended after the
+            # adopter's own; its per-segment outputs are no longer one
+            # ascending key range, so it must k-way merge at finish.
+            base = self.servers[t].num_segments
+            self.servers[t].grow(int(vsegs.size))
+            self._local_of[vsegs] = base + np.arange(
+                vsegs.size, dtype=np.int64
+            )
+            self._affinity[vsegs] = t
+            self.servers[t].final_merge = True
+        history = self._replay.pop(s, [])
+        self._replay_len.pop(s, None)
+        self._crash_at.pop(s, None)
+        for sub in history:
+            sub = WireBatch(
+                sub.values,
+                sub.flow_id,
+                sub.seq,
+                self._local_of[sub.segment_id],
+                epoch=sub.epoch,
+                int_meta=sub.int_meta,
+            )
+            with self._tr.timed(
+                f"server{t}:wall", cat="egress", tid=1 + t
+            ) as tt:
+                self.servers[t].ingest_batch(sub)
+            self.per_server_seconds[t] += tt.seconds
 
     def ingest_grouped(
         self,
@@ -297,13 +451,30 @@ class ServerPool:
         are reassembled into virtual-segment order, so the result is
         byte-identical to the unsharded pipeline's.
         """
+        # Crashes scheduled past the end of the stream (or on a stream
+        # short enough never to reach the cut) still fire before drain, so
+        # the fault plan's failovers always happen.
+        for at, s in sorted(
+            (at, s) for s, at in self._crash_at.items() if s not in self._dead
+        ):
+            self._crash(s)
         outs: list[np.ndarray] = []
         per_server_passes: list[list[int]] = []
         for s, server in enumerate(self.servers):
-            with self._tr.timed(
-                f"server{s}:wall", cat="egress", tid=1 + s
-            ) as t:
-                out, passes = server.finish()
+            if s in self._dead:
+                outs.append(np.zeros(0, dtype=np.int64))
+                per_server_passes.append([])
+                continue
+            try:
+                with self._tr.timed(
+                    f"server{s}:wall", cat="egress", tid=1 + s
+                ) as t:
+                    out, passes = server.finish()
+            except ValueError as e:
+                owned = np.flatnonzero(self._affinity == s)
+                raise ValueError(
+                    f"server{s} (virtual segments {owned.tolist()}): {e}"
+                ) from e
             self.per_server_seconds[s] += t.seconds
             outs.append(out)
             per_server_passes.append(passes)
@@ -316,7 +487,7 @@ class ServerPool:
         ) as t:
             output = pool_concat(
                 outs,
-                disjoint=self.num_epochs == 1,
+                disjoint=self.num_epochs == 1 and not self._dead,
                 backend=self.pool_backend,
             )
         self.merge_seconds = t.seconds
@@ -349,8 +520,12 @@ class ServerPool:
 
     @property
     def server_keys(self) -> list[int]:
-        """Keys ingested per server (the pool's load distribution)."""
-        return [s.keys_ingested for s in self.servers]
+        """Keys ingested per server (the pool's load distribution).
+        Dead shards report 0 — their load moved to the adopter."""
+        return [
+            0 if s in self._dead else srv.keys_ingested
+            for s, srv in enumerate(self.servers)
+        ]
 
     @property
     def server_imbalance(self) -> float:

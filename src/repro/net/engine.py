@@ -557,6 +557,96 @@ def faithful_hop(
     return out, stats
 
 
+def passthrough_hop(
+    batch: WireBatch,
+    spec: HopSpec,
+    name: str,
+    *,
+    tracer=None,
+    hop_id: int = 0,
+    int_telemetry: bool = False,
+) -> tuple[WireBatch, HopStats]:
+    """Degraded-mode hop: route and packetize, never sort (fail-open).
+
+    This is the paper's plain-sort baseline expressed per hop: the parse
+    stage still reads the port number (``segment_of`` routing must keep
+    working — segment multisets are the one invariant even a degraded
+    fabric preserves), but the MergeMarathon pipeline is bypassed, so each
+    segment's keys are emitted **in arrival order** — unsorted but
+    lossless.  Downstream, the streaming server just detects shorter runs
+    and does more merge work; the output stays byte-identical because the
+    sort was only ever an accelerator.
+
+    Cut-through shape matches the real engines: a key's emission index is
+    its arrival index (nothing is held back), so a packet ships when its
+    last key arrives — the pacing map the timing overlay expects.
+    """
+    from ..core.partition import segment_of
+
+    tr = tracer or NULL_TRACER
+    n = len(batch)
+    S, L = spec.num_segments, spec.segment_length
+    if n == 0:
+        stats = HopStats._from_grouped(
+            name,
+            np.zeros(0, dtype=np.int64),
+            np.zeros(S, dtype=np.int64),
+            L,
+        )
+        stats = dataclasses.replace(
+            stats, recirculations=0,
+            ship_emission=np.zeros(0, dtype=np.int64),
+        )
+        out = empty_batch(batch.epoch)
+        if int_telemetry or batch.int_meta is not None:
+            depth = 0 if batch.int_meta is None else batch.int_meta.depth
+            out = out.with_int_meta(IntColumns.empty(0, depth + 1))
+        if batch.row_index is not None:
+            out = out.with_row_index(np.zeros(0, dtype=np.int64))
+        return out, stats
+    with tr.span("route", cat="stage"):
+        sids = segment_of(batch.values, spec.ranges)
+        order = np.argsort(sids, kind="stable")
+        grouped = batch.values[order]
+        counts = np.bincount(sids, minlength=S)
+    with tr.span("stats", cat="stage"):
+        stats = HopStats._from_grouped(name, grouped, counts, L)
+        # No marathon, no flush passes: a degraded hop forwards, it never
+        # recirculates.
+        stats = dataclasses.replace(stats, recirculations=0)
+    with tr.span("packetize", cat="stage"):
+        # For a stable grouping permutation the slot→emission-index map is
+        # the permutation itself: grouped slot j holds arrival order[j],
+        # which is emitted at index order[j].
+        out, idx, ship = _wire_from_grouped(
+            grouped, order.astype(np.int64), counts, spec.payload_size,
+            batch.epoch,
+        )
+    stats = dataclasses.replace(stats, ship_emission=ship)
+    want_int = int_telemetry or batch.int_meta is not None
+    if want_int or batch.row_index is not None:
+        in_rows = order[idx]
+        if batch.row_index is not None:
+            out = out.with_row_index(batch.row_index[in_rows])
+        if want_int:
+            with tr.span("int_stamp", cat="stage"):
+                starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+                seg_of_pos = np.repeat(
+                    np.arange(counts.size, dtype=np.int64), counts
+                )
+                # Arrival rank within the segment; occupancy is 1 — a
+                # pass-through key leaves the moment it lands.
+                rank = np.arange(n, dtype=np.int64) - starts[seg_of_pos]
+                prev = batch.int_meta
+                if prev is None:
+                    prev = IntColumns.empty(n)
+                stack = prev.take(in_rows).stamp(
+                    hop_id, np.ones(idx.size, dtype=np.int64), rank[idx]
+                )
+                out = out.with_int_meta(stack)
+    return out, stats
+
+
 def _pallas_block_sort(values: np.ndarray, block: int) -> np.ndarray:
     """Per-segment MergeMarathon emission on the bitonic TPU kernel
     (legacy: one host↔device round-trip per segment — the fused path's

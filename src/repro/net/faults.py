@@ -1,0 +1,318 @@
+"""Deterministic chaos plane: scheduled component faults + fail-open recovery.
+
+The paper's in-network sort is an *accelerator*, not a correctness
+dependency — the compute server can always fall back to plain merge sort on
+the raw stream (the paper's own baseline).  This module makes that contract
+executable: a :class:`FaultPlan` schedules component faults at
+(epoch, hop/link/server) granularity, and the dataplane's recovery paths
+(:func:`repro.net.topology.run_graph`, :class:`repro.net.egress.ServerPool`,
+:func:`repro.net.pipeline.run_pipeline`) make every injected fault
+survivable with output byte-identical to the fault-free run.  Losing a
+component costs *speed* — shorter runs, more merge passes, rerouted load —
+never bytes.
+
+Fault kinds and who recovers:
+
+* ``hop_crash`` — the hop is gone for the epoch (``until=`` models
+  crash-restart).  A dead *ingress* hop's flows are rehashed onto the alive
+  ingress hops (ECMP-style ``flow_id % alive``); a dead *interior* hop is
+  skipped — its parents' uplinks hoist to its consumer.  The egress hop has
+  no sibling to reroute to, so killing it raises (a key-destroying plan).
+* ``hop_degrade`` — partial sort disabled: the hop routes and packetizes
+  but never sorts (:func:`repro.net.engine.passthrough_hop`) — exactly the
+  paper's plain-sort baseline, per hop.  The streaming server just sees
+  shorter runs and does more merge work.  ``target="all"`` degrades every
+  hop.
+* ``link_flap`` — the named link (``ingress:<hop>``, ``uplink:<hop>``,
+  ``egress``, or the class names ``ingress``/``fabric``/``egress``) runs
+  with ``loss_rate``/``extra_latency`` added for the epoch; the per-link
+  ARQ absorbs it as retransmit time.  No-op without a
+  :class:`~repro.net.timing.NetworkConfig`.
+* ``server_crash`` — pool shard ``target`` dies after ingesting
+  ``at_fraction`` of the delivered packets; the nearest alive shard adopts
+  its segment range and re-ingests its keys from the pool's bounded egress
+  replay buffer.  Ignored on a single-server pool (no failover target —
+  killing the only server would destroy keys).
+* ``range_corrupt`` — the control plane installs a corrupted range table
+  for the epoch; the pipeline detects it
+  (:func:`repro.net.control.ranges_valid`) and falls back to the static
+  equal-width Alg. 2 table.
+
+Everything is seeded and deterministic: the same plan against the same run
+produces the same faults, recoveries, and bytes.
+
+CLI string form (``parse_fault_plan``), entries separated by ``;``::
+
+    degrade:spine@0        # pass-through from epoch 0 (permanent)
+    degrade:all            # every hop degraded (the plain-sort baseline)
+    crash:l1n0@1-3         # dead for epochs [1, 3) — crash-restart
+    flap:uplink:leaf0@0    # lossy+slow link for the epoch
+    server_crash:1@0.5     # shard 1 dies at 50% of delivered packets
+    corrupt_ranges@0       # epoch 0's range table is garbage
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .timing import LinkSpec
+
+#: Component-fault kinds a plan can schedule.
+FAULT_KINDS = (
+    "hop_crash",
+    "hop_degrade",
+    "link_flap",
+    "server_crash",
+    "range_corrupt",
+)
+
+#: Hop health states the recovery state machine walks:
+#: healthy → degraded (pass-through, lossless) → dead (rerouted around).
+HOP_STATES = ("healthy", "degraded", "dead")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled component fault.
+
+    ``epoch`` is the first epoch affected; ``until`` (exclusive) models
+    crash-restart / flap-recovery — ``None`` means permanent.
+    ``server_crash`` ignores the epoch window: its trigger is
+    ``at_fraction`` of the delivered packet stream, which spans epochs.
+    """
+
+    kind: str
+    target: str = ""
+    epoch: int = 0
+    until: int | None = None
+    loss_rate: float = 0.25  # link_flap: added wire-loss probability
+    extra_latency: int = 8  # link_flap: added propagation ticks
+    at_fraction: float = 0.5  # server_crash: delivered-packet fraction
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; options: {FAULT_KINDS}"
+            )
+        if self.epoch < 0:
+            raise ValueError("fault epoch must be >= 0")
+        if self.until is not None and self.until <= self.epoch:
+            raise ValueError("until must be > epoch (exclusive restart)")
+        if not 0.0 <= self.loss_rate <= 1.0:
+            raise ValueError("loss_rate must be in [0, 1]")
+        if self.extra_latency < 0:
+            raise ValueError("extra_latency must be >= 0")
+        if not 0.0 <= self.at_fraction <= 1.0:
+            raise ValueError("at_fraction must be in [0, 1]")
+        if self.kind in ("hop_crash", "hop_degrade", "link_flap"):
+            if not self.target:
+                raise ValueError(f"{self.kind} needs a target name")
+        elif self.kind == "server_crash":
+            try:
+                int(self.target)
+            except ValueError:
+                raise ValueError(
+                    f"server_crash target must be a server index, "
+                    f"got {self.target!r}"
+                ) from None
+        elif self.target:
+            raise ValueError("range_corrupt takes no target")
+
+    def active_at(self, epoch: int) -> bool:
+        """Whether this fault is live during ``epoch``."""
+        return epoch >= self.epoch and (
+            self.until is None or epoch < self.until
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochFaults:
+    """One epoch's resolved fault state — what the dataplane consumes.
+
+    ``hop_faults`` maps hop name → ``"degraded"``/``"dead"`` (``"all"`` is
+    a wildcard); ``link_faults`` holds the epoch's live flaps;
+    ``range_corrupt`` marks the control-plane table as garbage this epoch.
+    """
+
+    epoch: int
+    seed: int
+    hop_faults: dict
+    link_faults: tuple
+    range_corrupt: bool = False
+
+    def hop_state(self, name: str) -> str:
+        """Health of hop ``name`` this epoch (the per-hop state machine)."""
+        if name in self.hop_faults:
+            return self.hop_faults[name]
+        return self.hop_faults.get("all", "healthy")
+
+    @property
+    def any_dataplane(self) -> bool:
+        """Whether the hop graph or its links are affected at all (the
+        switch to the host recovery path; server/range faults alone keep
+        the compiled-epoch fast path)."""
+        return bool(self.hop_faults or self.link_faults)
+
+    def link_spec(self, name: str, base: LinkSpec) -> LinkSpec:
+        """``base`` with every live flap matching ``name`` applied.
+
+        ``name`` is the timing overlay's link name (``ingress:<hop>``,
+        ``uplink:<hop>``, ``egress``); a flap targets one link exactly or
+        a whole class (``ingress``, ``fabric``/``uplink``, ``egress``).
+        """
+        cls = name.split(":", 1)[0]
+        for f in self.link_faults:
+            t = f.target
+            if t == name or t == cls or (t == "fabric" and cls == "uplink"):
+                base = dataclasses.replace(
+                    base,
+                    latency=base.latency + f.extra_latency,
+                    loss_rate=min(1.0, base.loss_rate + f.loss_rate),
+                )
+        return base
+
+    def corrupt_ranges(self, ranges: np.ndarray) -> np.ndarray:
+        """What the corrupted control plane would install this epoch.
+
+        Deterministic per (seed, epoch): one row of the table collapses to
+        an empty ``[lo, lo)`` interval, breaking the ``hi > lo`` and
+        contiguity invariants :func:`repro.net.control.ranges_valid`
+        checks — the corruption is *detectable*, which is what the
+        fallback path keys on.
+        """
+        if not self.range_corrupt:
+            return ranges
+        ranges = np.asarray(ranges, dtype=np.int64)
+        bad = ranges.copy()
+        rng = np.random.default_rng([self.seed, self.epoch, 0xFA17])
+        row = int(rng.integers(0, bad.shape[0]))
+        bad[row, 1] = bad[row, 0]
+        return bad
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, seeded schedule of component faults.
+
+    The plan is data; the recovery machinery lives where the components
+    live.  ``run_pipeline(fault_plan=...)`` resolves the plan per epoch
+    (:meth:`at_epoch`) and per pool (:meth:`server_crashes`).
+    """
+
+    faults: tuple = ()
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "faults", tuple(self.faults))
+        for f in self.faults:
+            if not isinstance(f, Fault):
+                raise TypeError(f"FaultPlan entries must be Fault, got {f!r}")
+
+    def __bool__(self) -> bool:
+        return bool(self.faults)
+
+    def at_epoch(self, epoch: int) -> EpochFaults:
+        """Resolve the plan for one control-plane epoch.  A crash always
+        beats a degrade on the same hop."""
+        hop: dict = {}
+        links: list = []
+        corrupt = False
+        for f in self.faults:
+            if f.kind == "server_crash" or not f.active_at(epoch):
+                continue
+            if f.kind == "hop_crash":
+                hop[f.target] = "dead"
+            elif f.kind == "hop_degrade":
+                if hop.get(f.target) != "dead":
+                    hop[f.target] = "degraded"
+            elif f.kind == "link_flap":
+                links.append(f)
+            else:
+                corrupt = True
+        return EpochFaults(
+            epoch=epoch,
+            seed=self.seed,
+            hop_faults=hop,
+            link_faults=tuple(links),
+            range_corrupt=corrupt,
+        )
+
+    def server_crashes(self, num_servers: int) -> list:
+        """``[(server, at_fraction), ...]`` applicable to a pool of
+        ``num_servers`` — crashes of out-of-range shards are dropped, and a
+        single-server pool ignores them entirely (no failover target, so
+        honoring the crash would destroy keys)."""
+        if num_servers <= 1:
+            return []
+        out: list = []
+        seen: set = set()
+        for f in self.faults:
+            if f.kind != "server_crash":
+                continue
+            s = int(f.target)
+            if 0 <= s < num_servers and s not in seen:
+                seen.add(s)
+                out.append((s, f.at_fraction))
+        return out
+
+    def describe(self) -> str:
+        """The CLI string form back (round-trips through
+        :func:`parse_fault_plan` for the default knobs)."""
+        parts = []
+        for f in self.faults:
+            if f.kind == "server_crash":
+                parts.append(f"server_crash:{f.target}@{f.at_fraction:g}")
+                continue
+            when = f"@{f.epoch}" + (f"-{f.until}" if f.until is not None else "")
+            short = {
+                "hop_crash": "crash",
+                "hop_degrade": "degrade",
+                "link_flap": "flap",
+                "range_corrupt": "corrupt_ranges",
+            }[f.kind]
+            head = f"{short}:{f.target}" if f.target else short
+            parts.append(head + when)
+        return ";".join(parts)
+
+
+_CLI_KINDS = {
+    "crash": "hop_crash",
+    "degrade": "hop_degrade",
+    "flap": "link_flap",
+    "server_crash": "server_crash",
+    "corrupt_ranges": "range_corrupt",
+}
+_CLI_KINDS.update({k: k for k in FAULT_KINDS})
+
+
+def parse_fault_plan(spec: str, seed: int = 0) -> FaultPlan:
+    """Parse the ``;``-separated CLI form (see the module docstring) into a
+    :class:`FaultPlan`."""
+    faults: list[Fault] = []
+    for raw in spec.split(";"):
+        entry = raw.strip()
+        if not entry:
+            continue
+        head, sep, suffix = entry.rpartition("@")
+        if not sep:
+            head, suffix = entry, ""
+        kind_word, _, target = head.partition(":")
+        kind = _CLI_KINDS.get(kind_word)
+        if kind is None:
+            raise ValueError(
+                f"unknown fault {kind_word!r} in {entry!r}; "
+                f"options: {sorted(set(_CLI_KINDS))}"
+            )
+        kw: dict = {}
+        if kind == "server_crash":
+            if suffix:
+                kw["at_fraction"] = float(suffix)
+        elif suffix:
+            first, sep2, rest = suffix.partition("-")
+            kw["epoch"] = int(first)
+            if sep2:
+                kw["until"] = int(rest)
+        faults.append(Fault(kind, target, **kw))
+    return FaultPlan(tuple(faults), seed=seed)

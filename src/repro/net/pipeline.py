@@ -50,9 +50,10 @@ from repro.obs.telemetry import int_summary
 from repro.obs.trace import NULL_TRACER
 
 from ..core.partition import quantile_ranges, set_ranges
-from .control import RANGE_MODES, AdaptiveControlPlane, ControlPlane
+from .control import RANGE_MODES, AdaptiveControlPlane, ControlPlane, ranges_valid
 from .egress import ServerPool
 from .engine import HopStats
+from .faults import FaultPlan, parse_fault_plan
 from .flow import interleave_batch, split_flows
 from .packet import DEFAULT_PAYLOAD, Packet
 from .server import StreamingServer
@@ -105,6 +106,14 @@ class PipelineResult:
     # once at egress.  None for key-only runs.
     sorted_payload: np.ndarray | None = None
     payload_row_order: np.ndarray | None = None
+    # Fail-open recovery counters (non-zero only under a fault plan): hops
+    # the plan killed/degraded (summed over epochs), shard failovers the
+    # pool performed, and corrupted range tables replaced by the static
+    # fallback.  The sorted stream itself is byte-identical regardless.
+    fault_hops_dead: int = 0
+    fault_hops_degraded: int = 0
+    servers_failed_over: int = 0
+    range_fallbacks: int = 0
 
 
 def jitter_delivery(
@@ -175,6 +184,8 @@ def run_pipeline(
     num_servers: int = 1,
     merge_backend: str = "numpy",
     pool_backend: str = "numpy",
+    fault_plan: "FaultPlan | str | None" = None,
+    replay_packets: int | None = None,
     payload: np.ndarray | None = None,
     verify: bool = False,
     tracer=None,
@@ -224,6 +235,24 @@ def run_pipeline(
     (off + a lossy egress link raises on the first duplicate — the PR-4
     detection behaviour).
 
+    ``fault_plan`` (a :class:`~repro.net.faults.FaultPlan` or its CLI
+    string form, e.g. ``"crash:leaf0@0;server_crash:1@0.5"``) injects
+    deterministic faults and exercises the fail-open recovery machinery:
+    dead hops are rerouted around (ingress flows rehash onto alive leaves,
+    interior consumers absorb dead parents' feeds), degraded hops forward
+    in pass-through mode (the paper's plain-sort baseline — unsorted but
+    lossless), flapped links take the extra latency/loss through the
+    timing model's ARQ, crashed egress shards fail over to the nearest
+    alive neighbor (which re-ingests the dead shard's history from a
+    replay buffer bounded by ``replay_packets``; ``None`` = unbounded),
+    and a corrupted range table is detected and replaced by the static
+    equal-width fallback.  Every *survivable* plan (one that leaves the
+    egress hop, at least one ingress hop, and — for shard crashes — an
+    adoptive server alive) yields output byte-identical to the fault-free
+    run; only throughput and load balance degrade.  Recovery counters land
+    on the result (``fault_hops_dead``, ``fault_hops_degraded``,
+    ``servers_failed_over``, ``range_fallbacks``).
+
     ``payload`` attaches a record table (one row per key, any trailing
     shape): the fabric sorts **records**, not bare keys.  The payload bytes
     never ride the wire — each key carries its input-row index as a wire
@@ -254,6 +283,11 @@ def run_pipeline(
         # A timed network's egress link is raw (duplicates, late
         # retransmits) — the pool must heal it by default.
         recovery = network is not None
+    if isinstance(fault_plan, str):
+        fault_plan = parse_fault_plan(fault_plan, seed=seed)
+    if fault_plan is not None and not fault_plan:
+        fault_plan = None  # empty plan == no plan
+    fault_counters = {"dead": 0, "degraded": 0, "range_fallbacks": 0}
 
     tr = tracer or NULL_TRACER
     if metrics is None and tr.enabled:
@@ -294,7 +328,24 @@ def run_pipeline(
             )
             arrivals = arrivals.with_row_index(rows.values)
 
-        def _run_topology(ranges: np.ndarray, batch: WireBatch):
+        def _run_topology(ranges: np.ndarray, batch: WireBatch, epoch: int = 0):
+            ef = fault_plan.at_epoch(epoch) if fault_plan is not None else None
+            if ef is not None and ef.range_corrupt:
+                bad = ef.corrupt_ranges(ranges)
+                if not ranges_valid(bad, num_segments, max_value):
+                    # Fail-open control plane: a table that fails the
+                    # validity check is never programmed — fall back to
+                    # the static Alg. 2 equal-width table for this epoch
+                    # (balance degrades; the sort does not).
+                    ranges = set_ranges(max_value, num_segments)
+                    fault_counters["range_fallbacks"] += 1
+                    tr.instant(
+                        "fault:range_table", cat="fault", epoch=epoch
+                    )
+                    if metrics is not None:
+                        metrics.counter("fault_range_fallbacks").inc()
+                else:  # pragma: no cover — corruption is always detectable
+                    ranges = bad
             topo = make_topology(
                 topology,
                 num_segments=num_segments,
@@ -307,12 +358,20 @@ def run_pipeline(
                 payload_size=payload_size,
                 **topo_kw,
             )
+            if ef is not None and ef.any_dataplane:
+                for node in topo.graph().nodes:
+                    st = ef.hop_state(node.name)
+                    if st == "dead":
+                        fault_counters["dead"] += 1
+                    elif st == "degraded":
+                        fault_counters["degraded"] += 1
             res = topo.run_batch(
                 batch,
                 tracer=tracer,
                 metrics=metrics,
                 int_telemetry=int_telemetry,
                 network=network,
+                faults=ef,
             )
             if network is None:
                 out, stats = res
@@ -332,7 +391,7 @@ def run_pipeline(
             net_reports = []
             for e, (ranges_e, sub) in enumerate(epochs):
                 with tr.span(f"epoch:{e}", cat="pipeline", keys=len(sub)):
-                    out, stats, rep = _run_topology(ranges_e, sub)
+                    out, stats, rep = _run_topology(ranges_e, sub, epoch=e)
                 delivered_epochs.append(out.with_epoch(e, num_segments))
                 hop_stats.extend(
                     dataclasses.replace(st, name=f"e{e}:{st.name}")
@@ -380,6 +439,19 @@ def run_pipeline(
                 delivered, jitter_window, seed=seed + 1
             )
 
+        # Shard-crash fractions resolve against the delivered packet count:
+        # ``at_fraction=0.5`` kills the shard after half the wire's packets
+        # have been demuxed (mid-stream, deterministically).
+        crash_sched = (
+            fault_plan.server_crashes(num_servers)
+            if fault_plan is not None
+            else []
+        )
+        if crash_sched:
+            total_pkts = int(delivered.packet_starts().size)
+            crash_sched = [
+                (s, int(round(frac * total_pkts))) for s, frac in crash_sched
+            ]
         pool = ServerPool(
             num_segments,
             num_servers,
@@ -390,6 +462,8 @@ def run_pipeline(
             merge_backend=merge_backend,
             pool_backend=pool_backend,
             recovery=recovery,
+            crash_schedule=crash_sched or None,
+            replay_packets=replay_packets,
             tracer=tracer,
             metrics=metrics,
         )
@@ -401,6 +475,7 @@ def run_pipeline(
         if (
             grouped is not None
             and not recovery
+            and not crash_sched
             and (reorder_capacity is None or reorder_capacity >= 1)
             and eff_segments == num_segments
         ):
@@ -484,6 +559,10 @@ def run_pipeline(
         spilled_keys=pool.spilled_keys,
         sorted_payload=sorted_payload,
         payload_row_order=row_order,
+        fault_hops_dead=fault_counters["dead"],
+        fault_hops_degraded=fault_counters["degraded"],
+        servers_failed_over=pool.servers_failed_over,
+        range_fallbacks=fault_counters["range_fallbacks"],
     )
 
 

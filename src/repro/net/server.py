@@ -137,6 +137,29 @@ class StreamingServer:
         the egress pool's per-server share of the stream)."""
         return self._ingested
 
+    def grow(self, m: int) -> None:
+        """Failover adoption: append ``m`` fresh segments (ports).
+
+        The pool's shard-failover path calls this on the adopting server so
+        a dead neighbor's segment range gets fresh per-port state (reorder
+        buffer, seq cursor, run detector, merge ladder) appended after the
+        adopter's own — the replayed history then rebuilds exactly the
+        state the dead shard had, because run detection and the ladder are
+        deterministic in ingestion order.
+        """
+        if m <= 0:
+            raise ValueError("grow() needs a positive segment count")
+        self.num_segments += m
+        self._pending.extend({} for _ in range(m))
+        self._next_seq.extend([0] * m)
+        self._cur.extend([] for _ in range(m))
+        self._tail.extend([None] * m)
+        self._levels.extend([] for _ in range(m))
+        self._run_count.extend([0] * m)
+        self._spilled.extend(set() for _ in range(m))
+        if self._arenas is not None:
+            self._arenas.extend(RunArena() for _ in range(m))
+
     # -- ingestion ------------------------------------------------------
     def ingest(self, packet: Packet) -> None:
         self._ingest_payload(packet.segment_id, packet.seq, packet.payload)
@@ -382,10 +405,18 @@ class StreamingServer:
             # packet never arrived.  Recovery dedupes and reorders; it never
             # invents keys, so a genuine loss still fails here.
             if self._pending[sid] or self._spilled[sid]:
-                missing = self._next_seq[sid]
+                have = set(self._pending[sid]) | self._spilled[sid]
+                missing = [
+                    q
+                    for q in range(self._next_seq[sid], max(have) + 1)
+                    if q not in have
+                ]
                 raise ValueError(
-                    f"segment {sid}: stream incomplete, waiting on seq "
-                    f"{missing} with {len(self._pending[sid])} buffered"
+                    f"{self.name}: segment {sid}: stream incomplete — "
+                    f"missing seqs {_format_seq_ranges(missing)} "
+                    f"(next expected {self._next_seq[sid]}, "
+                    f"{len(self._pending[sid])} buffered, "
+                    f"{len(self._spilled[sid])} spilled out of band)"
                 )
         with self._tr.span(
             f"{self.name}:finish", cat="server", tid=self.lane
@@ -471,6 +502,23 @@ class StreamingServer:
             out = np.concatenate(outs)
         assert out.size == self._ingested
         return out, passes
+
+
+def _format_seq_ranges(seqs: list[int]) -> str:
+    """Compress a sorted seq list into range notation: ``[3-5, 9]`` — the
+    loss-diagnostic shape the finish() error reports."""
+    if not seqs:
+        return "[]"
+    parts: list[str] = []
+    lo = prev = seqs[0]
+    for q in seqs[1:]:
+        if q == prev + 1:
+            prev = q
+            continue
+        parts.append(str(lo) if lo == prev else f"{lo}-{prev}")
+        lo = prev = q
+    parts.append(str(lo) if lo == prev else f"{lo}-{prev}")
+    return "[" + ", ".join(parts) + "]"
 
 
 def stream_sort(

@@ -17,12 +17,13 @@ token-based switch model the ROADMAP points at (firesim's ``switch.cc``:
   and a bounded output buffer of ``buffer_packets`` slots (a slot is held
   from admission until the packet fully departs);
 * **buffer overflow** triggers the link's policy: ``"drop"`` NACKs the
-  packet back to the sender's replay buffer and re-offers it one retransmit
-  timeout later, while ``"backpressure"`` stalls admission until the
-  head-of-line departure frees a slot (the upstream port eats the stall);
+  packet back to the sender's replay buffer and re-offers it after an
+  exponential backoff (``rto·2^attempt``, capped at ``8·rto``), while
+  ``"backpressure"`` stalls admission until the head-of-line departure
+  frees a slot (the upstream port eats the stall);
 * the **wire itself** can lose a packet (``loss_rate``, re-sent from the
-  replay buffer after ``rto`` ticks) or deliver a spurious duplicate
-  (``dup_rate`` — a retransmission whose ACK was lost);
+  replay buffer on the same backoff schedule) or deliver a spurious
+  duplicate (``dup_rate`` — a retransmission whose ACK was lost);
 * a hop *emits* its output packets paced by its arrivals: output packet
   ``p`` ships when its ship emission index's arrival has landed (plus the
   switch's ``switch_latency`` processing delay) — the cut-through coupling
@@ -121,6 +122,14 @@ class LinkSpec:
     def effective_rto(self) -> int:
         """NACK/timeout before a replay re-offer: one round trip plus slack."""
         return self.rto if self.rto is not None else 2 * self.latency + 4
+
+    def backoff(self, attempt: int) -> int:
+        """Retransmit delay before re-offer number ``attempt + 1``:
+        exponential, ``rto * 2**attempt``, capped at ``8 * rto`` (a NACK
+        storm stretches, a single loss still retries after one timeout —
+        attempt 0 backs off exactly ``rto``, same as the old fixed delay)."""
+        rto = self.effective_rto
+        return min(rto << min(attempt, 3), 8 * rto)
 
     def transmission_ticks(self, sizes: np.ndarray) -> np.ndarray:
         """Serializer occupancy per packet: ``ceil(keys * denom / numer)``,
@@ -284,7 +293,9 @@ def simulate_link(
             if spec.policy == "drop" and attempt + 1 < spec.max_attempts:
                 stats.drops_overflow += 1
                 stats.retransmits += 1
-                heapq.heappush(heap, (t + rto, counter, i, attempt + 1))
+                heapq.heappush(
+                    heap, (t + spec.backoff(attempt), counter, i, attempt + 1)
+                )
                 counter += 1
                 continue
             # Backpressure — or a drop link whose replay budget ran out
@@ -309,7 +320,9 @@ def simulate_link(
         ):
             stats.drops_wire += 1
             stats.retransmits += 1
-            heapq.heappush(heap, (depart + rto, counter, i, attempt + 1))
+            heapq.heappush(
+                heap, (depart + spec.backoff(attempt), counter, i, attempt + 1)
+            )
             counter += 1
             continue
         arrival = depart + spec.latency
@@ -415,12 +428,17 @@ class GraphTimer:
         *,
         tracer=None,
         metrics=None,
+        link_override=None,
+        ingress_group: np.ndarray | None = None,
     ) -> None:
         self._graph = graph
         self._net = network
         self._rng = np.random.default_rng(network.seed)
         self._tr = tracer or NULL_TRACER
         self._metrics = metrics
+        # Fault plane hook: ``link_override(name, spec) -> LinkSpec``
+        # applies the epoch's live link flaps to the named link.
+        self._override = link_override
         self.links: list[LinkStats] = []
         self._out_ticks: list[np.ndarray | None] = [None] * len(graph.nodes)
         self._egress_ready: np.ndarray | None = None
@@ -429,12 +447,24 @@ class GraphTimer:
         starts = batch.packet_starts()
         sizes = np.diff(np.concatenate([starts, [len(batch)]]))
         self._arr_sizes = sizes
+        if not starts.size:
+            grp = np.zeros(0, dtype=np.int64)
+        elif ingress_group is not None:
+            # Fault reroute: per-row rehashed groups (constant within a
+            # packet — the rehash keys on flow identity).
+            grp = np.asarray(ingress_group, dtype=np.int64)[starts]
+        else:
+            grp = batch.flow_id[starts] % graph.num_groups
         self._arr_ready = np.cumsum(sizes) - 1 if sizes.size else sizes
-        self._arr_group = (
-            batch.flow_id[starts] % graph.num_groups
-            if starts.size
-            else np.zeros(0, dtype=np.int64)
-        )
+        self._arr_group = grp
+
+    def _link(self, kind: str, name: str) -> LinkSpec:
+        """The spec governing one named link, with any fault-plane
+        override (link flap) applied on top of the class default."""
+        spec = self._net.link_for(kind)
+        if self._override is not None:
+            spec = self._override(name, spec)
+        return spec
 
     def _record(self, res: LinkResult) -> None:
         st = res.stats
@@ -464,14 +494,20 @@ class GraphTimer:
         return np.diff(np.concatenate([starts, [len(batch)]]))
 
     def after_hop(self, i: int, node, inp: WireBatch, out: WireBatch,
-                  stats, outs: list[WireBatch]) -> None:
+                  stats, outs: list[WireBatch], *, parents=None) -> None:
         """Propagate ticks through node ``i``: input-link delivery, emission
-        pacing, and (for non-egress nodes) the uplink to the consumer."""
+        pacing, and (for non-egress nodes) the uplink to the consumer.
+
+        ``parents`` overrides the node's declared parent list with the
+        *effective* one when the fault plane rerouted around a dead hop —
+        the tick interleave must follow the same dataflow the merge did.
+        """
         if node.parents:
+            plist = node.parents if parents is None else parents
             # The RR merge interleaves parents one packet per turn —
             # replicate it at packet granularity to carry each parent
             # packet's delivery tick to its merged position.
-            par = [p for p in node.parents if len(outs[p])]
+            par = [p for p in plist if len(outs[p])]
             if not par:
                 in_ticks = np.zeros(0, dtype=np.int64)
             elif len(par) == 1:
@@ -492,7 +528,8 @@ class GraphTimer:
             pmask = self._arr_group == node.group
             res = simulate_link(
                 self._arr_sizes[pmask], self._arr_ready[pmask],
-                self._net.link_for("ingress"), rng=self._rng,
+                self._link("ingress", f"ingress:{node.name}"),
+                rng=self._rng,
                 name=f"ingress:{node.name}",
             )
             self._record(res)
@@ -520,7 +557,8 @@ class GraphTimer:
         if i < len(self._graph.nodes) - 1:
             res = simulate_link(
                 self._packet_sizes(out), ready_out,
-                self._net.link_for("fabric"), rng=self._rng,
+                self._link("fabric", f"uplink:{node.name}"),
+                rng=self._rng,
                 name=f"uplink:{node.name}",
             )
             self._record(res)
@@ -540,7 +578,7 @@ class GraphTimer:
             else np.zeros(0, dtype=np.int64)
         )
         res = simulate_link(
-            sizes, ready, self._net.link_for("egress"), rng=self._rng,
+            sizes, ready, self._link("egress", "egress"), rng=self._rng,
             name="egress",
         )
         order, ticks = res.order, res.ticks

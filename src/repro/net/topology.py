@@ -46,10 +46,11 @@ import numpy as np
 from repro.obs.trace import NULL_TRACER
 
 from .control import ControlPlane  # noqa: F401  (re-export: pre-PR-2 home)
-from .engine import HopSpec, HopStats, run_hop
+from .engine import HopSpec, HopStats, passthrough_hop, run_hop
 from .packet import DEFAULT_PAYLOAD, Packet
 from .wire import (
     WireBatch,
+    empty_batch,
     merge_round_robin_batches,
     split_by_flow,
 )
@@ -193,6 +194,7 @@ def run_graph(
     metrics=None,
     int_telemetry: bool = False,
     network=None,
+    faults=None,
 ):
     """Execute a fabric over an arrival batch.
 
@@ -213,7 +215,33 @@ def run_graph(
     and the egress link delivers the raw wire — duplicates and late
     retransmits included — so the return becomes a three-tuple
     ``(delivered, stats, NetworkReport)``.
+
+    ``faults`` (a :class:`~repro.net.faults.EpochFaults`) drives the
+    fail-open recovery state machine: a ``"dead"`` ingress hop's flows are
+    ECMP-rehashed onto the alive ingress hops, a dead interior hop is
+    skipped (its parents hoist to its consumer), a ``"degraded"`` hop
+    forwards pass-through (:func:`~repro.net.engine.passthrough_hop` —
+    unsorted but lossless), and flapped links run with the fault's
+    loss/latency added.  Every hop only permutes keys *within* segments,
+    so any such reroute preserves the delivered multisets and the final
+    sorted output byte for byte; only the run structure (and therefore
+    server merge work) changes.  Killing the egress hop — the one node
+    with no sibling to reroute to — raises.
     """
+    if faults is not None and not faults.any_dataplane:
+        faults = None
+    tr = tracer or NULL_TRACER
+    if engine == "device" and faults is not None:
+        # Fail-open off the compiled path: the device program bakes the
+        # whole healthy graph into one jitted epoch and has no health
+        # states, so a faulted epoch falls back to the byte-identical
+        # fused host engine (documented degradation: speed, not bytes).
+        engine = "fused"
+        tr.instant(
+            "fault:device_fallback", cat="fault", epoch=faults.epoch
+        )
+        if metrics is not None:
+            metrics.counter("fault_device_fallbacks").inc()
     if engine == "device":
         # Compiled-epoch fast path: the whole graph lowers to one jitted
         # device program (same return contract, byte-identical output; the
@@ -225,27 +253,137 @@ def run_graph(
             tracer=tracer, metrics=metrics,
             int_telemetry=int_telemetry, network=network,
         )
-    tr = tracer or NULL_TRACER
+    states = (
+        [faults.hop_state(node.name) for node in graph.nodes]
+        if faults is not None
+        else ["healthy"] * len(graph.nodes)
+    )
+    if states[-1] == "dead":
+        raise ValueError(
+            f"fault plan kills the egress hop "
+            f"{graph.nodes[-1].name!r}; the delivered stream has no "
+            f"sibling to reroute to — a key-destroying plan"
+        )
+    eff_parents: list[tuple[int, ...]] | None = None
+    if faults is not None:
+        for i, node in enumerate(graph.nodes):
+            if states[i] != "healthy":
+                tr.instant(
+                    f"fault:{node.name}", cat="fault",
+                    state=states[i], epoch=faults.epoch,
+                )
+                if metrics is not None:
+                    metrics.counter(
+                        "fault_hops_dead"
+                        if states[i] == "dead"
+                        else "fault_hops_degraded",
+                        node.name,
+                    ).inc()
+        # Reroute around dead interior hops: each consumer's effective
+        # parent list hoists a dead parent's own (transitively alive)
+        # parents into its place, preserving the round-robin turn order.
+        eff_parents = []
+        for i, node in enumerate(graph.nodes):
+            eff: list[int] = []
+            for p in node.parents:
+                if states[p] == "dead":
+                    eff.extend(eff_parents[p])
+                    tr.instant(
+                        f"reroute:{graph.nodes[p].name}->{node.name}",
+                        cat="fault", epoch=faults.epoch,
+                    )
+                    if metrics is not None:
+                        metrics.counter(
+                            "fault_reroutes", graph.nodes[p].name
+                        ).inc()
+                else:
+                    eff.append(p)
+            eff_parents.append(tuple(eff))
+    # Ingress: a dead ingress hop's flows rehash onto the alive ingress
+    # groups (ECMP-style — flow identity picks the surviving path).
+    arr_group = None
+    dead_groups = [
+        node.group
+        for i, node in enumerate(graph.nodes)
+        if not node.parents and states[i] == "dead"
+    ]
+    if dead_groups:
+        alive_groups = np.array(
+            sorted(
+                node.group
+                for i, node in enumerate(graph.nodes)
+                if not node.parents and states[i] != "dead"
+            ),
+            dtype=np.int64,
+        )
+        if not alive_groups.size:
+            raise ValueError(
+                "fault plan kills every ingress hop; the arrival flows "
+                "have nowhere to enter the fabric — a key-destroying plan"
+            )
+        grp = batch.flow_id % graph.num_groups
+        dead_mask = np.isin(grp, np.array(dead_groups, dtype=np.int64))
+        grp = np.where(
+            dead_mask, alive_groups[batch.flow_id % alive_groups.size], grp
+        )
+        ingress = [batch.take(grp == g) for g in range(graph.num_groups)]
+        arr_group = grp
+        tr.instant(
+            "reroute:ingress", cat="fault",
+            dead=sorted(int(g) for g in dead_groups),
+            alive=[int(g) for g in alive_groups],
+        )
+        if metrics is not None:
+            metrics.counter("fault_reroutes", "ingress").inc(
+                len(dead_groups)
+            )
+    else:
+        ingress = split_by_flow(batch, graph.num_groups)
     timer = None
     if network is not None:
         from .timing import GraphTimer
 
         timer = GraphTimer(
-            graph, batch, network, tracer=tracer, metrics=metrics
+            graph, batch, network, tracer=tracer, metrics=metrics,
+            link_override=(
+                faults.link_spec
+                if faults is not None and faults.link_faults
+                else None
+            ),
+            ingress_group=arr_group,
         )
-    ingress = split_by_flow(batch, graph.num_groups)
     outs: list[WireBatch] = []
     stats: list[HopStats] = []
     for i, node in enumerate(graph.nodes):
+        if states[i] == "dead":
+            # The hop is gone: its flows entered elsewhere (ingress
+            # rehash) or its parents hoisted to its consumer — it
+            # contributes nothing, and the timing overlay never visits it.
+            outs.append(empty_batch(batch.epoch))
+            stats.append(_dead_hop_stats(node.name, spec))
+            continue
+        parents = (
+            eff_parents[i] if eff_parents is not None else node.parents
+        )
         if node.parents:
-            inp = merge_round_robin_batches([outs[p] for p in node.parents])
+            inp = merge_round_robin_batches([outs[p] for p in parents])
         else:
             inp = ingress[node.group]
-        with tr.span(f"hop:{node.name}", cat="hop", keys=len(inp)) as hop_sp:
-            out, st = run_hop(
-                inp, spec, node.name, engine,
-                tracer=tracer, hop_id=i, int_telemetry=int_telemetry,
-            )
+        degraded = states[i] == "degraded"
+        with tr.span(
+            f"hop:{node.name}", cat="hop", keys=len(inp),
+            **({"degraded": True} if degraded else {}),
+        ) as hop_sp:
+            if degraded:
+                out, st = passthrough_hop(
+                    inp, spec, node.name,
+                    tracer=tracer, hop_id=i, int_telemetry=int_telemetry,
+                )
+            else:
+                out, st = run_hop(
+                    inp, spec, node.name, engine,
+                    tracer=tracer, hop_id=i, int_telemetry=int_telemetry,
+                )
             hop_sp.set(keys_out=len(out))
         if metrics is not None:
             metrics.counter("hop_keys_in", node.name).inc(len(inp))
@@ -279,13 +417,31 @@ def run_graph(
         if timer is not None:
             # Flow re-stamping does not move packet boundaries, so the
             # timing overlay sees the same packets the next hop will.
-            timer.after_hop(i, node, inp, out, st, outs)
+            # Under faults the tick interleave must follow the *effective*
+            # parents (the rerouted dataflow), not the declared wiring.
+            timer.after_hop(
+                i, node, inp, out, st, outs,
+                parents=parents if node.parents else None,
+            )
         outs.append(out)
         stats.append(st)
     if timer is not None:
         delivered, report = timer.egress_deliver(outs[-1])
         return delivered, stats, report
     return outs[-1], stats
+
+
+def _dead_hop_stats(name: str, spec: HopSpec) -> HopStats:
+    """Zero stats for a crashed hop — it saw nothing, it emitted nothing."""
+    stats = HopStats._from_grouped(
+        name,
+        np.zeros(0, dtype=np.int64),
+        np.zeros(spec.num_segments, dtype=np.int64),
+        spec.segment_length,
+    )
+    return dataclasses.replace(
+        stats, ship_emission=np.zeros(0, dtype=np.int64)
+    )
 
 
 def _emitted_run_lengths(out: WireBatch) -> np.ndarray:
@@ -391,11 +547,12 @@ class _TopoBase:
         metrics=None,
         int_telemetry: bool = False,
         network=None,
+        faults=None,
     ):
         return run_graph(
             self.graph(), batch, self._spec(), self._engine(),
             tracer=tracer, metrics=metrics, int_telemetry=int_telemetry,
-            network=network,
+            network=network, faults=faults,
         )
 
     def run(self, packets: list[Packet]) -> tuple[list[Packet], list[HopStats]]:

@@ -288,3 +288,299 @@ def test_jitter_straddling_two_ingest_calls_matches_one_shot():
     np.testing.assert_array_equal(out, ref_out)
     assert passes == ref_passes
     np.testing.assert_array_equal(out, np.sort(vals))
+
+
+# ---------------------------------------------------------------------------
+# Fail-open fault plans (ISSUE 10): every survivable fault is byte-identical
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypstub import given, settings, st
+
+from repro.data import SCENARIOS, scenario_max_value
+from repro.net import (
+    Fault,
+    FaultPlan,
+    leaf_spine_graph,
+    parse_fault_plan,
+    plain_stream_sort,
+    single_graph,
+    tree_graph,
+)
+
+TOPO_CASES = [
+    ("single", {}, single_graph),
+    ("leaf_spine", {"num_leaves": 3}, lambda: leaf_spine_graph(3)),
+    ("tree", {"branching": 2, "height": 2}, lambda: tree_graph(2, 2)),
+]
+
+
+def _pipeline_kw(topo, topo_kw, maxv, **over):
+    kw = dict(
+        topology=topo,
+        num_segments=SEGS,
+        segment_length=LENGTH,
+        max_value=maxv,
+        num_flows=4,
+        payload_size=32,
+    )
+    kw.update(topo_kw)
+    kw.update(over)
+    return kw
+
+
+def _random_survivable_plan(rng, graph, num_servers):
+    """A random fault plan that never destroys keys: the egress hop stays
+    alive, at least one ingress group stays alive, and at least one egress
+    server survives every scheduled shard crash."""
+    names = [n.name for n in graph.nodes]
+    egress = names[-1]
+    ingress = [n.name for n in graph.nodes if not n.parents]
+    faults = []
+    killed_ingress = set()
+    for name in names:
+        if name == egress:
+            if rng.random() < 0.3:
+                faults.append(Fault("hop_degrade", name, epoch=0))
+            continue
+        roll = rng.random()
+        if roll < 0.3:
+            if name in ingress and len(killed_ingress) + 1 >= len(ingress):
+                continue  # must keep one ingress alive
+            if name in ingress:
+                killed_ingress.add(name)
+            faults.append(Fault("hop_crash", name, epoch=0))
+        elif roll < 0.55:
+            faults.append(Fault("hop_degrade", name, epoch=0))
+    if rng.random() < 0.3:
+        faults.append(
+            Fault(
+                "link_flap",
+                rng.choice(["ingress", "fabric", "egress"]),
+                epoch=0,
+                loss_rate=float(rng.uniform(0, 0.2)),
+                extra_latency=int(rng.integers(0, 8)),
+            )
+        )
+    if num_servers > 1:
+        n_crash = int(rng.integers(0, num_servers))  # leaves >= 1 alive
+        victims = rng.choice(num_servers, size=n_crash, replace=False)
+        for s in victims:
+            faults.append(
+                Fault(
+                    "server_crash",
+                    str(int(s)),
+                    at_fraction=float(rng.uniform(0.1, 0.9)),
+                )
+            )
+    if rng.random() < 0.25:
+        faults.append(Fault("range_corrupt", epoch=0))
+    return FaultPlan(tuple(faults), seed=int(rng.integers(0, 2**31)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    scenario=st.sampled_from(sorted(SCENARIOS)),
+    case=st.integers(min_value=0, max_value=len(TOPO_CASES) - 1),
+    engine=st.sampled_from(("fused", "segment", "faithful", "device")),
+    num_servers=st.sampled_from((1, 2, 4)),
+    plan_seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_any_survivable_plan_is_byte_identical(
+    scenario, case, engine, num_servers, plan_seed
+):
+    """The fail-open contract, property-tested: for ANY survivable fault
+    plan (random kills/degrades/flaps/shard-crashes/range-corruption) the
+    delivered sorted stream is byte-identical to the fault-free run, across
+    scenario x topology x engine x pool size."""
+    topo, topo_kw, graph_fn = TOPO_CASES[case]
+    rng = np.random.default_rng(plan_seed)
+    plan = _random_survivable_plan(rng, graph_fn(), num_servers)
+    vals = SCENARIOS[scenario](2000, seed=plan_seed % 7)
+    maxv = scenario_max_value(scenario)
+    kw = _pipeline_kw(topo, topo_kw, maxv, engine=engine,
+                      num_servers=num_servers)
+    ref = run_pipeline(vals, **kw)
+    res = run_pipeline(vals, **kw, fault_plan=plan)
+    np.testing.assert_array_equal(res.output, ref.output)
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+
+
+def test_dead_interior_hop_rerouted():
+    """Killing an interior aggregation switch reroutes its children's
+    feeds to the surviving consumer: output byte-identical, and the dead
+    hop processed nothing."""
+    vals = TRACES["random"](3000, seed=3)
+    kw = _pipeline_kw(
+        "tree", {"branching": 2, "height": 3}, trace_max_value("random")
+    )
+    ref = run_pipeline(vals, **kw)
+    res = run_pipeline(vals, **kw, fault_plan="crash:l1n0@0")
+    np.testing.assert_array_equal(res.output, ref.output)
+    assert res.fault_hops_dead == 1
+    dead = [st_ for st_ in res.hop_stats if st_.name == "l1n0"]
+    assert len(dead) == 1 and dead[0].arrivals == 0
+    # the root absorbed every key the dead level-1 switch would have seen
+    root = [st_ for st_ in res.hop_stats if st_.name == "l2n0"][0]
+    assert root.arrivals == vals.size
+
+
+def test_dead_ingress_leaf_rehashes_flows():
+    """Killing an ingress leaf rehashes its flows onto the alive leaves
+    (ECMP-style): nothing is lost, output byte-identical."""
+    vals = TRACES["network"](3000, seed=5)
+    kw = _pipeline_kw(
+        "leaf_spine", {"num_leaves": 3}, trace_max_value("network")
+    )
+    ref = run_pipeline(vals, **kw)
+    res = run_pipeline(vals, **kw, fault_plan="crash:leaf0@0")
+    np.testing.assert_array_equal(res.output, ref.output)
+    assert res.fault_hops_dead == 1
+    alive_keys = sum(
+        st_.arrivals
+        for st_ in res.hop_stats
+        if st_.name in ("leaf1", "leaf2")
+    )
+    assert alive_keys == vals.size
+
+
+def test_all_hops_degraded_matches_plain_sort_baseline():
+    """``degrade:all`` turns every switch into a pass-through forwarder —
+    the paper's plain-sort baseline: the fabric contributes nothing, the
+    server does all the sorting, and the output is still byte-identical
+    (to the fault-free run AND to the switchless baseline)."""
+    vals = TRACES["random"](3000, seed=7)
+    kw = _pipeline_kw(
+        "tree", {"branching": 2, "height": 2}, trace_max_value("random")
+    )
+    ref = run_pipeline(vals, **kw)
+    res = run_pipeline(vals, **kw, fault_plan="degrade:all")
+    np.testing.assert_array_equal(res.output, ref.output)
+    plain_out, _, _ = plain_stream_sort(vals, payload_size=32)
+    np.testing.assert_array_equal(res.output, plain_out)
+    assert res.fault_hops_degraded == len(res.hop_stats)
+    # pass-through forwards arrival order: the egress wire carries shorter
+    # sorted runs than the sorting fabric produced, so the server works
+    # harder — the cost of degraded mode is merge effort, never bytes.
+    ref_run = max(st_.mean_run_len for st_ in ref.hop_stats)
+    deg_run = max(st_.mean_run_len for st_ in res.hop_stats)
+    assert deg_run <= ref_run
+
+
+def test_mid_stream_shard_failover_is_byte_identical():
+    """A shard crash at 50% of the delivered packets fails over to the
+    nearest alive neighbor, which replays the dead shard's history: the
+    pool's final merge is byte-identical to the fault-free run."""
+    vals = TRACES["random"](3000, seed=11)
+    kw = _pipeline_kw("single", {}, trace_max_value("random"),
+                      num_servers=POOL)
+    ref = run_pipeline(vals, **kw)
+    res = run_pipeline(vals, **kw, fault_plan="server_crash:1@0.5")
+    np.testing.assert_array_equal(res.output, ref.output)
+    assert res.servers_failed_over == 1
+    assert res.server_keys[1] == 0  # the dead shard's load moved away
+    assert sum(res.server_keys) == vals.size  # nothing lost, nothing doubled
+
+
+def test_range_corruption_falls_back_to_static():
+    """A corrupted range table is caught by the validity check and replaced
+    with the static equal-width table: balance may degrade, bytes do not."""
+    vals = SCENARIOS["adversarial_skew"](3000, seed=13)
+    kw = _pipeline_kw(
+        "single", {}, scenario_max_value("adversarial_skew")
+    )
+    ref = run_pipeline(vals, **kw)
+    res = run_pipeline(vals, **kw, fault_plan="corrupt_ranges@0")
+    np.testing.assert_array_equal(res.output, ref.output)
+    assert res.range_fallbacks == 1
+
+
+def test_replay_bound_overflow_fails_loudly():
+    """A replay buffer too small for the dead shard's history must refuse
+    the failover with a diagnosis naming the capacity and the loss — a
+    silent partial replay would destroy keys."""
+    vals, delivered = _delivered(trace="random")
+    total = int(delivered.packet_starts().size)
+    pool = ServerPool(
+        SEGS, POOL,
+        crash_schedule=[(1, total + 1)],  # fires at finish()
+        replay_packets=1,
+    )
+    with pytest.raises(ValueError, match="replay buffer"):
+        pool.ingest_batch(delivered)
+        pool.finish()
+
+
+def test_unsurvivable_plans_raise_loudly():
+    """Key-destroying plans are refused, never silently degraded: killing
+    the egress hop, killing every ingress hop, scheduling a crash on a
+    single-server pool, and crashing every server all raise."""
+    vals = TRACES["random"](1000, seed=17)
+    maxv = trace_max_value("random")
+    with pytest.raises(ValueError, match="egress"):
+        run_pipeline(
+            vals,
+            **_pipeline_kw("leaf_spine", {"num_leaves": 2}, maxv),
+            fault_plan="crash:spine@0",
+        )
+    with pytest.raises(ValueError, match="ingress"):
+        run_pipeline(
+            vals,
+            **_pipeline_kw("leaf_spine", {"num_leaves": 2}, maxv),
+            fault_plan="crash:leaf0@0;crash:leaf1@0",
+        )
+    with pytest.raises(ValueError, match="single-server"):
+        ServerPool(SEGS, 1, crash_schedule=[(0, 10)])
+    with pytest.raises(ValueError, match="no alive server"):
+        run_pipeline(
+            vals,
+            **_pipeline_kw("single", {}, maxv, num_servers=2),
+            fault_plan="server_crash:0@0.2;server_crash:1@0.4",
+        )
+
+
+def test_fault_plan_round_trips_through_cli_form():
+    """parse_fault_plan(plan.describe()) == plan for every fault kind."""
+    spec = (
+        "crash:l1n0@1-3;degrade:all@0;flap:uplink:leaf0@2;"
+        "server_crash:1@0.25;corrupt_ranges@0"
+    )
+    plan = parse_fault_plan(spec, seed=5)
+    assert parse_fault_plan(plan.describe(), seed=5) == plan
+    assert len(plan.faults) == 5
+
+
+def test_incomplete_stream_diagnostics_name_shard_and_seq_ranges():
+    """Satellite: the pool's finish() failure names the owning shard, its
+    virtual segments, and the exact missing seq ranges — not just
+    'incomplete'."""
+    _, delivered = _delivered(trace="random")
+    starts, _ = _packet_view(delivered)
+    affinity = segment_affinity(SEGS, POOL)
+    victim_servers = affinity[delivered.segment_id[starts]]
+    # drop two consecutive mid-stream packets from one shard's stream
+    candidates = np.nonzero(
+        (delivered.seq[starts] > 0) & (victim_servers == 2)
+    )[0]
+    seg = int(delivered.segment_id[starts[candidates[0]]])
+    same_seg = candidates[
+        delivered.segment_id[starts[candidates]] == seg
+    ]
+    drop = same_seg[:2]
+    assert drop.size == 2
+    seqs = sorted(int(q) for q in delivered.seq[starts[drop]])
+    keep = np.delete(np.arange(starts.size), drop)
+    pool = ServerPool(SEGS, POOL)
+    pool.ingest_batch(_permute_packets(delivered, keep))
+    with pytest.raises(ValueError) as err:
+        pool.finish()
+    msg = str(err.value)
+    assert "server2" in msg and "virtual segments" in msg
+    assert "missing seqs" in msg and "incomplete" in msg
+    for q in seqs:
+        if all(q - 1 != p and q + 1 != p for p in seqs):
+            assert str(q) in msg  # isolated seqs listed singly
+    if seqs[1] == seqs[0] + 1:
+        assert f"{seqs[0]}-{seqs[1]}" in msg  # runs collapse to ranges

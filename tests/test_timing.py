@@ -170,6 +170,19 @@ def test_resequence_releases_in_order_and_skips_duplicates():
     np.testing.assert_array_equal(resequence(3, res), [7, 12, 12])
 
 
+def test_backoff_monotone_and_capped():
+    """The retransmit backoff schedule is non-decreasing in the attempt
+    number, starts at exactly one rto (attempt 0 keeps the old fixed-delay
+    behaviour for a single loss), and caps at 8·rto."""
+    for spec in (LinkSpec(rto=5), LinkSpec(latency=3), LinkSpec(rto=1)):
+        rto = spec.effective_rto
+        delays = [spec.backoff(a) for a in range(12)]
+        assert delays[0] == rto
+        assert all(b >= a for a, b in zip(delays, delays[1:]))
+        assert max(delays) == 8 * rto
+        assert all(d <= 8 * rto for d in delays)
+
+
 def test_link_spec_validation():
     with pytest.raises(ValueError, match="policy"):
         LinkSpec(policy="teleport")
