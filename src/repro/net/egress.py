@@ -291,23 +291,7 @@ class ServerPool:
                 # renumbering changes at failover) for replay, up to the
                 # bounded buffer; anything beyond the bound is lost and
                 # makes a later crash unrecoverable (checked loudly there).
-                if (
-                    self._replay_cap is not None
-                    and self._replay_len[s] + sel.size > self._replay_cap
-                ):
-                    room = max(self._replay_cap - self._replay_len[s], 0)
-                    self._replay_lost[s] += int(sel.size) - room
-                    if room:
-                        keep_sel = sel[:room]
-                        self._replay[s].append(
-                            batch.take(
-                                ragged_gather(starts[keep_sel], sizes[keep_sel])
-                            )
-                        )
-                        self._replay_len[s] += room
-                else:
-                    self._replay[s].append(sub)
-                    self._replay_len[s] += int(sel.size)
+                self._retain_replay(s, sub)
             sub = WireBatch(
                 sub.values,
                 sub.flow_id,
@@ -321,6 +305,27 @@ class ServerPool:
             ) as t:
                 self.servers[s].ingest_batch(sub)
             self.per_server_seconds[s] += t.seconds
+
+    def _retain_replay(self, s: int, sub: WireBatch) -> None:
+        """Append ``sub`` (packet-contiguous, virtual segment ids) to shard
+        ``s``'s bounded replay buffer.  Packets beyond the cap are counted
+        as lost — that shard's crash then refuses the failover loudly
+        rather than rebuilding a partial (key-destroying) history."""
+        starts = sub.packet_starts()
+        n = int(starts.size)
+        if self._replay_cap is not None:
+            room = max(self._replay_cap - self._replay_len[s], 0)
+            if n > room:
+                self._replay_lost[s] += n - room
+                if not room:
+                    return
+                sizes = np.diff(np.concatenate([starts, [len(sub)]]))
+                sub = sub.take(
+                    ragged_gather(starts[:room], sizes[:room])
+                )
+                n = room
+        self._replay[s].append(sub)
+        self._replay_len[s] += n
 
     def _crash(self, s: int) -> None:
         """Kill shard ``s``; the nearest alive neighbor adopts its segment
@@ -377,7 +382,14 @@ class ServerPool:
         history = self._replay.pop(s, [])
         self._replay_len.pop(s, None)
         self._crash_at.pop(s, None)
+        # Cascade hazard: if the adopter is itself scheduled to crash, the
+        # victim's replayed history becomes part of the adopter's own state
+        # — retain it in the adopter's replay buffer (toward its cap) so a
+        # second failover can rebuild the first victim's segments too.
+        adopter_doomed = t in self._crash_at
         for sub in history:
+            if adopter_doomed:
+                self._retain_replay(t, sub)
             sub = WireBatch(
                 sub.values,
                 sub.flow_id,

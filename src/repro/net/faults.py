@@ -46,7 +46,8 @@ CLI string form (``parse_fault_plan``), entries separated by ``;``::
     degrade:spine@0        # pass-through from epoch 0 (permanent)
     degrade:all            # every hop degraded (the plain-sort baseline)
     crash:l1n0@1-3         # dead for epochs [1, 3) — crash-restart
-    flap:uplink:leaf0@0    # lossy+slow link for the epoch
+    flap:uplink:leaf0@0    # lossy+slow link from epoch 0 (permanent)
+    flap:uplink:leaf0@0-1  # ... for epoch 0 only (single-epoch flap)
     server_crash:1@0.5     # shard 1 dies at 50% of delivered packets
     corrupt_ranges@0       # epoch 0's range table is garbage
 """

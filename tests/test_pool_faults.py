@@ -484,6 +484,49 @@ def test_mid_stream_shard_failover_is_byte_identical():
     assert sum(res.server_keys) == vals.size  # nothing lost, nothing doubled
 
 
+def test_cascading_shard_failover_is_byte_identical():
+    """Two scheduled crashes where the second victim is the first victim's
+    adopter (server0 → server1 → server2): the history server1 re-ingested
+    at the first failover must ride its own replay buffer, or the second
+    failover cannot rebuild server0's segments.  Regression: the replayed
+    history used to bypass the adopter's replay buffer, so this plan
+    failed finish() with a bogus 'stream incomplete' loss diagnostic."""
+    vals = TRACES["random"](3000, seed=19)
+    kw = _pipeline_kw("single", {}, trace_max_value("random"),
+                      num_servers=POOL)
+    ref = run_pipeline(vals, **kw)
+    res = run_pipeline(
+        vals, **kw, fault_plan="server_crash:0@0.2;server_crash:1@0.6"
+    )
+    np.testing.assert_array_equal(res.output, ref.output)
+    np.testing.assert_array_equal(res.output, np.sort(vals))
+    assert res.servers_failed_over == 2
+    assert res.server_keys[0] == 0 and res.server_keys[1] == 0
+    assert sum(res.server_keys) == vals.size
+
+
+def test_pool_level_cascade_replays_transferred_history():
+    """The same cascade driven straight at the pool with a packet-granular
+    crash schedule: server2 adopts server1's state *including* the
+    server0 history that server1 adopted mid-stream."""
+    vals, delivered = _delivered(trace="random")
+    total = int(delivered.packet_starts().size)
+    ref = ServerPool(SEGS, POOL)
+    ref.ingest_batch(delivered)
+    ref_out, _ = ref.finish()
+    pool = ServerPool(
+        SEGS, POOL,
+        crash_schedule=[(0, total // 5), (1, (3 * total) // 5)],
+    )
+    pool.ingest_batch(delivered)
+    out, _ = pool.finish()
+    np.testing.assert_array_equal(out, ref_out)
+    np.testing.assert_array_equal(out, np.sort(vals))
+    assert pool.servers_failed_over == 2
+    assert pool.server_keys[0] == 0 and pool.server_keys[1] == 0
+    assert sum(pool.server_keys) == vals.size
+
+
 def test_range_corruption_falls_back_to_static():
     """A corrupted range table is caught by the validity check and replaced
     with the static equal-width table: balance may degrade, bytes do not."""
